@@ -1,0 +1,85 @@
+"""§Perf report: assemble the hillclimb log from results/perf/ and compute
+the TPU-projection for narrow-wire knobs.
+
+CPU-backend caveat measured in the loop: XLA:CPU's float-normalization
+promotes bf16 dot outputs (and all-reduces) to f32 *before* SPMD
+partitioning, so `narrow_partials` (bf16 tensor-parallel partial-sum
+all-reduces) cannot change the CPU-compiled HLO byte counts — on TPU the
+dot emits bf16 and the AR wire format follows.  `tpu_projection` measures
+the fraction of all-reduce bytes attributable to dot partial-sums that the
+model immediately converts to bf16, and halves exactly that fraction.
+"""
+from __future__ import annotations
+
+import json
+import re
+
+
+def classify_ar_bytes(hlo_text: str) -> dict:
+    """Split all-reduce bytes into dot-partials (narrowable) vs other."""
+    out = {"dot_f32": 0, "other": 0}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*f32\[([0-9,]+)\][^ ]*\s+all-reduce\(", line)
+        if not m:
+            continue
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        nbytes = 4 * n
+        op = re.search(r'op_name="([^"]*)"', line)
+        name = op.group(1) if op else ""
+        if "dot_general" in name and "transpose" not in name.split("/")[-2:][0]:
+            out["dot_f32"] += nbytes
+        elif "dot_general" in name:
+            out["dot_f32"] += nbytes      # bwd dots are narrowable too
+        else:
+            out["other"] += nbytes
+    return out
+
+
+def tpu_projection(arch: str, shape: str, sets: list) -> dict:
+    """Measure the dot-AR fraction on R1/R2 variants and project the
+    narrow_partials halving (TPU wire format)."""
+    from repro.launch.dryrun import (SHAPES, _apply_sets, _variant,
+                                     lower_and_compile)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import get_config
+    from repro.core import ops as tpops
+    tpops.set_mixed_dot(True)
+    cfg = _apply_sets(get_config(arch), sets)
+    mesh = make_production_mesh()
+    sh = SHAPES[shape]
+    out = {}
+    for groups in (1, 2):
+        v = _variant(cfg, groups,
+                     full_seq=sh["seq"] if sh["kind"] != "decode" else None)
+        _, co, _ = lower_and_compile(v, shape, mesh, "tp_bf16")
+        out[groups] = classify_ar_bytes(co.as_text())
+    reps = cfg.repeats
+    proj = {}
+    for k in ("dot_f32", "other"):
+        proj[k] = out[1][k] + (reps - 1) * max(out[2][k] - out[1][k], 0)
+    total = proj["dot_f32"] + proj["other"]
+    narrowed = proj["dot_f32"] / 2 + proj["other"]
+    return {"ar_bytes_total": total, "ar_bytes_dot": proj["dot_f32"],
+            "ar_bytes_tpu_narrow": narrowed,
+            "reduction": 1 - narrowed / total if total else 0.0}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internvl2-26b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--set", action="append", dest="sets",
+                    default=["remat_policy=dots"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    r = tpu_projection(args.arch, args.shape, args.sets)
+    print(json.dumps(r, indent=1))
+    if args.json:
+        json.dump(r, open(args.json, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Reads results/costs_*.json (scan-corrected per-device cost terms on the
+single-pod 16x16 mesh) and results/dryrun_*.json (memory analysis), and
+derives the three roofline terms per (arch x shape):
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          [per device]
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_bytes_moved / link_bw
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (core/hw.py).  Collective bytes-moved applies ring-model
+factors to the parsed per-op output sizes:
+  all-gather: (g-1)/g * out   all-reduce: 2 (g-1)/g * out
+  reduce-scatter: (g-1) * out all-to-all: (g-1)/g * out   permute: out
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (prefill, + one forward) /
+2*N*B (decode, per step) with N = per-use active params ("flops" count),
+plus the attention term where quadratic.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.core import hw
+from repro.models.registry import get_config
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+N_DEV = 256
+
+_RING = {
+    "all-gather": lambda b, g: b * (g - 1) / g,
+    "all-reduce": lambda b, g: 2 * b * (g - 1) / g,
+    "reduce-scatter": lambda b, g: b * (g - 1),
+    "all-to-all": lambda b, g: b * (g - 1) / g,
+    "collective-permute": lambda b, g: b,
+}
+
+
+def coll_bytes_moved(coll: dict) -> float:
+    total = 0.0
+    for key, rec in coll.items():
+        op, g = key.split("@")
+        total += _RING[op](rec["bytes"], max(int(g), 2))
+    return total
+
+
+def model_flops_global(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n = cfg.param_counts()["flops"]
+    seq, batch = sh["seq"], sh["batch"]
+    # attention term: 4*B*S*ctx*H*Dh per attn layer (QK^T + PV, fwd)
+    attn = 0.0
+    for spec in cfg.layer_list():
+        if spec.mixer in ("gqa", "shared_attn", "mla"):
+            dh = (cfg.nope_dim + cfg.rope_dim + cfg.v_head_dim) / 2 \
+                if spec.mixer == "mla" else cfg.head_dim
+            if sh["kind"] == "decode":
+                ctx = seq if spec.window is None else min(spec.window, seq)
+                attn += 4 * batch * ctx * cfg.n_heads * dh
+            else:
+                ctx = seq / 2 if spec.window is None else \
+                    min(spec.window, seq / 2)
+                attn += 4 * batch * seq * ctx * cfg.n_heads * dh
+    if sh["kind"] == "train":
+        return 6 * n * batch * seq + 3 * attn
+    if sh["kind"] == "prefill":
+        return 2 * n * batch * seq + attn
+    return 2 * n * batch + attn        # decode: one token per row
+
+
+def analyze(results_dir: str = "results") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "costs_*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        flops, byts = rec["flops"], rec["bytes"]
+        cb = coll_bytes_moved(rec.get("coll", {}))
+        t_c = flops / hw.PEAK_FLOPS_BF16
+        t_m = byts / hw.HBM_BW
+        t_x = cb / hw.ICI_BW_PER_LINK
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+        mf = model_flops_global(arch, shape) / N_DEV
+        # memory-analysis record (single-pod) for HBM fit
+        dr = os.path.join(results_dir, f"dryrun_{arch}_{shape}_pod1.json")
+        peak = None
+        if os.path.exists(dr):
+            d = json.load(open(dr))
+            if d.get("ok"):
+                peak = d["memory"]["peak_bytes"]
+        rows.append(dict(
+            arch=arch, shape=shape, t_compute=t_c, t_memory=t_m,
+            t_collective=t_x, dominant=dom[1],
+            step_time_bound=max(t_c, t_m, t_x),
+            roofline_fraction=dom[0] and t_c / max(t_c, t_m, t_x),
+            model_flops=mf, hlo_flops=flops, useful=mf / flops if flops
+            else 0.0, peak_bytes=peak, method=rec.get("method", "")))
+    return rows
+
+
+def advice(row) -> str:
+    if row["dominant"] == "compute":
+        if row["useful"] < 0.5:
+            return ("compute-bound but <50% useful: cut remat recompute / "
+                    "CE+attention overhead (fused kernels)")
+        return "compute-bound near roofline: narrower formats (fp8 MXU) next"
+    if row["dominant"] == "memory":
+        return ("memory-bound: narrower storage formats (fp8 KV/params), "
+                "fuse quantize into matmul epilogue")
+    return ("collective-bound: narrower wire formats (fp8 grad/activation "
+            "collectives), overlap with compute, shrink group size")
+
+
+def render(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | roofline frac | MODEL/HLO flops |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful']:.2f} |")
+    return "\n".join(out)
+
+
+def step_energy_row(row) -> dict:
+    """Cluster-scale energy per step (paper's energy-proportionality
+    thesis at datacenter scale): measured per-device HLO terms x the
+    calibrated per-format energy model, x 256 chips."""
+    from repro.core import energy
+    # matmul flops run in the policy's src format (bf16 baseline)
+    e = energy.step_energy_joules(
+        {"fp16alt": row["hlo_flops"]},
+        hbm_bytes=row["t_memory"] * hw.HBM_BW,
+        ici_bytes=row["t_collective"] * hw.ICI_BW_PER_LINK) * N_DEV
+    e_fp32 = energy.step_energy_joules(
+        {"fp32": row["hlo_flops"]},
+        hbm_bytes=row["t_memory"] * hw.HBM_BW * 2,
+        ici_bytes=row["t_collective"] * hw.ICI_BW_PER_LINK * 2) * N_DEV
+    return {"joules": e, "joules_fp32_equiv": e_fp32,
+            "saving": 1 - e / e_fp32}
+
+
+def main(results_dir: str = "results"):
+    rows = analyze(results_dir)
+    if not rows:
+        print(f"(no cost records in {results_dir}/ — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return []
+    print("\n=== Roofline (per device, single-pod 16x16, tp_bf16) ===")
+    print(render(rows))
+    print("\nbottleneck advice:")
+    for r in sorted(rows, key=lambda r: r["roofline_fraction"])[:10]:
+        print(f"  {r['arch']}/{r['shape']}: {advice(r)}")
+    print("\n=== Modeled step energy, 256 chips (paper thesis at scale) ===")
+    print(f"{'cell':40s} {'tp_bf16 J':>10s} {'fp32-equiv J':>13s} {'saving':>7s}")
+    for r in rows:
+        if r["shape"] != "train_4k":
+            continue
+        e = step_energy_row(r)
+        print(f"{r['arch']+'/'+r['shape']:40s} {e['joules']:10.1f} "
+              f"{e['joules_fp32_equiv']:13.1f} {e['saving']:7.0%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

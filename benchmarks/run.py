@@ -1,0 +1,41 @@
+"""Benchmark driver: one benchmark per paper table/figure + the roofline
+report.  ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (fig7_instruction_energy, fig8_dvfs, roofline,
+                   table3_case_study, table4_fma)
+    benches = [
+        ("table3_case_study (paper Table III, Fig 10/11)",
+         table3_case_study.main),
+        ("table4_fma (paper Table IV)", table4_fma.main),
+        ("fig7_instruction_energy (paper Fig 7)",
+         fig7_instruction_energy.main),
+        ("fig8_dvfs (paper Fig 8)", fig8_dvfs.main),
+        ("roofline (EXPERIMENTS.md §Roofline)", roofline.main),
+    ]
+    failures = []
+    for name, fn in benches:
+        t0 = time.time()
+        print(f"\n{'='*72}\nBENCH {name}\n{'='*72}")
+        try:
+            fn()
+            print(f"[{name}] OK ({time.time()-t0:.1f}s)")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAILED")
+    print(f"\n{'='*72}")
+    print(f"benchmarks: {len(benches) - len(failures)}/{len(benches)} OK")
+    if failures:
+        print("failed:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Pytest path setup: make `repro` (src layout) and `benchmarks` importable
+regardless of how pytest is invoked.  NOTE: deliberately does NOT set
+XLA_FLAGS — tests must see the real single CPU device; only the dry-run
+spawns 512 placeholder devices (in its own process)."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)

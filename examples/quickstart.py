@@ -1,0 +1,72 @@
+"""Quickstart: the transprecision numerics layer in five minutes.
+
+Shows the paper's primitives as JAX ops: arbitrary-format quantization with
+all rounding modes, the expanding FMA (multiply narrow, accumulate wide,
+one rounding), policy-driven matmuls, cast-and-pack, and the per-format
+energy model — then one transprecision layer forward.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, softfloat
+from repro.core.formats import get_format
+from repro.core.ops import cast_and_pack, tp_einsum, tp_fma
+from repro.core.policy import PRESETS
+
+
+def main():
+    # 1. arbitrary IEEE-style formats -------------------------------------
+    x = jnp.linspace(-3, 3, 8)
+    for fmt in ("fp16", "fp16alt", "fp8", (4, 3)):
+        q = softfloat.quantize(x, fmt)
+        f = get_format(fmt)
+        print(f"{str(f):16s} width {f.width:2d}  q(x) = "
+              f"{np.asarray(q).round(4)}")
+
+    # rounding modes bracket the value
+    v = jnp.float32(1.2345)
+    for mode in ("rne", "rtz", "rdn", "rup", "stochastic"):
+        q = softfloat.quantize(v, "fp8", mode,
+                               key=jax.random.key(0) if mode == "stochastic"
+                               else None)
+        print(f"  fp8[{mode:10s}] {float(v):.6f} -> {float(q):.6f}")
+
+    # 2. the expanding FMA (paper §II.B.4): fp16 multiply, fp32 accumulate
+    pol = PRESETS["em_fp16"]
+    a, b, c = jnp.float32(1.0009765625), jnp.float32(1.0009765625), \
+        jnp.float32(100.0)
+    print(f"\nexpanding FMA fmacex.s.h: {float(tp_fma(a, b, c, pol)):.10f}"
+          f"  (fp16 accumulate would lose the product tail)")
+
+    # 3. policy-driven matmul: same code, different formats per op group
+    k1, k2 = jax.random.split(jax.random.key(0))
+    A = jax.random.normal(k1, (64, 128))
+    B = jax.random.normal(k2, (128, 32))
+    exact = A @ B
+    for name in ("fp32", "tp_bf16", "tp_fp8", "em_fp8"):
+        r = tp_einsum("ij,jk->ik", A, B, PRESETS[name])
+        err = float(jnp.max(jnp.abs(r.astype(jnp.float32) - exact)))
+        print(f"policy {name:8s} mode {PRESETS[name].mode:7s} "
+              f"src {PRESETS[name].matmul.src_fmt.name:8s} max|err| {err:.4f}")
+
+    # 4. cast-and-pack (paper §III.A.2c)
+    s1 = jnp.arange(4, dtype=jnp.float32)[None]
+    s2 = -s1
+    packed = cast_and_pack(s1, s2, "fp8", PRESETS["em_fp8"])
+    print(f"\ncast-and-pack fp8: {np.asarray(packed)[0]}")
+
+    # 5. the energy model (paper Table IV): why narrow formats pay
+    print("\nFMA energy/efficiency (paper's silicon, 0.8V):")
+    for fmt in ("fp64", "fp32", "fp16alt", "fp8"):
+        print(f"  {fmt:8s} scalar {energy.fma_energy_pj(fmt):6.2f} pJ   "
+              f"{energy.fma_efficiency_gflops_w(fmt):8.1f} Gflop/sW")
+    print(f"  fp8 SIMD  {energy.fma_energy_pj('fp8', True):6.2f} pJ   "
+          f"{energy.fma_efficiency_gflops_w('fp8', True):8.1f} Gflop/sW "
+          f"(16.6x fp64)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train the ~110M-parameter case-study LM for a few
+hundred steps under three precision policies and reproduce the paper's
+Table-III claim at training scale: the expanding-FMA policy (narrow
+multiply, fp32 accumulate) tracks the fp32 baseline's loss while the
+energy model predicts a large energy saving.
+
+Run:  PYTHONPATH=src python examples/transprecision_training.py \
+          [--steps 300] [--policy tp_bf16] [--compare]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import energy
+from repro.core.policy import PRESETS
+from repro.data.pipeline import DataConfig
+from repro.models.registry import build_model
+from repro.optim.optimizer import OptConfig
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+def train_one(policy: str, steps: int, ckpt_dir=None, reduced=True):
+    model = build_model("fpnew-case-study", policy=policy, reduced=reduced)
+    cfg = model.cfg
+    opt = OptConfig(lr=3e-3, warmup_steps=20, total_steps=steps,
+                    weight_decay=0.0)
+    data = DataConfig(vocab=cfg.vocab, seq_len=256, global_batch=16,
+                      noise=0.02)
+    lc = LoopConfig(total_steps=steps, log_every=max(steps // 10, 1),
+                    ckpt_every=0, ckpt_dir=ckpt_dir)
+    loop = TrainLoop(model, opt, data, lc)
+    t0 = time.time()
+    log = loop.run()
+    wall = time.time() - t0
+    losses = [m["loss"] for m in log]
+    n = cfg.param_counts()["flops"]
+    tokens = steps * data.global_batch * data.seq_len
+    flops = 6 * n * tokens
+    src = PRESETS[policy].matmul.src_fmt.name
+    pj = energy.TPU_PJ_PER_FLOP.get(src, energy.TPU_PJ_PER_FLOP["fp32"])
+    joules = flops * pj * 1e-12
+    return dict(policy=policy, first=float(np.mean(losses[:10])),
+                last=float(np.mean(losses[-10:])), wall_s=wall,
+                train_flops=flops, model_joules=joules)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--policy", default="tp_bf16")
+    ap.add_argument("--compare", action="store_true",
+                    help="run fp32 / tp_bf16 / em_fp8 and compare")
+    ap.add_argument("--full", action="store_true",
+                    help="full 110M config (slow on CPU)")
+    args = ap.parse_args()
+
+    policies = (["fp32", "tp_bf16", "em_fp8"] if args.compare
+                else [args.policy])
+    results = [train_one(p, args.steps, reduced=not args.full)
+               for p in policies]
+
+    print("\n=== transprecision training (paper Table III, at LM scale) ===")
+    print(f"{'policy':10s} {'loss first':>11s} {'loss last':>10s} "
+          f"{'modelled energy':>16s}")
+    base = results[0]
+    for r in results:
+        print(f"{r['policy']:10s} {r['first']:11.3f} {r['last']:10.3f} "
+              f"{r['model_joules']:13.2f} J "
+              f"({r['model_joules']/base['model_joules']:.2f}x)")
+    if args.compare and len(results) >= 2:
+        # the paper's claim: narrow-multiply/wide-accumulate keeps accuracy
+        assert abs(results[1]["last"] - results[0]["last"]) < 0.35, results
+        print("claim: tp_bf16 (expanding FMA) matches fp32 loss  [OK]")
+
+
+if __name__ == "__main__":
+    main()

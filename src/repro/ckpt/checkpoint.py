@@ -1,0 +1,148 @@
+"""Atomic, async, mesh-elastic checkpointing.
+
+Production requirements covered:
+  * atomicity — write to a temp dir, fsync, then ``os.replace`` (a crashed
+    save can never corrupt the latest checkpoint),
+  * keep-N retention with monotonically increasing step dirs,
+  * async save — serialization happens on a background thread while
+    training continues; the next save (or close) joins it,
+  * mesh-elastic restore — leaves are stored host-side as numpy with their
+    tree paths; ``restore_pytree`` re-places them under ANY sharding pytree
+    (restore a 512-chip checkpoint onto 256 chips or a different mesh
+    shape), which is the fault-tolerance path after losing a pod slice.
+
+Storage is flattened-path .npz + a structure descriptor — no external
+checkpoint library, as the substrate must be self-contained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return paths, leaves, treedef
+
+
+def save_pytree(path: str, tree, extra: Optional[dict] = None):
+    """Synchronous atomic save of one pytree + json-able extras."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    paths, leaves, _ = _flatten(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    # bfloat16 & friends round-trip via raw bytes + dtype tag
+    arrays, dtypes = {}, {}
+    for i, a in enumerate(host):
+        name = f"leaf_{i}"
+        dtypes[name] = str(a.dtype)
+        arrays[name] = (a.view(np.uint8) if a.dtype.kind == "V"
+                        or str(a.dtype) not in np.sctypeDict else a)
+        if str(a.dtype) not in np.sctypeDict:  # ml_dtypes etc.
+            arrays[name] = a.view(np.uint16 if a.dtype.itemsize == 2
+                                  else np.uint8)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"paths": paths, "dtypes": dtypes, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str, like, shardings=None):
+    """Restore into the structure of ``like``; optionally device_put each
+    leaf under the matching sharding (mesh-elastic)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    _, like_leaves, treedef = _flatten(like)
+    assert len(like_leaves) == len(meta["paths"]), (
+        f"checkpoint has {len(meta['paths'])} leaves, target structure "
+        f"expects {len(like_leaves)}")
+    out = []
+    import ml_dtypes
+    for i, ref in enumerate(like_leaves):
+        a = data[f"leaf_{i}"]
+        want = np.dtype(meta["dtypes"][f"leaf_{i}"]) \
+            if meta["dtypes"][f"leaf_{i}"] in np.sctypeDict \
+            else np.dtype(getattr(ml_dtypes, meta["dtypes"][f"leaf_{i}"]))
+        if a.dtype != want:
+            a = a.view(want)
+        out.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, meta["extra"]
+
+
+class CheckpointManager:
+    """keep-N retention + async saves + latest-step discovery."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dirs(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                try:
+                    out.append((int(d.split("_")[1]), d))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        dirs = self._step_dirs()
+        return dirs[-1][0] if dirs else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             sync: bool = False):
+        self.wait()
+        # materialize on host *before* returning so training can mutate
+        # device buffers freely
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_pytree(self.path(step), host_tree,
+                        {**(extra or {}), "step": step})
+            for s, d in self._step_dirs()[:-self.keep]:
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+        if sync:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore_latest(self, like, shardings=None):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None, None
+        tree, extra = restore_pytree(self.path(step), like, shardings)
+        return step, tree, extra

@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch + the paper's own
+case-study config).  Each module exports CONFIG (full, dry-run only) and
+reduced() (small same-family config for CPU smoke tests)."""

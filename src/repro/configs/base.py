@@ -1,0 +1,220 @@
+"""Model configuration schema for all assigned architectures.
+
+A :class:`ModelConfig` fully describes one architecture: its dimensions, its
+layer *pattern* (the repeating unit that ``lax.scan`` iterates — keeping HLO
+size O(1) in depth so 512-device dry-runs compile on one CPU), optional
+prefix/suffix layers outside the scan, family-specific sub-configs (MLA,
+MoE, Mamba2, mLSTM/sLSTM), an optional encoder (whisper), and an optional
+modality-frontend stub (vlm/audio).
+
+Every config exposes ``reduced()`` returning a small same-family config for
+CPU smoke tests (the full config is exercised only via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from ..models.moe import MoEConfig
+from ..models.ssm import Mamba2Config, MLSTMConfig, SLSTMConfig
+
+__all__ = ["LayerSpec", "EncoderConfig", "ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer's composition: a sequence mixer + a channel mixer (FFN)."""
+    mixer: str = "gqa"          # gqa | mla | mamba2 | mlstm | slstm | shared_attn | none
+    ffn: str = "swiglu"         # swiglu | gelu | moe | none
+    window: Optional[int] = None        # sliding-window size (local attn)
+    attn_softcap: Optional[float] = None
+    qk_norm: bool = False
+    use_rope: bool = True
+    post_norms: bool = False            # gemma2-style sandwich norms
+    cross_attn: bool = False            # whisper decoder
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder stack (bidirectional attention, gelu FFN)."""
+    n_layers: int
+    n_frames: int            # frontend sequence length (e.g. 1500)
+    n_heads: int
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str              # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    prefix: Tuple[LayerSpec, ...] = ()     # unrolled before the scan
+    suffix: Tuple[LayerSpec, ...] = ()     # unrolled after the scan
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    rope_theta: float = 1e4
+    tie_embeddings: bool = True
+    logit_softcap: Optional[float] = None
+    emb_scale: Optional[float] = None      # gemma sqrt(d); minicpm scale_emb
+    residual_scale: float = 1.0            # minicpm scale_depth/sqrt(L)
+    mlp_bias: bool = False
+    # MLA dims (deepseek / minicpm3)
+    q_lora: Optional[int] = None
+    kv_lora: int = 0
+    nope_dim: int = 0
+    rope_dim: int = 0
+    v_head_dim: int = 0
+    # family sub-configs
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[Mamba2Config] = None
+    mlstm: Optional[MLSTMConfig] = None
+    slstm: Optional[SLSTMConfig] = None
+    shared_block: Optional[LayerSpec] = None   # zamba2 shared attn+mlp
+    encoder: Optional[EncoderConfig] = None    # whisper
+    # modality frontend stubs (assignment: backbone only)
+    frontend: Optional[str] = None             # "patch" | "audio"
+    n_frontend_tokens: int = 0
+    max_seq: int = 0         # learned positional table size (0 = rope only)
+    sub_quadratic: bool = False  # eligible for long_500k
+    attn_chunk: int = 512    # query-chunk size of the attention scan
+    unroll_scan: bool = False  # unroll the layer scan (cost extraction only)
+    # --- beyond-paper perf knobs (default off = paper-faithful baseline) ---
+    windowed_slice: bool = False  # local attn: slice KV to the window
+    ce_dtype: str = "fp32"        # "fp16alt": bf16 CE logits (half HBM)
+    embed_sharding: str = "vocab"  # "replicated": no embed collectives
+    remat_policy: str = "full"    # full | dots (save matmul outputs) | none
+    narrow_partials: bool = False  # bf16 TP partial-sum all-reduces
+    seq_parallel: bool = False    # shard residual seq dim over model
+    dropout: float = 0.0
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def n_scanned(self) -> int:
+        return self.n_layers - len(self.prefix) - len(self.suffix)
+
+    @property
+    def repeats(self) -> int:
+        n, p = self.n_scanned, len(self.pattern)
+        assert n % p == 0, (self.name, n, p)
+        return n // p
+
+    def layer_list(self) -> Tuple[LayerSpec, ...]:
+        return self.prefix + self.pattern * self.repeats + self.suffix
+
+    def validate(self):
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
+        assert self.repeats >= 1
+        for spec in self.layer_list():
+            if spec.mixer == "mla":
+                assert self.kv_lora and self.nope_dim and self.rope_dim
+            if spec.ffn == "moe":
+                assert self.moe is not None
+            if spec.mixer == "mamba2":
+                assert self.mamba is not None
+            if spec.mixer == "mlstm":
+                assert self.mlstm is not None
+            if spec.mixer == "slstm":
+                assert self.slstm is not None
+            if spec.mixer == "shared_attn":
+                assert self.shared_block is not None
+        return self
+
+    # -- parameter count (for roofline MODEL_FLOPS and docs) ------------------
+    def param_counts(self) -> dict:
+        """Returns three counts:
+          total  — distinct parameters stored,
+          active — distinct parameters touched per token (MoE: only the
+                   routed top-k + shared experts; weight-shared blocks once),
+          flops  — per-use parameter count for the 6·N·D FLOPs estimate
+                   (weight-shared blocks counted once per invocation)."""
+        d, v = self.d_model, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        active = emb
+
+        def attn_params(spec):
+            if spec.mixer == "gqa":
+                qkv = d * self.n_heads * self.head_dim \
+                    + 2 * d * self.n_kv_heads * self.head_dim \
+                    + self.n_heads * self.head_dim * d
+                return qkv
+            if spec.mixer == "mla":
+                qd = self.nope_dim + self.rope_dim
+                p = d * self.kv_lora + d * self.rope_dim \
+                    + self.kv_lora * self.n_heads * (self.nope_dim
+                                                     + self.v_head_dim) \
+                    + self.n_heads * self.v_head_dim * d
+                if self.q_lora:
+                    p += d * self.q_lora + self.q_lora * self.n_heads * qd
+                else:
+                    p += d * self.n_heads * qd
+                return p
+            if spec.mixer == "mamba2":
+                m = self.mamba
+                return d * (2 * m.d_inner + 2 * m.n_groups * m.d_state
+                            + m.n_heads) + m.d_inner * d \
+                    + m.d_conv * m.conv_dim
+            if spec.mixer == "mlstm":
+                ml = self.mlstm
+                # headwise (block-diagonal) qkv: 3 * H * head_dim^2
+                return d * 2 * ml.d_inner \
+                    + 3 * ml.n_heads * ml.head_dim ** 2 \
+                    + ml.d_inner * 2 * ml.n_heads + ml.d_inner * d \
+                    + ml.d_conv * ml.d_inner
+            if spec.mixer == "slstm":
+                sl = self.slstm
+                dff = int(sl.proj_factor * d)
+                return 4 * d * d + 4 * d * sl.head_dim \
+                    + d * 2 * dff + dff * d
+            if spec.mixer == "shared_attn":
+                sb = self.shared_block
+                return d * self.n_heads * self.head_dim * 2 \
+                    + 2 * d * self.n_kv_heads * self.head_dim \
+                    + (3 * d * self.d_ff if sb.ffn == "swiglu"
+                       else 2 * d * self.d_ff)
+            return 0
+
+        def ffn_params(spec):
+            if spec.ffn == "swiglu":
+                return 3 * d * self.d_ff
+            if spec.ffn == "gelu":
+                return 2 * d * self.d_ff + self.d_ff + d
+            if spec.ffn == "moe":
+                mc = self.moe
+                routed = mc.n_experts * 3 * d * mc.d_expert
+                shared = mc.n_shared * 3 * d * mc.d_expert
+                act = mc.top_k * 3 * d * mc.d_expert + shared
+                return routed + shared + d * mc.n_experts, act
+            return 0
+
+        flops = active
+        shared_counted = False
+        for spec in self.layer_list():
+            a = attn_params(spec)
+            f = ffn_params(spec)
+            f_total, f_active = f if isinstance(f, tuple) else (f, f)
+            if spec.mixer == "shared_attn":
+                if not shared_counted:
+                    total += a + f_total
+                    active += a + f_active
+                    shared_counted = True
+                flops += a + f_active
+            else:
+                total += a + f_total
+                active += a + f_active
+                flops += a + f_active
+        if self.encoder is not None:
+            e = self.encoder
+            per = 4 * (d * e.n_heads * (d // e.n_heads)) \
+                + 2 * d * e.d_ff + e.d_ff + d
+            total += e.n_layers * per
+            active += e.n_layers * per
+            flops += e.n_layers * per
+        return {"total": total, "active": active, "flops": flops}

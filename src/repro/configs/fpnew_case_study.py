@@ -1,0 +1,30 @@
+"""The paper's own configuration analogue: a ~110M-parameter dense LM used
+for the end-to-end transprecision training example (examples/
+transprecision_training.py) and the Table-III-style training ablation.
+
+This is the workload on which we reproduce the paper's claim at training
+scale: multiply in a narrow format, accumulate in fp32 (the expanding FMA),
+and compare accuracy/energy against the all-fp32 baseline — Fig 10/11 and
+Table III lifted from a dot-product kernel to LM training.
+"""
+from .base import LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer="gqa", ffn="swiglu")
+
+CONFIG = ModelConfig(
+    name="fpnew-case-study", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=2048, vocab=32000,
+    pattern=(_L,),
+    tie_embeddings=True,
+    sub_quadratic=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="fpnew-case-study-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256,
+        pattern=(_L,), tie_embeddings=True,
+    )

@@ -1,0 +1,30 @@
+"""internvl2-26b [vlm]: InternViT + InternLM2-20B backbone.
+
+Assignment: 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553
+[arXiv:2404.16821; hf].  The ViT frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings that occupy the
+first ``n_frontend_tokens`` positions of the sequence.
+"""
+from .base import LayerSpec, ModelConfig
+
+_L = LayerSpec(mixer="gqa", ffn="swiglu")
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab=92553,
+    pattern=(_L,),
+    rope_theta=1e6, tie_embeddings=False,
+    frontend="patch", n_frontend_tokens=256,
+    sub_quadratic=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256,
+        pattern=(_L,), tie_embeddings=False,
+        frontend="patch", n_frontend_tokens=8,
+    )

@@ -1,0 +1,18 @@
+"""repro.core — FPnew's transprecision architecture as a JAX numerics layer."""
+from .formats import (FPFormat, REGISTRY, get_format,
+                      FP64, FP32, FP16, FP16ALT, FP8, FP8_E4M3, TF32)
+from .softfloat import quantize, ROUNDING_MODES
+from .policy import MatmulPolicy, PrecisionPolicy, get_policy, PRESETS
+from .ops import (tp_cast, quantize_ste, tp_fma, tp_matmul, tp_einsum,
+                  cast_and_pack, tp_elementwise, storage_dtype)
+from . import energy, hw
+
+__all__ = [
+    "FPFormat", "REGISTRY", "get_format",
+    "FP64", "FP32", "FP16", "FP16ALT", "FP8", "FP8_E4M3", "TF32",
+    "quantize", "ROUNDING_MODES",
+    "MatmulPolicy", "PrecisionPolicy", "get_policy", "PRESETS",
+    "tp_cast", "quantize_ste", "tp_fma", "tp_matmul", "tp_einsum",
+    "cast_and_pack", "tp_elementwise", "storage_dtype",
+    "energy", "hw",
+]

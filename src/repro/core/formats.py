@@ -1,0 +1,145 @@
+"""FP format definitions — the software analogue of FPnew's parametric format slices.
+
+FPnew (paper §II.A.1) supports any format following IEEE 754-2008 binary
+encoding principles, parameterized by (exponent bits, mantissa bits).  We
+mirror that exactly: an :class:`FPFormat` is a frozen descriptor carrying the
+derived IEEE constants; :data:`REGISTRY` ships the paper's five formats plus
+a few extras used by beyond-paper experiments (e4m3, tf32).
+
+Formats that have a native JAX dtype expose it via ``native_dtype`` so the
+framework can run in *native* mode (real bf16/fp8 arrays in the HLO — what a
+TPU would execute) as well as *emulate* mode (grid-quantized f32 arrays with
+bit-exact paper semantics, validated against ml_dtypes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+__all__ = [
+    "FPFormat", "REGISTRY", "get_format",
+    "FP64", "FP32", "FP16", "FP16ALT", "FP8",
+    "FP8_E4M3", "TF32",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """An IEEE-754-style binary format with ``e_bits`` exponent and
+    ``m_bits`` explicit mantissa bits (plus sign).  Paper Fig. 1."""
+
+    name: str
+    e_bits: int
+    m_bits: int
+    # numpy dtype implementing this format natively, if one exists
+    native: Optional[np.dtype] = None
+
+    def __post_init__(self):
+        if self.e_bits < 2 or self.m_bits < 1:
+            raise ValueError(
+                f"format {self.name}: need >=2 exponent and >=1 mantissa bits"
+            )
+
+    # -- derived IEEE constants ------------------------------------------------
+    @property
+    def width(self) -> int:
+        return 1 + self.e_bits + self.m_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.e_bits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        return self.bias
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def precision(self) -> int:
+        """Significand precision incl. hidden bit."""
+        return self.m_bits + 1
+
+    @property
+    def max_normal(self) -> float:
+        return float((2.0 - 2.0 ** (-self.m_bits)) * 2.0 ** self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.emin)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.emin - self.m_bits))
+
+    @property
+    def eps(self) -> float:
+        return float(2.0 ** (-self.m_bits))
+
+    # -- container / native dtype handling -------------------------------------
+    @property
+    def native_dtype(self):
+        """jnp dtype natively implementing this format, or None."""
+        return None if self.native is None else jnp.dtype(self.native)
+
+    def fits_in_f32(self) -> bool:
+        return self.e_bits <= 8 and self.m_bits <= 23
+
+    def container_dtype(self):
+        """Narrowest standard float dtype whose grid is a superset of ours,
+        with enough precision for innocuous double rounding
+        (p_container >= 2*p + 2, Figueroa)."""
+        if self.fits_in_f32() and 24 >= 2 * self.precision + 2:
+            return jnp.float32
+        return jnp.float64
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.name}({self.e_bits},{self.m_bits})"
+
+
+# ---------------------------------------------------------------------------
+# The paper's five formats (§III.A.1) + beyond-paper extras.
+# ---------------------------------------------------------------------------
+FP64 = FPFormat("fp64", 11, 52, native=np.dtype(np.float64))
+FP32 = FPFormat("fp32", 8, 23, native=np.dtype(np.float32))
+FP16 = FPFormat("fp16", 5, 10, native=np.dtype(np.float16))
+#: paper's binary16alt == bfloat16 encoding, full IEEE semantics
+FP16ALT = FPFormat("fp16alt", 8, 7, native=np.dtype(ml_dtypes.bfloat16))
+#: paper's custom quarter-precision minifloat (5, 2) == float8_e5m2
+FP8 = FPFormat("fp8", 5, 2, native=np.dtype(ml_dtypes.float8_e5m2))
+
+# beyond-paper formats exercising the arbitrary-(e,m) machinery
+FP8_E4M3 = FPFormat("fp8_e4m3", 4, 3, native=None)  # IEEE-style e4m3 (with inf)
+TF32 = FPFormat("tf32", 8, 10, native=None)
+FP6_E3M2 = FPFormat("fp6_e3m2", 3, 2, native=None)
+
+REGISTRY = {
+    f.name: f
+    for f in (FP64, FP32, FP16, FP16ALT, FP8, FP8_E4M3, TF32, FP6_E3M2)
+}
+# aliases
+REGISTRY["bf16"] = FP16ALT
+REGISTRY["bfloat16"] = FP16ALT
+REGISTRY["float32"] = FP32
+REGISTRY["float16"] = FP16
+
+
+def get_format(fmt) -> FPFormat:
+    """Coerce a name / FPFormat / (e,m) tuple to an FPFormat."""
+    if isinstance(fmt, FPFormat):
+        return fmt
+    if isinstance(fmt, str):
+        try:
+            return REGISTRY[fmt]
+        except KeyError:
+            raise KeyError(f"unknown FP format {fmt!r}; known: {sorted(REGISTRY)}")
+    if isinstance(fmt, (tuple, list)) and len(fmt) == 2:
+        e, m = fmt
+        return FPFormat(f"fp_e{e}m{m}", e, m)
+    raise TypeError(f"cannot interpret {fmt!r} as FP format")

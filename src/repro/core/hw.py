@@ -1,0 +1,28 @@
+"""Target-hardware constants used by the roofline analysis and dry-run.
+
+Target is a TPU v5e-class chip.  Peak MXU throughput scales with format
+width (the TPU analogue of FPnew's SIMD lane packing, paper §II.B.3:
+k = w_fpu / w_f lanes).
+"""
+from __future__ import annotations
+
+from .formats import get_format
+
+# per-chip peaks
+PEAK_FLOPS_BF16 = 197e12          # bf16/fp16 MXU peak, FLOP/s
+PEAK_FLOPS_BY_FMT = {
+    "fp32": PEAK_FLOPS_BF16 / 2,  # fp32 via passes of the bf16 MXU
+    "fp16": PEAK_FLOPS_BF16,
+    "fp16alt": PEAK_FLOPS_BF16,
+    "fp8": PEAK_FLOPS_BF16 * 2,   # width-proportional lane packing
+    "fp64": PEAK_FLOPS_BF16 / 8,  # no native fp64; software emulated
+}
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~)
+ICI_LINKS = 4                     # 2D torus: 4 links/chip (v5e)
+DCN_BW = 25e9                     # bytes/s per host across pods (multi-pod axis)
+HBM_PER_CHIP = 16 * 2**30         # 16 GiB
+
+
+def peak_flops(fmt) -> float:
+    return PEAK_FLOPS_BY_FMT[get_format(fmt).name]

@@ -1,0 +1,145 @@
+"""Precision policies — the software analogue of FPnew's per-op-group
+format configuration (paper §II.B.2, Tables I/II).
+
+FPnew routes every operation through one of four *operation group blocks*
+(ADDMUL / DIVSQRT / COMP / CONV), and each block is configured per format as
+a parallel or merged slice.  In a JAX training/serving framework the same
+partition of work exists:
+
+  ADDMUL  -> matmuls / FMAs          (MXU)       -> :class:`MatmulPolicy`
+  DIVSQRT -> elementwise transcendentals (VPU)   -> ``elem_fmt`` (+ fast mode)
+  COMP    -> comparisons, masking, argmax        -> ``comp_fmt``
+  CONV    -> dtype conversions, quantization     -> ``rounding`` mode
+
+plus framework-level format choices the paper's ISA extension exposes to
+software: parameter storage, gradient communication, KV-cache storage, and
+optimizer state formats.
+
+Two execution modes:
+
+  ``native``  — tensors really carry the narrow dtype (bf16 / fp16 / fp8
+                arrays in the HLO).  This is what runs on the TPU and what
+                the dry-run/roofline measures.
+  ``emulate`` — tensors are f32 arrays snapped to the target grid via
+                core.softfloat (bit-exact paper semantics; used for
+                numerics validation and formats with no native dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .formats import FPFormat, get_format
+
+__all__ = ["MatmulPolicy", "PrecisionPolicy", "get_policy", "PRESETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPolicy:
+    """Multi-format FMA configuration: ``dst fma(src, src, dst)`` (§II.B.4).
+
+    ``src_fmt``: operand/multiply format; ``acc_fmt``: accumulation format
+    (the FMA's dst); ``out_fmt``: storage format of the result (CONV on the
+    way out; None = keep acc).
+    """
+    src_fmt: FPFormat
+    acc_fmt: FPFormat
+    out_fmt: Optional[FPFormat] = None
+
+    def resolved_out(self) -> FPFormat:
+        return self.out_fmt or self.acc_fmt
+
+
+def _f(x):
+    return get_format(x) if x is not None else None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str
+    mode: str = "native"                      # "native" | "emulate"
+    matmul: MatmulPolicy = None               # ADDMUL group
+    elem_fmt: FPFormat = None                 # DIVSQRT-ish group (VPU)
+    comp_fmt: FPFormat = None                 # COMP group
+    rounding: str = "rne"                     # CONV group rounding
+    param_fmt: FPFormat = None                # parameter storage
+    grad_comm_fmt: Optional[FPFormat] = None  # gradient all-reduce format
+    kv_fmt: Optional[FPFormat] = None         # KV-cache storage
+    opt_m_fmt: Optional[FPFormat] = None      # optimizer 1st-moment storage
+    opt_v_fmt: Optional[FPFormat] = None      # optimizer 2nd-moment storage
+    master_fmt: FPFormat = None               # master weights / updates
+    stochastic_grad_round: bool = False       # SR when quantizing grads
+    # beyond-paper: matmul partial sums carried (and all-reduced) in the
+    # OUTPUT format instead of acc_fmt — halves tensor-parallel activation
+    # all-reduce bytes (the paper's narrow-wire insight; local tile
+    # accumulation inside the MXU stays f32)
+    narrow_partials: bool = False
+
+    def __post_init__(self):
+        # allow string/None-friendly construction
+        object.__setattr__(self, "matmul", self.matmul or MatmulPolicy(
+            get_format("fp32"), get_format("fp32")))
+        for field in ("elem_fmt", "comp_fmt", "param_fmt", "master_fmt"):
+            v = getattr(self, field)
+            object.__setattr__(self, field, _f(v) or get_format("fp32"))
+        for field in ("grad_comm_fmt", "kv_fmt", "opt_m_fmt", "opt_v_fmt"):
+            object.__setattr__(self, field, _f(getattr(self, field)))
+        if self.mode not in ("native", "emulate"):
+            raise ValueError(f"mode must be native|emulate, got {self.mode}")
+        if self.mode == "native":
+            for fmt in (self.matmul.src_fmt, self.param_fmt):
+                if fmt.native_dtype is None:
+                    raise ValueError(
+                        f"policy {self.name}: format {fmt} has no native dtype; "
+                        f"use mode='emulate'")
+
+    def replace(self, **kw) -> "PrecisionPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def _mk(name, src, acc, out=None, **kw) -> PrecisionPolicy:
+    return PrecisionPolicy(
+        name=name,
+        matmul=MatmulPolicy(get_format(src), get_format(acc), _f(out)),
+        **kw)
+
+
+PRESETS = {
+    # The paper's FP32 baseline (Fig 11b): everything single-precision.
+    "fp32": _mk("fp32", "fp32", "fp32", param_fmt="fp32", elem_fmt="fp32"),
+    # Paper-faithful transprecision: FP16 storage/multiply, FP32 accumulate —
+    # the expanding FMA of Fig 10c / Fig 11e, applied to every matmul.
+    "tp_fp16": _mk("tp_fp16", "fp16", "fp32", out="fp16",
+                   param_fmt="fp16", elem_fmt="fp32", kv_fmt="fp16"),
+    # Same with bfloat16 (paper's FP16alt): the TPU-native expanding FMA.
+    "tp_bf16": _mk("tp_bf16", "fp16alt", "fp32", out="fp16alt",
+                   param_fmt="fp16alt", elem_fmt="fp32", kv_fmt="fp16alt"),
+    # FP8 operands, FP32 accumulate (paper's minifloat, §III.A.1).
+    "tp_fp8": _mk("tp_fp8", "fp8", "fp32", out="fp16alt",
+                  param_fmt="fp16alt", elem_fmt="fp32", kv_fmt="fp8"),
+    # tp_bf16 with an fp8 KV cache (the paper's storage-format knob on the
+    # dominant serving memory term).
+    "tp_bf16_kv8": _mk("tp_bf16_kv8", "fp16alt", "fp32", out="fp16alt",
+                       param_fmt="fp16alt", elem_fmt="fp32", kv_fmt="fp8"),
+    # Beyond-paper production policy: bf16 compute + fp8 gradient
+    # all-reduce with stochastic rounding + fp8 KV cache + bf16 moments.
+    "prod_tp": _mk("prod_tp", "fp16alt", "fp32", out="fp16alt",
+                   param_fmt="fp16alt", elem_fmt="fp32",
+                   grad_comm_fmt="fp8", kv_fmt="fp8",
+                   opt_m_fmt="fp16alt", opt_v_fmt="fp16alt",
+                   stochastic_grad_round=True),
+    # Emulated variants (bit-exact grids on f32 containers) for validation.
+    "em_fp16": _mk("em_fp16", "fp16", "fp32", out="fp16", mode="emulate",
+                   param_fmt="fp16", elem_fmt="fp32"),
+    "em_fp8": _mk("em_fp8", "fp8", "fp32", out="fp16", mode="emulate",
+                  param_fmt="fp16", elem_fmt="fp32"),
+}
+
+
+def get_policy(p) -> PrecisionPolicy:
+    if isinstance(p, PrecisionPolicy):
+        return p
+    try:
+        return PRESETS[p]
+    except KeyError:
+        raise KeyError(f"unknown policy {p!r}; known: {sorted(PRESETS)}")

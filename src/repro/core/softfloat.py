@@ -1,0 +1,198 @@
+"""Bit-exact software emulation of arbitrary IEEE-754-style formats.
+
+This is the numerical heart of the FPnew reproduction: every functional unit
+in the paper (FMA, add, mul, conversions) produces results *as if* computed
+in the target format with a single rounding.  We emulate that by snapping
+container values (f32, or f64 under x64) onto the target format's grid with
+correct handling of
+
+  * all five IEEE rounding modes (RNE, RTZ, RDN, RUP, RMM) + stochastic,
+  * gradual underflow (subnormals),
+  * overflow to +/-inf (or saturation, as a non-IEEE option),
+  * signed zeros, inf and NaN propagation.
+
+Implementation note (hardware adaptation): XLA:CPU — like the TPU vector
+unit — flushes container-subnormal operands/results to zero in FP arithmetic
+(FTZ/DAZ).  FPnew explicitly supports gradual underflow (§II.A.1), so the
+rounding is done entirely in *integer* bit arithmetic on the container's bit
+pattern, which is immune to FTZ and naturally exact across the
+subnormal/normal boundary (mantissa rounding carries propagate into the
+exponent field, the classic trick used by hardware rounding stages).
+
+Double rounding through the container is innocuous because every supported
+(container, target) pair satisfies p_container >= 2*p_target + 2 (Figueroa);
+tests/test_softfloat.py verifies bit-exactness against ml_dtypes for the
+formats that have native implementations.
+
+All functions are pure jnp and jit/vmap-compatible; core/ops.py exposes a
+straight-through-estimator variant for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FPFormat, get_format
+
+__all__ = ["quantize", "ROUNDING_MODES"]
+
+ROUNDING_MODES = ("rne", "rtz", "rdn", "rup", "rmm", "stochastic")
+
+# container descriptors: (uint dtype, mantissa bits, exponent bias, exp mask)
+_CONTAINERS = {
+    jnp.dtype(jnp.float32): (jnp.uint32, 23, 127, 0xFF),
+    jnp.dtype(jnp.float64): (jnp.uint64, 52, 1023, 0x7FF),
+}
+
+
+def _round_signed(r, mode: str, u):
+    """Round an exactly-representable signed ratio ``r`` to an integer-valued
+    float per ``mode``.  ``u`` is uniform [0,1) noise for stochastic mode."""
+    if mode == "rne":
+        return jnp.round(r)  # round-half-to-even
+    if mode == "rtz":
+        return jnp.trunc(r)
+    if mode == "rdn":
+        return jnp.floor(r)
+    if mode == "rup":
+        return jnp.ceil(r)
+    if mode == "rmm":
+        return jnp.sign(r) * jnp.floor(jnp.abs(r) + 0.5)
+    if mode == "stochastic":
+        return jnp.floor(r + u)
+    raise ValueError(f"unknown rounding mode {mode!r}; known: {ROUNDING_MODES}")
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "saturate"))
+def _quantize_bits(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
+    cdt = jnp.dtype(x.dtype)
+    udt, cm, cbias, emask = _CONTAINERS[cdt]
+    m, emin, emax = fmt.m_bits, fmt.emin, fmt.emax
+    s = cm - m  # constant mantissa-bit shift (valid at/above target emin)
+
+    if mode == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        kbits, kunif = jax.random.split(key)
+    else:
+        kbits = kunif = None
+
+    bits = jax.lax.bitcast_convert_type(x, udt)
+    sign = bits & (jnp.asarray(1, udt) << (cm + len(bin(emask)) - 2))
+    absbits = bits ^ sign
+    pos = sign == 0
+    one = jnp.asarray(1, udt)
+
+    # ---- path 1: round-to-m-mantissa-bits in integer bit space -------------
+    # Valid wherever the target grid has m fractional significand bits below
+    # the leading bit — i.e. everywhere except the target-subnormal region
+    # (and if the target's emin coincides with the container's, even there,
+    # since that region is a single uniform-spacing container binade).
+    # Mantissa carries propagate into the exponent field, which is exactly
+    # the correct IEEE behaviour (1.11..1 rounding up to 2.0).
+    if mode == "rne":
+        tie_odd = (absbits >> s) & one
+        addend = (one << (s - 1)) - one + tie_odd if s > 0 else jnp.zeros_like(bits)
+    elif mode == "rmm":
+        addend = jnp.full_like(bits, 1 << (s - 1)) if s > 0 else jnp.zeros_like(bits)
+    elif mode == "rtz":
+        addend = jnp.zeros_like(bits)
+    elif mode == "rdn":  # toward -inf: away-from-zero for negatives
+        addend = jnp.where(pos, 0, (1 << s) - 1).astype(udt)
+    elif mode == "rup":  # toward +inf: away-from-zero for positives
+        addend = jnp.where(pos, (1 << s) - 1, 0).astype(udt)
+    elif mode == "stochastic":
+        u = jax.random.bits(kbits, x.shape, udt)
+        addend = u & jnp.asarray((1 << s) - 1, udt)
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}; known: {ROUNDING_MODES}")
+    rounded = ((absbits + addend) >> s) << s
+
+    # ---- path 2: fixed-point rounding for the target-subnormal region ------
+    # Only needed when the target's subnormal range sits strictly above the
+    # container's (fp16/fp8/... inside f32).  There the grid spacing is the
+    # constant 2^(emin-m) across several container binades, so we round
+    # k = x / 2^(emin-m) in FP — all quantities are container-normal, hence
+    # exact and immune to FTZ.
+    if emin > 1 - cbias:
+        inv_q = jnp.asarray(2.0 ** (m - emin), cdt)   # exact power of two
+        qq = jnp.asarray(2.0 ** (emin - m), cdt)
+        uu = (jax.random.uniform(kunif, x.shape, cdt)
+              if mode == "stochastic" else None)
+        k = _round_signed(x * inv_q, mode, uu)
+        fx_mag = jnp.abs(k) * qq  # sign-correct magnitude (|k| has it already)
+        fx_bits = jax.lax.bitcast_convert_type(fx_mag, udt)
+        subnormal_rgn = (absbits >> cm).astype(jnp.int32) - cbias < emin
+        rounded = jnp.where(subnormal_rgn, fx_bits, rounded)
+        # Container-subnormal inputs: XLA CPU (like the TPU VPU) applies
+        # DAZ to FP operands, so the x*inv_q above sees 0.  Every such
+        # input is < 2^(1-cbias) <= half the target's min subnormal
+        # (guaranteed by container selection), so the correct rounding is
+        # known in closed form: 0, except away-from-zero directed modes
+        # which give one min-subnormal step.  Pure integer — DAZ-immune.
+        csub = (absbits != 0) & (absbits < (one << cm))
+        min_sub_bits = jnp.asarray((emin - m + cbias) << cm, udt)
+        if mode == "rup":
+            csub_val = jnp.where(pos, min_sub_bits, 0).astype(udt)
+        elif mode == "rdn":
+            csub_val = jnp.where(pos, 0, min_sub_bits).astype(udt)
+        else:
+            csub_val = jnp.zeros_like(bits)
+        rounded = jnp.where(csub, csub_val, rounded)
+
+    # ---- overflow: compare against target max_normal in container bits -----
+    max_bits = jnp.asarray(
+        ((emax + cbias) << cm) | (((1 << m) - 1) << (cm - m)), udt)
+    inf_bits = jnp.asarray(emask << cm, udt)
+    over = rounded > max_bits
+    if saturate:
+        ovf_val = jnp.full_like(bits, max_bits)
+    elif mode in ("rne", "rmm", "stochastic"):
+        ovf_val = jnp.full_like(bits, inf_bits)
+    elif mode == "rtz":
+        ovf_val = jnp.full_like(bits, max_bits)
+    elif mode == "rdn":
+        ovf_val = jnp.where(pos, max_bits, inf_bits)
+    else:  # rup
+        ovf_val = jnp.where(pos, inf_bits, max_bits)
+    rounded = jnp.where(over, ovf_val, rounded)
+
+    # specials: container inf/NaN propagate untouched
+    special = absbits >= inf_bits
+    rounded = jnp.where(special, absbits, rounded)
+
+    return jax.lax.bitcast_convert_type(sign | rounded, cdt)
+
+
+def quantize(x, fmt, mode: str = "rne", *, saturate: bool = False,
+             key: Optional[jax.Array] = None):
+    """Snap ``x`` onto the grid of ``fmt`` with one correct rounding.
+
+    Returns an array in the *container* dtype (f32, or f64 when the target
+    needs it and x64 is enabled) whose values are exactly representable in
+    ``fmt``.  This models FPnew's CONV block (§II.B.4) and is the primitive
+    from which multi-format FMA semantics are built.
+    """
+    fmt = get_format(fmt)
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        x = x.astype(jnp.float32)
+    # identity fast-path: target grid is a superset of the *input's* grid
+    xinfo = jnp.finfo(x.dtype)
+    if fmt.e_bits >= xinfo.nexp and fmt.m_bits >= xinfo.nmant:
+        return x
+    cdt = fmt.container_dtype()
+    if cdt == jnp.float64 and not jax.config.read("jax_enable_x64"):
+        if fmt.e_bits >= 11 and fmt.m_bits >= 23:
+            # target at least as wide as f32: identity on f32 data
+            return x.astype(jnp.float32)
+        raise ValueError(
+            f"format {fmt} needs an f64 container; enable jax_enable_x64")
+    xin = x.astype(cdt)
+    # identity fast-path: target grid is a superset of the container grid
+    if fmt.e_bits >= jnp.finfo(cdt).nexp and fmt.m_bits >= jnp.finfo(cdt).nmant:
+        return xin
+    return _quantize_bits(xin, fmt=fmt, mode=mode, saturate=saturate, key=key)

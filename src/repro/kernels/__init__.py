@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for FPnew's performance-critical compute paths.
+
+Each kernel ships three pieces (framework convention):
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling,
+  ops.py    — jit'd public wrapper (padding, policy plumbing),
+  ref.py    — pure-jnp oracle with identical format semantics.
+Validated in interpret mode on CPU; compiled on TPU via interpret=False.
+"""
+from . import ops, ref
+from .ops import tp_matmul, tp_quantize, cast_and_pack, flash_attention, dotp_ex

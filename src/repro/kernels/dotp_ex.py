@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: expanding dot-product accumulation (paper case study).
+
+The paper's application kernel (§IV.C, Fig 10/11e): accumulate element-wise
+products of two FP16 input streams into an FP32 result using the expanding
+FMA (``fmacex.s.h``) — FP32 accuracy at FP16 storage/compute cost.
+
+Kernel contract: inputs are (R, C) f32 arrays holding src_fmt-grid values;
+each grid step loads a row-block tile, forms the exact products, and adds
+the tile's partial sums into an f32 VMEM accumulator; the final step reduces
+to a (1, 128) vector whose lane sum is the dot product (ops.py finishes the
+lane reduction).  Parallel tiling reassociates the paper's sequential
+accumulation order; tests bound the difference against the sequential oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dotp_kernel(a_ref, b_ref, o_ref, acc_ref, *, nsteps: int, src_dtype):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(src_dtype)
+    b = b_ref[...].astype(src_dtype)
+    prod = a.astype(jnp.float32) * b.astype(jnp.float32)  # exact for narrow src
+    acc_ref[...] += jnp.sum(prod, axis=0, keepdims=True)  # (1, C)
+
+    @pl.when(i == nsteps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "src_dtype",
+                                             "interpret"))
+def dotp_ex_pallas(a, b, *, block_rows: int = 256, src_dtype=jnp.float16,
+                   interpret: bool = True):
+    """Expanding dot product of (R, C) tiles; returns (1, C) partial lanes."""
+    r, c = a.shape
+    assert a.shape == b.shape and r % block_rows == 0 and c % 128 == 0
+    nsteps = r // block_rows
+    return pl.pallas_call(
+        functools.partial(_dotp_kernel, nsteps=nsteps, src_dtype=src_dtype),
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((1, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, c), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: transprecision flash attention.
+
+Attention is the framework's dominant non-GEMM compute hot-spot; this kernel
+applies FPnew's multi-format FMA contract to both attention contractions:
+QK^T and PV multiply in ``src_fmt`` (bf16/fp16/fp8), while the online-softmax
+statistics (running max / denominator) and the output accumulator stay in
+f32 — the expanding-FMA pattern of paper §II.B.4 at the kernel level.
+
+Features: GQA head mapping, causal masking, sliding-window (local) masking,
+attention-logit soft-capping (gemma-2/3), per-block VMEM tiling.
+
+Layout: q [BH, Sq, D], k/v [BKV, Skv, D] (heads pre-flattened by ops.py).
+Grid (BH, Sq/bq, Skv/bk), kv innermost; scratch: acc (bq, D) f32, running
+max m and denominator l as (bq, 128) replicated lanes (TPU-friendly 2D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 nk: int, bq: int, bk: int, scale: float, causal: bool,
+                 window: Optional[int], softcap: Optional[float],
+                 kv_len: int, src_dtype, out_dtype):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(src_dtype)           # (bq, D)
+    k = k_ref[0].astype(src_dtype)           # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    iq = pl.program_id(1)
+    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_idx < kv_len
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                     # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m_new == NEG_INF): keep exp argument finite
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.where(m_new <= NEG_INF / 2, 0.0, m_prev - m_new))
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(src_dtype)
+    pv = jax.lax.dot_general(p.astype(src_dtype), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "group", "bq", "bk", "scale", "causal", "window", "softcap", "kv_len",
+    "src_dtype", "out_dtype", "interpret"))
+def flash_attention_pallas(q, k, v, *, group: int = 1, bq: int = 128,
+                           bk: int = 128, scale: float = 1.0,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           kv_len: Optional[int] = None,
+                           src_dtype=jnp.bfloat16,
+                           out_dtype=jnp.float32,
+                           interpret: bool = True):
+    """q: [BH, Sq, D]; k, v: [BKV, Skv, D] with BH = BKV * group.
+
+    Sq % bq == 0 and Skv % bk == 0 (ops.py pads); ``kv_len`` masks padding.
+    """
+    bh, sq, d = q.shape
+    bkv, skv, dk = k.shape
+    assert d == dk and bh == bkv * group, (q.shape, k.shape, group)
+    assert sq % bq == 0 and skv % bk == 0, (q.shape, k.shape, bq, bk)
+    kv_len = skv if kv_len is None else kv_len
+    nk = skv // bk
+
+    kern = functools.partial(
+        _attn_kernel, nk=nk, bq=bq, bk=bk, scale=scale, causal=causal,
+        window=window, softcap=softcap, kv_len=kv_len,
+        src_dtype=src_dtype, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

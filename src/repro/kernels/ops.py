@@ -1,0 +1,138 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle shape padding/alignment, policy plumbing, and head flattening
+so the model code can call them like ordinary jnp ops.  ``interpret=True``
+everywhere in this container (CPU); on real TPUs the same code runs compiled
+by flipping the flag (kept as an argument end-to-end).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.formats import get_format
+from ..core.policy import PrecisionPolicy, get_policy
+from .tp_matmul import tp_matmul_pallas, DEFAULT_BLOCK
+from .tp_quant import tp_quantize_pallas, cast_and_pack_pallas
+from .flash_attention import flash_attention_pallas
+from .dotp_ex import dotp_ex_pallas
+
+
+def _pad_to(x, mults, axes):
+    pads = [(0, 0)] * x.ndim
+    padded = False
+    for ax, m in zip(axes, mults):
+        r = (-x.shape[ax]) % m
+        if r:
+            pads[ax] = (0, r)
+            padded = True
+    return (jnp.pad(x, pads), True) if padded else (x, False)
+
+
+def tp_matmul(a, b, *, policy=None, out_fmt=None, block=None,
+              interpret: bool = True):
+    """Policy-aware Pallas matmul: a [.., M, K] @ b [K, N]."""
+    policy = get_policy(policy) if policy is not None else get_policy("tp_bf16")
+    mp = policy.matmul
+    out = get_format(out_fmt) if out_fmt is not None else mp.resolved_out()
+    lead = a.shape[:-2]
+    a2 = a.reshape(-1, a.shape[-1]) if lead else a
+    m, k = a2.shape
+    _, n = b.shape
+    bm, bk, bn = block or (min(128, max(8, m)), min(512, k), min(128, n))
+    bm, bk, bn = (max(8, bm), max(128, bk), max(128, bn))
+    a2, _ = _pad_to(a2, (bm, bk), (0, 1))
+    b2, _ = _pad_to(b, (bk, bn), (0, 1))
+
+    if policy.mode == "native":
+        a2 = a2.astype(mp.src_fmt.native_dtype)
+        b2 = b2.astype(mp.src_fmt.native_dtype)
+        qname = None
+        out_dtype = out.native_dtype
+    else:
+        qname = mp.src_fmt.name
+        out_dtype = jnp.float32
+    r = tp_matmul_pallas(a2, b2, block=(bm, bk, bn), out_dtype=out_dtype,
+                         quant_fmt_name=qname, interpret=interpret)
+    r = r[:m, :n]
+    return r.reshape(*lead, a.shape[-2], n) if lead else r
+
+
+def tp_quantize(x, *, fmt, stochastic: bool = False, key=None,
+                out_dtype=None, interpret: bool = True):
+    """Pallas-fused quantization of a 2D array (CONV block)."""
+    fmt = get_format(fmt)
+    rows, cols = x.shape
+    x2, _ = _pad_to(x, (256, 128), (0, 1))
+    rbits = None
+    if stochastic:
+        assert key is not None
+        rbits = jax.random.bits(key, x2.shape, jnp.uint32)
+    r = tp_quantize_pallas(x2, rbits, fmt_name=fmt.name, stochastic=stochastic,
+                           out_dtype=out_dtype or jnp.float32,
+                           interpret=interpret)
+    return r[:rows, :cols]
+
+
+def cast_and_pack(a, b, *, fmt, stochastic: bool = False, key=None,
+                  interpret: bool = True):
+    fmt = get_format(fmt)
+    rows, cols = a.shape
+    a2, _ = _pad_to(a, (256, 128), (0, 1))
+    b2, _ = _pad_to(b, (256, 128), (0, 1))
+    rbits = None
+    if stochastic:
+        assert key is not None
+        rbits = jax.random.bits(key, a2.shape, jnp.uint32)
+    r = cast_and_pack_pallas(a2, b2, rbits, fmt_name=fmt.name,
+                             stochastic=stochastic, interpret=interpret)
+    return r[:rows, :2 * cols]
+
+
+def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q [B, H, S, D], k/v [B, Hkv, Skv, D] -> [B, H, S, D] (f32)."""
+    policy = get_policy(policy) if policy is not None else get_policy("tp_bf16")
+    src_dt = (policy.matmul.src_fmt.native_dtype
+              if policy.mode == "native" else jnp.float32)
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    bq_ = min(bq, max(8, sq))
+    bk_ = min(bk, max(128, skv))
+    qf, _ = _pad_to(qf, (bq_,), (1,))
+    kf, _ = _pad_to(kf, (bk_,), (1,))
+    vf, _ = _pad_to(vf, (bk_,), (1,))
+    o = flash_attention_pallas(
+        qf, kf, vf, group=group, bq=bq_, bk=bk_, scale=scale, causal=causal,
+        window=window, softcap=softcap, kv_len=skv, src_dtype=src_dt,
+        out_dtype=jnp.float32, interpret=interpret)
+    return o[:, :sq].reshape(b, h, sq, d)
+
+
+def dotp_ex(a, b, *, policy=None, interpret: bool = True):
+    """Expanding dot product of two 1D streams (paper Fig 11e)."""
+    policy = get_policy(policy) if policy is not None else get_policy("tp_fp16")
+    src_dt = (policy.matmul.src_fmt.native_dtype
+              if policy.mode == "native" else jnp.float32)
+    n = a.shape[0]
+    c = 128
+    rows = -(-n // c)
+    pad = rows * c - n
+    a2 = jnp.pad(a, (0, pad)).reshape(rows, c)
+    b2 = jnp.pad(b, (0, pad)).reshape(rows, c)
+    br = min(256, rows)
+    a2, _ = _pad_to(a2, (br,), (0,))
+    b2, _ = _pad_to(b2, (br,), (0,))
+    lanes = dotp_ex_pallas(a2, b2, block_rows=br, src_dtype=src_dt,
+                           interpret=interpret)
+    return jnp.sum(lanes)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the paper-semantics references).
+
+Each function mirrors one kernel's contract exactly — same formats, same
+masking, same accumulation dtype — but written as straight jnp so tests can
+assert_allclose kernels against them over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import softfloat
+from ..core.formats import get_format
+
+NEG_INF = -1e30
+
+
+def tp_matmul_ref(a, b, *, out_dtype=jnp.float32, quant_fmt_name=None,
+                  bk=None):
+    """Expanding-FMA matmul oracle: optional fp-grid operand snap (FTZ like
+    the kernel), f32 accumulation, out_dtype store.
+
+    ``bk`` fixes the K-blocking schedule: partial products are summed per
+    K-block in order, exactly like the kernel's VMEM accumulator.  The
+    summation schedule is part of the op's numerical contract (the paper's
+    FMA units likewise specify their accumulation order); with matching
+    ``bk`` the oracle is bit-exact against the kernel."""
+    if quant_fmt_name is not None:
+        fmt = get_format(quant_fmt_name)
+        a = _ftz(softfloat.quantize(a.astype(jnp.float32), fmt), fmt)
+        b = _ftz(softfloat.quantize(b.astype(jnp.float32), fmt), fmt)
+    # operands stay in their source dtype (the MXU contract); only the
+    # accumulator is f32 — identical to the kernel's dot_general.
+    k = a.shape[-1]
+    dot = lambda x, y: jax.lax.dot_general(
+        x, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if bk is None or bk >= k:
+        r = dot(a, b)
+    else:
+        assert k % bk == 0, (k, bk)
+        r = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        for kk in range(0, k, bk):  # sequential K-block accumulation
+            r = r + dot(a[:, kk:kk + bk], b[kk:kk + bk, :])
+    return r.astype(out_dtype)
+
+
+def _ftz(x, fmt):
+    return jnp.where(jnp.abs(x) < fmt.min_normal, jnp.sign(x) * 0.0, x)
+
+
+def tp_quantize_ref(x, *, fmt_name, out_dtype=jnp.float32):
+    fmt = get_format(fmt_name)
+    q = _ftz(softfloat.quantize(x.astype(jnp.float32), fmt), fmt)
+    return q.astype(out_dtype)
+
+
+def cast_and_pack_ref(a, b, *, fmt_name, out_dtype=jnp.float32):
+    qa = tp_quantize_ref(a, fmt_name=fmt_name, out_dtype=out_dtype)
+    qb = tp_quantize_ref(b, fmt_name=fmt_name, out_dtype=out_dtype)
+    r, c = qa.shape
+    return jnp.stack([qa, qb], axis=-1).reshape(r, 2 * c)
+
+
+def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        kv_len: Optional[int] = None,
+                        src_dtype=jnp.bfloat16, out_dtype=jnp.float32):
+    """Dense-softmax oracle with identical format contract to the kernel."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    kv_len = skv if kv_len is None else kv_len
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(src_dtype), kk.astype(src_dtype),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = k_idx < kv_len
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("hqk,hkd->hqd", p.astype(src_dtype).astype(jnp.float32),
+                   vv.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return (o / jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+
+
+def dotp_ex_ref(a, b, *, src_dtype=jnp.float16):
+    """Expanding dot product oracle (f32 accumulate of exact products)."""
+    prod = (a.astype(src_dtype).astype(jnp.float32)
+            * b.astype(src_dtype).astype(jnp.float32))
+    return jnp.sum(prod)
+
+
+def dotp_sequential_ref(a, b, *, src_fmt="fp16", acc_fmt="fp32"):
+    """Bit-exact *sequential* oracle of the paper's fmacex loop (Fig 11e):
+    acc_{i+1} = round_acc(acc_i + a_i * b_i), products exact."""
+    src, acc = get_format(src_fmt), get_format(acc_fmt)
+    qa = softfloat.quantize(a, src)
+    qb = softfloat.quantize(b, src)
+
+    def step(acc_v, ab):
+        s = softfloat.quantize(acc_v + ab[0] * ab[1], acc)
+        return s, ()
+
+    out, _ = jax.lax.scan(step, jnp.float32(0.0), (qa, qb))
+    return out

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: multi-format (expanding-FMA) tiled matmul.
+
+The TPU-native instantiation of FPnew's merged multi-format FMA slice
+(paper §II.B.4): operands enter in ``src_fmt`` (bf16 / fp16 / fp8 / grid-
+quantized f32), products are accumulated in an f32 VMEM scratch accumulator
+(the MXU's native expanding FMA), and the result is cast to ``out_fmt`` on
+the way out — fusing FPnew's CONV block into the ADDMUL datapath so the
+narrow result never round-trips through HBM in wide form.
+
+Tiling: grid (M/bm, N/bn, K/bk) with K innermost; the f32 accumulator lives
+in VMEM scratch across the K steps of one (i, j) tile.  Block shapes default
+to MXU-aligned (128, 512, 128) and must keep
+bm*bk + bk*bn (operands, src width) + bm*bn*4 (acc) within VMEM.
+
+An optional *fused operand quantization* snaps f32 operands onto an
+arbitrary (e, m) grid inside the kernel with the same integer-rounding
+stage hardware uses — this is the beyond-paper CONV+ADDMUL fusion used in
+§Perf. Validated against ref.py in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import FPFormat, get_format
+
+DEFAULT_BLOCK = (128, 512, 128)  # (bm, bk, bn)
+
+
+def _quantize_rne_bits(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """In-kernel RNE grid snap (f32, normal/overflow handling only — the
+    kernel path flushes target subnormals like the MXU does; the exact
+    gradual-underflow path lives in core.softfloat for emulation)."""
+    m, emax, emin = fmt.m_bits, fmt.emax, fmt.emin
+    s = 23 - m
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & jnp.uint32(0x80000000)
+    mag = bits ^ sign
+    tie = (mag >> s) & jnp.uint32(1)
+    mag = ((mag + ((jnp.uint32(1) << (s - 1)) - jnp.uint32(1) + tie)) >> s) << s
+    max_bits = jnp.uint32(((emax + 127) << 23) | (((1 << m) - 1) << s))
+    inf_bits = jnp.uint32(0xFF << 23)
+    mag = jnp.where(mag > max_bits, inf_bits, mag)
+    # flush-to-zero below min normal (MXU-style) — but RNE on the true
+    # subnormal grid rounds |x| >= min_normal*(1 - 2^-(m+1)) UP to
+    # min_normal, so those survive the flush (boundary found by the
+    # hypothesis sweep in tests/test_kernels.py).
+    min_bits = jnp.uint32((emin + 127) << 23)
+    # boundary = 2^(emin-1) * (2 - 2^-m) = min_normal * (1 - 2^-(m+1))
+    boundary = jnp.uint32(((emin - 1 + 127) << 23)
+                          | (((1 << m) - 1) << (23 - m)))
+    pre = bits ^ sign
+    mag = jnp.where(mag < min_bits,
+                    jnp.where(pre >= boundary, min_bits, jnp.uint32(0)),
+                    mag)
+    return jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int,
+               quant_fmt: Optional[FPFormat], out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if quant_fmt is not None:  # fused CONV->ADDMUL operand quantization
+        a = _quantize_rne_bits(a.astype(jnp.float32), quant_fmt)
+        b = _quantize_rne_bits(b.astype(jnp.float32), quant_fmt)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "out_dtype", "quant_fmt_name", "interpret"))
+def tp_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                     block=DEFAULT_BLOCK,
+                     out_dtype=jnp.float32,
+                     quant_fmt_name: Optional[str] = None,
+                     interpret: bool = True) -> jnp.ndarray:
+    """``a [M,K] @ b [K,N]`` with f32 accumulation and ``out_dtype`` store.
+
+    M, K, N must be multiples of the block shape (the ops.py wrapper pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (a.shape, b.shape, block)
+    nk = k // bk
+    quant_fmt = get_format(quant_fmt_name) if quant_fmt_name else None
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, quant_fmt=quant_fmt,
+                          out_dtype=out_dtype),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused quantize / cast-and-pack (FPnew CONV block).
+
+Converts one or two f32 streams onto an arbitrary (e, m) grid — RNE or
+stochastic — and packs them into the destination vector, mirroring the
+paper's vectorial conversions and cast-and-pack instructions (§III.A.2b/c).
+Stochastic rounding consumes a caller-supplied uint32 random-bits operand
+(deterministic, reproducible — the framework threads PRNG keys, the kernel
+stays pure).
+
+Grid: 1D over row blocks; each block is an (rows, 128)-aligned VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.formats import FPFormat, get_format
+
+
+def _quant_bits(x, rbits, fmt: FPFormat, stochastic: bool):
+    """Integer-space rounding onto fmt's grid (normals; FTZ below min normal,
+    matching the MXU input stage; softfloat.quantize keeps the gradual-
+    underflow oracle)."""
+    m, emax, emin = fmt.m_bits, fmt.emax, fmt.emin
+    s = 23 - m
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & jnp.uint32(0x80000000)
+    mag = bits ^ sign
+    if stochastic:
+        addend = rbits & jnp.uint32((1 << s) - 1)
+    else:
+        tie = (mag >> s) & jnp.uint32(1)
+        addend = (jnp.uint32(1) << (s - 1)) - jnp.uint32(1) + tie
+    special = mag >= jnp.uint32(0xFF << 23)
+    rmag = ((mag + addend) >> s) << s
+    max_bits = jnp.uint32(((emax + 127) << 23) | (((1 << m) - 1) << s))
+    rmag = jnp.where(rmag > max_bits, jnp.uint32(0xFF << 23), rmag)
+    # FTZ below min normal, except the RNE subnormal-boundary band
+    # [min_normal*(1-2^-(m+1)), min_normal) which rounds up to min_normal
+    # on the true IEEE grid (deterministic mode only; stochastic keeps the
+    # plain flush — the bias is confined to that half-ulp band).
+    min_bits = jnp.uint32((emin + 127) << 23)
+    if stochastic:
+        rmag = jnp.where(rmag < min_bits, jnp.uint32(0), rmag)
+    else:
+        # boundary = 2^(emin-1) * (2 - 2^-m) = min_normal * (1 - 2^-(m+1))
+        boundary = jnp.uint32(((emin - 1 + 127) << 23)
+                              | (((1 << m) - 1) << (23 - m)))
+        rmag = jnp.where(rmag < min_bits,
+                         jnp.where(mag >= boundary, min_bits, jnp.uint32(0)),
+                         rmag)
+    rmag = jnp.where(special, mag, rmag)
+    return jax.lax.bitcast_convert_type(sign | rmag, jnp.float32)
+
+
+def _quant_kernel(x_ref, r_ref, o_ref, *, fmt, stochastic, out_dtype):
+    q = _quant_bits(x_ref[...], r_ref[...], fmt, stochastic)
+    o_ref[...] = q.astype(out_dtype)
+
+
+def _pack_kernel(a_ref, b_ref, r_ref, o_ref, *, fmt, stochastic, out_dtype):
+    qa = _quant_bits(a_ref[...], r_ref[...], fmt, stochastic)
+    qb = _quant_bits(b_ref[...], ~r_ref[...], fmt, stochastic)
+    rows, cols = qa.shape
+    packed = jnp.stack([qa, qb], axis=-1).reshape(rows, 2 * cols)
+    o_ref[...] = packed.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt_name", "stochastic", "block_rows", "out_dtype", "interpret"))
+def tp_quantize_pallas(x, rbits=None, *, fmt_name: str, stochastic=False,
+                       block_rows: int = 256, out_dtype=jnp.float32,
+                       interpret: bool = True):
+    """Quantize a 2D f32 array onto fmt's grid. rbits: uint32, same shape."""
+    fmt = get_format(fmt_name)
+    rows, cols = x.shape
+    assert rows % block_rows == 0 and cols % 128 == 0, x.shape
+    if rbits is None:
+        rbits = jnp.zeros(x.shape, jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, fmt=fmt, stochastic=stochastic,
+                          out_dtype=out_dtype),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(x, rbits)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt_name", "stochastic", "block_rows", "out_dtype", "interpret"))
+def cast_and_pack_pallas(a, b, rbits=None, *, fmt_name: str,
+                         stochastic=False, block_rows: int = 256,
+                         out_dtype=jnp.float32, interpret: bool = True):
+    """Fused cast-and-pack: quantize two f32 streams and interleave them as
+    vector elements (paper §III.A.2c).  Output has 2x the columns."""
+    fmt = get_format(fmt_name)
+    rows, cols = a.shape
+    assert a.shape == b.shape
+    assert rows % block_rows == 0 and cols % 128 == 0, a.shape
+    if rbits is None:
+        rbits = jnp.zeros(a.shape, jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, fmt=fmt, stochastic=stochastic,
+                          out_dtype=out_dtype),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((block_rows, 2 * cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2 * cols), out_dtype),
+        interpret=interpret,
+    )(a, b, rbits)

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — mandatory because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    a second data-parallel axis crossing the DCN/ICI boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh) -> tuple:
+    """The batch-sharding axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,48 @@
+"""Serving launcher: batched prefill+decode.
+
+``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--policy", default="tp_bf16")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from ..models.registry import build_model
+
+    model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
+    params = model.init(jax.random.key(0))
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 model.cfg.vocab)
+    prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
+    step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+
+    lg, caches = prefill(params, prompts)
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        lg, caches = step(params, tok, caches, args.prompt_len + i)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"{args.arch}: {args.batch} x {args.gen - 1} tokens in "
+          f"{dt:.2f}s ({args.batch * (args.gen - 1) / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,367 @@
+"""Attention variants: GQA/MQA (with local windows, softcap, qk-norm) and
+MLA (DeepSeek/MiniCPM latent attention), in train/prefill and decode forms.
+
+All contractions run through core.ops.tp_einsum, i.e. under the FPnew
+multi-format FMA contract (operands in src_fmt, f32 accumulation).  Softmax
+statistics stay f32 (the paper keeps COMP in full precision).
+
+Training/prefill uses a lax.scan over query chunks (online-softmax-free:
+each chunk sees all keys, so memory is O(chunk * S) not O(S^2)) — the
+pure-JAX twin of kernels/flash_attention.py, which is the TPU perf path.
+
+Decode uses a KV cache: dense GQA caches k/v per head; MLA caches the
+compressed latent + rope key only (the paper-style "storage format" win:
+the latent cache is also quantizable via policy.kv_fmt).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import ops as tp
+from ..core.formats import get_format
+from .layers import (batch_axes, bspec, apply_rope, dense_init,
+                     residual_spec, rmsnorm, shard, softcap)
+
+NEG_INF = -1e30
+
+
+def kv_store_dtype(policy):
+    if policy.kv_fmt is not None and policy.mode == "native":
+        return policy.kv_fmt.native_dtype
+    return tp.storage_dtype(policy.param_fmt, policy.mode)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_params(key, d_model, n_heads, n_kv_heads, head_dim, dtype,
+               qk_norm: bool = False, out_bias: bool = False):
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def _masked_softmax_attend(q, k, v, policy, *, causal, window, cap,
+                           q_offset, kv_len=None, chunk=512,
+                           windowed_slice=False):
+    """q [B,H,S,Dh] vs k/v [B,Hkv,T,Dh] -> [B,H,S,Dh]; scan over q chunks.
+
+    ``windowed_slice`` (beyond-paper perf knob): for sliding-window layers,
+    each query chunk attends only to the KV slice its window can reach —
+    compute drops from O(S*T) to O(S*(window+chunk)).  The baseline
+    computes full dense scores and masks (what the paper-faithful chunked
+    schedule does)."""
+    b, h, s, dh = q.shape
+    _, hkv, t, _ = k.shape
+    group = h // hkv
+    scale = dh ** -0.5
+    kv_len = t if kv_len is None else kv_len
+    qg = q.reshape(b, hkv, group, s, dh)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    qc = jnp.moveaxis(qg.reshape(b, hkv, group, n_chunks, chunk, dh), 3, 0)
+
+    # KV slice width per chunk when window-sliced (128-aligned)
+    use_slice = (windowed_slice and window is not None and causal
+                 and q_offset == 0 and window + chunk < t)
+    w_eff = min(-(-(window + chunk) // 128) * 128, t) if use_slice else t
+    if use_slice:
+        # broadcast KV to full heads ONCE, outside the chunk loop, so each
+        # chunk's slice + einsums are collective-free on a head-sharded
+        # layout (GQA's kv-head count rarely divides the model axis; the
+        # baseline pays that reshard once per layer — paying it per chunk
+        # would dominate, measured in §Perf iteration B_j1)
+        kf = shard(jnp.repeat(k, group, axis=1), bspec("model", None, None))
+        vf = shard(jnp.repeat(v, group, axis=1), bspec("model", None, None))
+        qf = qc.reshape(n_chunks, b, h, chunk, dh)      # [nc,B,H,c,Dh]
+
+    def attend_chunk(ci, qi):
+        if use_slice:
+            # qi: [B,H,c,Dh]; KV slice is local to every device
+            start = jnp.clip(ci * chunk + chunk - w_eff, 0, t - w_eff)
+            ks = jax.lax.dynamic_slice_in_dim(kf, start, w_eff, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(vf, start, w_eff, axis=2)
+            k_idx = start + jnp.arange(w_eff)
+            scores = tp.tp_einsum("bhcd,bhtd->bhct", qi, ks, policy,
+                                  out_fmt="fp32") * scale
+        else:
+            ks, vs = k, v
+            k_idx = jnp.arange(t)
+            scores = tp.tp_einsum("bhgcd,bhtd->bhgct", qi, ks, policy,
+                                  out_fmt="fp32") * scale
+        scores = softcap(scores, cap)
+        q_idx = q_offset + ci * chunk + jnp.arange(chunk)
+        mask = (k_idx[None, :] < kv_len)
+        if causal:
+            mask = mask & (q_idx[:, None] >= k_idx[None, :])
+        if window is not None:
+            mask = mask & ((q_idx[:, None] - k_idx[None, :]) < window)
+        mask_b = mask[None, None] if use_slice else mask[None, None, None]
+        scores = jnp.where(mask_b, scores, NEG_INF)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.exp(scores - jnp.where(m <= NEG_INF / 2, 0.0, m))
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        if use_slice:
+            return tp.tp_einsum("bhct,bhtd->bhcd", p, vs, policy,
+                                out_fmt="fp32")
+        return tp.tp_einsum("bhgct,bhtd->bhgcd", p, vs, policy,
+                            out_fmt="fp32")
+
+    dv = v.shape[-1]
+    if use_slice:
+        out = jax.lax.map(lambda args: attend_chunk(*args),
+                          (jnp.arange(n_chunks), qf))
+        out = jnp.moveaxis(out, 0, 2).reshape(b, h, n_chunks * chunk, dv)
+        return out[..., :s, :]
+    out = jax.lax.map(lambda args: attend_chunk(*args),
+                      (jnp.arange(n_chunks), qc))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, group, n_chunks * chunk, dv)
+    return out[..., :s, :].reshape(b, h, s, dv)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, Hkv, Smax, Dh]
+    v: jnp.ndarray
+
+
+def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
+                  positions, causal=True, window=None, attn_softcap=None,
+                  rope_theta=1e4, qk_norm=False, norm_eps=1e-6,
+                  cache: Optional[KVCache] = None,
+                  cache_pos: Optional[jnp.ndarray] = None,
+                  kv_states=None, use_rope=True, chunk: int = 512,
+                  windowed_slice: bool = False):
+    """Returns (out [B,S,D], new_cache).
+
+    Train/prefill: cache None.  Decode: x is [B,1,D], cache holds Smax slots,
+    cache_pos is the write index.  Cross-attention: kv_states provides
+    encoder states (no cache update, no rope).
+    """
+    b, s, d = x.shape
+    q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
+    q = q.reshape(b, s, n_heads, head_dim)
+    kv_src = kv_states if kv_states is not None else x
+    t = kv_src.shape[1]
+    k = tp.tp_einsum("bsd,de->bse", kv_src, params["wk"], policy)
+    v = tp.tp_einsum("bsd,de->bse", kv_src, params["wv"], policy)
+    k = k.reshape(b, t, n_kv_heads, head_dim)
+    v = v.reshape(b, t, n_kv_heads, head_dim)
+
+    if qk_norm:
+        q = rmsnorm(q, params["q_norm"], norm_eps)
+        k = rmsnorm(k, params["k_norm"], norm_eps)
+    if use_rope:
+        kv_pos = positions if kv_states is None else jnp.arange(t)
+        q = apply_rope(q.swapaxes(1, 2), positions, rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), kv_pos, rope_theta).swapaxes(1, 2)
+
+    q = shard(q.swapaxes(1, 2), bspec("model", None, None))
+    k = shard(k.swapaxes(1, 2), bspec("model", None, None))
+    v = shard(v.swapaxes(1, 2), bspec("model", None, None))
+
+    new_cache = None
+    if kv_states is not None:
+        # cross-attention: optionally persist the encoder K/V into the
+        # cache (prefill), attend non-causally over all encoder states.
+        if cache is not None:
+            cdt = cache.k.dtype
+            new_cache = KVCache(
+                jax.lax.dynamic_update_slice(cache.k, k.astype(cdt),
+                                             (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(cache.v, v.astype(cdt),
+                                             (0, 0, 0, 0)))
+        out = _masked_softmax_attend(q, k, v, policy, causal=False,
+                                     window=None, cap=attn_softcap,
+                                     q_offset=0, chunk=chunk)
+    elif cache is not None:
+        cdt = cache.k.dtype
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cdt), (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cdt), (0, 0, cache_pos, 0))
+        new_cache = KVCache(ck, cv)
+        if s > 1:
+            # prefill: the prompt itself is the entire live cache content —
+            # attend chunked over the *current* k/v (O(chunk*S) memory)
+            # instead of densely over the cache buffer.
+            out = _masked_softmax_attend(
+                q, k, v, policy, causal=causal, window=window,
+                cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
+                windowed_slice=windowed_slice)
+        else:
+            kv_len = cache_pos + s
+            out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
+                                 window=window, cap=attn_softcap)
+    else:
+        out = _masked_softmax_attend(
+            q, k, v, policy, causal=causal,
+            window=window, cap=attn_softcap, q_offset=0, chunk=chunk,
+            windowed_slice=windowed_slice)
+
+    out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
+    proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
+    return shard(proj, residual_spec()), new_cache
+
+
+def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap):
+    """q [B,H,1,Dh] vs cache [B,Hkv,Smax,Dh]."""
+    b, h, s, dh = q.shape
+    _, hkv, smax, _ = ck.shape
+    group = h // hkv
+    qg = q.reshape(b, hkv, group * s, dh)
+    scores = tp.tp_einsum("bhqd,bhtd->bhqt", qg, ck, policy,
+                          out_fmt="fp32") * (dh ** -0.5)
+    scores = softcap(scores, cap)
+    idx = jnp.arange(smax)
+    mask = idx[None, :] < kv_len
+    if window is not None:
+        mask = mask & (idx[None, :] > kv_len - 1 - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = tp.tp_einsum("bhqt,bhtd->bhqd", p, cv, policy, out_fmt="fp32")
+    return out.reshape(b, h, s, dh)
+
+
+def init_kv_cache(batch, n_kv_heads, max_len, head_dim, dtype):
+    shape = (batch, n_kv_heads, max_len, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cross_attend_cached(x, params, cache: KVCache, policy, *, n_heads,
+                        n_kv_heads, head_dim):
+    """Decode-time cross-attention against fully-populated cached K/V
+    (whisper decoder: the encoder states never change during decoding)."""
+    b, s, d = x.shape
+    q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
+    q = q.reshape(b, s, n_heads, head_dim).swapaxes(1, 2)
+    out = _decode_attend(q, cache.k, cache.v, policy,
+                         kv_len=cache.k.shape[2], window=None, cap=None)
+    out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
+    return tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray   # [B, Smax, kv_lora]
+    k_pe: jnp.ndarray   # [B, Smax, rope_dim]
+
+
+def mla_params(key, d_model, n_heads, *, q_lora, kv_lora, nope_dim, rope_dim,
+               v_head_dim, dtype):
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], d_model, kv_lora, dtype),
+        "w_kr": dense_init(ks[1], d_model, rope_dim, dtype),
+        "kv_norm": jnp.zeros((kv_lora,), dtype),
+        "w_uk": dense_init(ks[2], kv_lora, n_heads * nope_dim, dtype),
+        "w_uv": dense_init(ks[3], kv_lora, n_heads * v_head_dim, dtype),
+        "wo": dense_init(ks[4], n_heads * v_head_dim, d_model, dtype),
+    }
+    if q_lora:
+        p["w_dq"] = dense_init(ks[5], d_model, q_lora, dtype)
+        p["q_norm"] = jnp.zeros((q_lora,), dtype)
+        p["w_uq"] = dense_init(ks[6], q_lora, n_heads * (nope_dim + rope_dim),
+                               dtype)
+    else:
+        p["w_q"] = dense_init(ks[5], d_model, n_heads * (nope_dim + rope_dim),
+                              dtype)
+    return p
+
+
+def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
+                  v_head_dim, positions, rope_theta=1e4, norm_eps=1e-6,
+                  cache: Optional[MLACache] = None,
+                  cache_pos: Optional[jnp.ndarray] = None, chunk: int = 512):
+    """MLA with decoupled rope.  Prefill expands k/v; decode runs the
+    absorbed form directly against the latent cache."""
+    b, s, d = x.shape
+    qd = nope_dim + rope_dim
+
+    if "w_dq" in params:
+        cq = tp.tp_einsum("bsd,dr->bsr", x, params["w_dq"], policy)
+        cq = rmsnorm(cq, params["q_norm"], norm_eps)
+        q = tp.tp_einsum("bsr,re->bse", cq, params["w_uq"], policy)
+    else:
+        q = tp.tp_einsum("bsd,de->bse", x, params["w_q"], policy)
+    q = q.reshape(b, s, n_heads, qd)
+    q_nope, q_pe = q[..., :nope_dim], q[..., nope_dim:]
+    q_pe = apply_rope(q_pe.swapaxes(1, 2), positions, rope_theta).swapaxes(1, 2)
+
+    c_kv = tp.tp_einsum("bsd,dr->bsr", x, params["w_dkv"], policy)
+    c_kv = rmsnorm(c_kv, params["kv_norm"], norm_eps)
+    k_pe = tp.tp_einsum("bsd,dr->bsr", x, params["w_kr"], policy)
+    k_pe = apply_rope(k_pe[:, :, None], positions, rope_theta)[:, :, 0]
+
+    scale = (nope_dim + rope_dim) ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        cdt = cache.c_kv.dtype
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cdt),
+                                          (0, cache_pos, 0))
+        cp = jax.lax.dynamic_update_slice(cache.k_pe, k_pe.astype(cdt),
+                                          (0, cache_pos, 0))
+        new_cache = MLACache(cc, cp)
+    if cache is not None and s == 1:
+        kv_len = cache_pos + s
+        # absorbed decode: q_nope -> latent space via W_uk
+        cc, cp = new_cache
+        kv_lora = cc.shape[-1]
+        w_uk = params["w_uk"].reshape(kv_lora, n_heads, nope_dim)
+        q_lat = tp.tp_einsum("bshn,rhn->bshr", q_nope, w_uk, policy)
+        smax = cc.shape[1]
+        scores = (tp.tp_einsum("bshr,btr->bhst", q_lat, cc, policy,
+                               out_fmt="fp32")
+                  + tp.tp_einsum("bshr,btr->bhst", q_pe, cp, policy,
+                                 out_fmt="fp32")) * scale
+        mask = jnp.arange(smax)[None, :] < kv_len
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        o_lat = tp.tp_einsum("bhst,btr->bshr", p, cc, policy, out_fmt="fp32")
+        w_uv = params["w_uv"].reshape(kv_lora, n_heads, v_head_dim)
+        out = tp.tp_einsum("bshr,rhv->bshv", o_lat, w_uv, policy)
+    else:
+        # train / prefill (cache written above if present): expanded form
+        k_nope = tp.tp_einsum("bsr,re->bse", c_kv, params["w_uk"], policy)
+        k_nope = k_nope.reshape(b, s, n_heads, nope_dim)
+        v = tp.tp_einsum("bsr,re->bse", c_kv, params["w_uv"], policy)
+        v = v.reshape(b, s, n_heads, v_head_dim)
+        k_pe_b = jnp.broadcast_to(k_pe[:, :, None], (b, s, n_heads, rope_dim))
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1).swapaxes(1, 2)
+        kk = jnp.concatenate([k_nope, k_pe_b], axis=-1).swapaxes(1, 2)
+        vv = v.swapaxes(1, 2)
+        qq = shard(qq, bspec("model", None, None))
+        kk = shard(kk, bspec("model", None, None))
+        vv = shard(vv, bspec("model", None, None))
+        # _masked_softmax_attend scales by qd**-0.5 internally == MLA scale
+        out = _masked_softmax_attend(qq, kk, vv, policy, causal=True,
+                                     window=None, cap=None, q_offset=0,
+                                     chunk=chunk)
+        out = out.swapaxes(1, 2)
+
+    out = out.reshape(b, s, n_heads * v_head_dim)
+    proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
+    return shard(proj, residual_spec()), new_cache
+
+
+def init_mla_cache(batch, max_len, kv_lora, rope_dim, dtype):
+    return MLACache(jnp.zeros((batch, max_len, kv_lora), dtype),
+                    jnp.zeros((batch, max_len, rope_dim), dtype))

@@ -1,0 +1,160 @@
+"""Common policy-aware layers: norms, MLPs, rotary embeddings, embedding
+tables.  Every matmul routes through core.ops.tp_einsum so the active
+PrecisionPolicy (FPnew's per-op-group format configuration) applies
+uniformly across all ten architectures.
+
+Sharding convention (Megatron-style, GSPMD-propagated):
+  activations [B, S, D]   -> P(BATCH_AXES, None, None)
+  col-parallel weights    -> P(None, "model")
+  row-parallel weights    -> P("model", None)
+  embeddings [V, D]       -> P("model", None)   (vocab-sharded)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import ops as tp
+from ..core.policy import PrecisionPolicy, get_policy
+from jax.sharding import PartitionSpec as P
+
+# data-parallel mesh axes for the current launch; the train/serve step
+# factories set this from the mesh before tracing (("pod","data") on the
+# multi-pod mesh, ("data",) on a single pod, () on a single device).
+_BATCH_AXES = ("data",)
+_SEQ_PARALLEL = False
+
+
+def set_batch_axes(axes):
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def set_seq_parallel(enable: bool):
+    global _SEQ_PARALLEL
+    _SEQ_PARALLEL = bool(enable)
+
+
+def residual_spec() -> P:
+    """Sharding of the [B, S, D] residual stream: sequence-parallel mode
+    shards S over the model axis (GSPMD turns the row-parallel all-reduce
+    into reduce-scatter + all-gather and runs norms on S/TP shards)."""
+    return P(_BATCH_AXES, "model" if _SEQ_PARALLEL else None, None)
+
+
+def batch_axes():
+    return _BATCH_AXES
+
+
+def shard(x, spec):
+    """Sharding hint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def bspec(*rest) -> P:
+    """P(batch_axes, *rest) — activation sharding helper."""
+    return P(_BATCH_AXES, *rest)
+
+
+def param_dtype(policy: PrecisionPolicy):
+    return tp.storage_dtype(policy.param_fmt, policy.mode)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    # d^-1/2 keeps tied-unembedding logits at unit scale
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * d ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (always f32 — FPnew keeps COMP/normalization paths in full precision)
+# ---------------------------------------------------------------------------
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [..., S, D] (D even), positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x, w_gate, w_up, w_down, policy):
+    """SwiGLU MLP: the ADDMUL group runs under the multi-format FMA policy,
+    the activation under the DIVSQRT/elementwise policy."""
+    g = tp.tp_einsum("bsd,df->bsf", x, w_gate, policy)
+    u = tp.tp_einsum("bsd,df->bsf", x, w_up, policy)
+    h = tp.tp_elementwise("silu", g, policy=policy) * u
+    h = shard(h, bspec(None, "model"))
+    out = tp.tp_einsum("bsf,fd->bsd", h, w_down, policy)
+    return shard(out, residual_spec())
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down, policy):
+    h = tp.tp_einsum("bsd,df->bsf", x, w_up, policy) + b_up
+    h = tp.tp_elementwise("gelu", h, policy=policy)
+    h = shard(h, bspec(None, "model"))
+    out = tp.tp_einsum("bsf,fd->bsd", h, w_down, policy) + b_down
+    return shard(out, residual_spec())
+
+
+def mlp_params(key, d, f, dtype, kind="swiglu"):
+    ks = jax.random.split(key, 4)
+    if kind == "swiglu":
+        return {"gate": dense_init(ks[0], d, f, dtype),
+                "up": dense_init(ks[1], d, f, dtype),
+                "down": dense_init(ks[2], f, d, dtype)}
+    return {"up": dense_init(ks[0], d, f, dtype),
+            "b_up": jnp.zeros((f,), dtype),
+            "down": dense_init(ks[1], f, d, dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)

@@ -1,0 +1,170 @@
+"""Sharding rules: parameter / cache / input PartitionSpecs for any arch.
+
+Megatron-style tensor parallelism over the ``model`` mesh axis, data
+parallelism over ``("pod", "data")`` (or whatever batch axes the launch
+configures), with rank-agnostic name-based rules so the same table covers
+plain, stacked-by-scan ([R, ...]) and expert ([E, ...]) parameters.
+
+Every rule is divisibility-checked against the actual mesh: a dimension
+that does not divide by the axis size falls back to replication (e.g.
+xlstm's 8-wide gate projection on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core.policy import PrecisionPolicy
+from .transformer import Caches
+
+# parameter-name -> role.  col = shard output (last) dim, row = shard input
+# (second-to-last) dim, expert = shard dim -3, vocab = shard dim -2,
+# rep = replicate.
+_PARAM_RULES = {
+    # embeddings
+    "embed": "vocab", "lm_head": "col", "pos_embed": "rep", "pos": "rep",
+    # attention / mla
+    "wq": "col", "wk": "col", "wv": "col", "wo": "row",
+    "w_q": "col", "w_dq": "col", "w_uq": "col", "w_dkv": "col",
+    "w_kr": "col", "w_uk": "col", "w_uv": "col",
+    # dense mlp
+    "gate": "col", "up": "col", "down": "row",
+    "b_up": "col1", "b_down": "rep",
+    # moe (3D expert tensors)
+    "router": "rep", "w_gate": "expert", "w_up": "expert", "w_down": "expert",
+    # mamba2 / mlstm / slstm
+    "in_proj": "col", "out_proj": "row", "conv_w": "col", "conv_b": "col1",
+    "up_proj": "col", "down_proj": "row", "w_if": "col",
+    # sLSTM: gates + recurrence fully replicated — ANY sharded dim in the
+    # per-token scan body emits a collective every timestep (measured:
+    # 24k tiny ARs = 57s of the step bound)
+    "w_gates": "rep",
+    "r_gates": "rep",  # sLSTM recurrence must be collective-free per token
+    # mLSTM headwise projections: q/k replicated (local qk^T), v sharded
+    # mLSTM inner tensors are model-replicated end-to-end: with 4 heads
+    # and a chunked state scan, any model-axis sharding inside the mixer
+    # forces per-chunk resharding (measured 0.84 GB/layer @ S=256 -> ~57s
+    # of collective time); TP applies only to up/down projections.
+    "wq_h": "rep", "wk_h": "rep", "wv_h": "rep",
+    "A_log": "rep", "D": "rep", "dt_bias": "rep", "b_if": "rep",
+    "b_gates": "rep",
+    # norms
+    "g": "rep", "b": "rep", "ln": "rep", "norm": "rep",
+    "q_norm": "rep", "k_norm": "rep", "kv_norm": "rep",
+}
+
+
+def _spec_for_role(role: str, shape: Tuple[int, ...], model_axis: str,
+                   model_size: int) -> P:
+    rank = len(shape)
+
+    def ok(dim_idx):
+        return shape[dim_idx] % model_size == 0 and shape[dim_idx] > 0
+
+    if role == "col" and rank >= 2 and ok(-1):
+        return P(*([None] * (rank - 1) + [model_axis]))
+    if role == "col1" and rank >= 1 and ok(-1):
+        return P(*([None] * (rank - 1) + [model_axis]))
+    if role == "row" and rank >= 2 and ok(-2):
+        return P(*([None] * (rank - 2) + [model_axis, None]))
+    if role == "expert" and rank >= 3 and ok(-3):
+        return P(*([None] * (rank - 3) + [model_axis, None, None]))
+    if role == "vocab" and rank >= 2 and ok(-2):
+        return P(*([None] * (rank - 2) + [model_axis, None]))
+    return P()
+
+
+def param_specs(params, model_axis: str = "model", model_size: int = 16,
+                overrides: Optional[dict] = None):
+    """PartitionSpec pytree mirroring ``params`` (works on real arrays or
+    ShapeDtypeStructs).  ``overrides``: name -> role replacements (e.g.
+    {"embed": "rep"} for a replicated embedding table)."""
+    rules = dict(_PARAM_RULES, **(overrides or {}))
+
+    def visit(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        role = rules.get(name, "rep")
+        return _spec_for_role(role, leaf.shape, model_axis, model_size)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# caches and inputs
+# ---------------------------------------------------------------------------
+def batch_spec_axes(batch: int, batch_axes: Tuple[str, ...], mesh) -> Optional[Tuple[str, ...]]:
+    """Batch sharding only when divisible (long_500k has batch 1)."""
+    if not batch_axes:
+        return None
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape[a]
+    return batch_axes if batch % size == 0 and batch >= size else None
+
+
+def cache_specs(cfg: ModelConfig, caches, *, batch: int, mesh,
+                batch_axes: Tuple[str, ...] = ("data",),
+                model_axis: str = "model"):
+    """Spec pytree for a Caches object.  Attention KV: shard heads over
+    ``model`` when divisible, else shard the sequence dim (flash-decode
+    style — GSPMD all-reduces the softmax statistics).  SSM states: shard
+    heads/features.  Small normalizer/stabilizer states replicate."""
+    msize = mesh.shape[model_axis]
+    ba = batch_spec_axes(batch, batch_axes, mesh)
+
+    def leaf_spec(field: str, shape, lead):
+        body = shape[1 + len(lead):]
+
+        def spec(*rest):
+            return P(*lead, ba, *rest)
+
+        def m(dim):
+            return model_axis if body[dim] % msize == 0 else None
+
+        if field in ("k", "v"):                      # KVCache [B,Hkv,S,Dh]
+            if body[0] % msize == 0:
+                return spec(model_axis, None, None)
+            return spec(None, m(1), None)
+        if field in ("c_kv", "k_pe"):                # MLA latent [B,S,r]
+            return spec(m(0), None)
+        if field == "conv":                          # [B,K-1,conv_dim]
+            return spec(None, m(1))
+        if field == "ssm":                           # [B,H,P,N]
+            return spec(m(0), None, None)
+        if field == "c" and len(body) == 3:          # mLSTM C [B,H,dk,dv]
+            return spec(None, None, m(2))
+        return spec(*([None] * len(body)))           # nrm/m/h/slstm: replicate
+
+    def walk(node, lead):
+        if node is None:
+            return None
+        if isinstance(node, dict):
+            return {k: walk(v, lead) for k, v in node.items()}
+        if hasattr(node, "_fields"):                 # cache NamedTuples
+            return type(node)(*[leaf_spec(f, getattr(node, f).shape, lead)
+                                for f in node._fields])
+        if isinstance(node, (tuple, list)):
+            return tuple(walk(x, lead) for x in node)
+        raise TypeError(type(node))
+
+    return Caches(prefix=walk(caches.prefix, ()),
+                  pattern=walk(caches.pattern, (None,)),
+                  suffix=walk(caches.suffix, ()))
+
+
+def input_specs_train(batch: int, mesh, batch_axes=("data",)):
+    ba = batch_spec_axes(batch, batch_axes, mesh)
+    return P(ba, None)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

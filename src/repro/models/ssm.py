@@ -1,0 +1,485 @@
+"""State-space / recurrent mixers: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+These are the sub-quadratic architectures of the assignment (zamba2-1.2b,
+xlstm-1.3b).  Transprecision mapping (paper §II.B.2): all projections run
+under the multi-format FMA policy (ADDMUL group); the recurrent *state* is
+the accumulation destination of an expanding FMA and therefore stays in
+``acc_fmt`` (f32) — exactly the paper's ``dst_fmt`` contract — while gates
+and normalizers (COMP group) are computed in f32.
+
+Each mixer ships three forms:
+  *_chunked : chunkwise-parallel over the sequence (training / prefill),
+              lax.scan over chunks so HLO size is O(1) in sequence length.
+  *_step    : single-token recurrence against a carried state (decode).
+  init_*_cache : the decode-state pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import ops as tp
+from .layers import bspec, dense_init, residual_spec, rmsnorm, shard
+
+F32 = jnp.float32
+
+# cost-extraction hook: fully unroll the sLSTM time scan so XLA's
+# cost_analysis sees every step (trip-N while bodies are counted once)
+_UNROLL_TIME = False
+
+
+def set_unroll_time(enable: bool) -> None:
+    global _UNROLL_TIME
+    _UNROLL_TIME = bool(enable)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 — chunked SSD (zamba2 backbone)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+class Mamba2Cache(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv-1, conv_dim] rolling conv window
+    ssm: jnp.ndarray    # [B, H, head_dim, d_state] f32 state
+
+
+def mamba2_params(key, cfg: Mamba2Config, dtype):
+    ks = jax.random.split(key, 4)
+    di, cd, h = cfg.d_inner, cfg.conv_dim, cfg.n_heads
+    # in_proj emits [z (di), xBC (cd), dt (h)]
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * di
+                              + 2 * cfg.n_groups * cfg.d_state + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, cd), F32)
+                   * cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=F32)),   # A = -exp(A_log)
+        "D": jnp.ones((h,), F32),
+        "dt_bias": jnp.zeros((h,), F32),
+        "norm": jnp.zeros((di,), dtype),     # gated RMSNorm before out_proj
+        "out_proj": dense_init(ks[2], di, cfg.d_model, dtype),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg: Mamba2Config):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  xbc [B,S,C]; w [K,C]; state
+    [B,K-1,C] holds the trailing window of the previous segment."""
+    k = w.shape[0]
+    pad = (jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+           if state is None else state.astype(xbc.dtype))
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(F32)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out + b.astype(F32)), new_state
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j < k <= i} x[..., k].
+    Lower-triangular; -inf above the diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # sum_(j, i]
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_mix(x, params, cfg: Mamba2Config, policy, *,
+               cache: Optional[Mamba2Cache] = None):
+    """x [B,S,D] -> (y [B,S,D], new_cache or None).
+
+    Chunked SSD: scan over S/chunk chunks carrying the [B,H,P,N] state.
+    When ``cache`` is given (decode, S small) the same code path runs with
+    the cached conv window / ssm state as the initial carry.
+    """
+    b, s, d = x.shape
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxbcdt = tp.tp_einsum("bsd,de->bse", x, params["in_proj"], policy,
+                          out_fmt="fp32")
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+    conv_state = cache.conv if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xin = xbc[..., :cfg.d_inner].reshape(b, s, h, p)
+    B_ = xbc[..., cfg.d_inner:cfg.d_inner + g * n].reshape(b, s, g, n)
+    C_ = xbc[..., cfg.d_inner + g * n:].reshape(b, s, g, n)
+    # broadcast groups to heads
+    rep = h // g
+    Bh = jnp.repeat(B_, rep, axis=2)                  # [B,S,H,N]
+    Ch = jnp.repeat(C_, rep, axis=2)
+    A = -jnp.exp(params["A_log"])                     # [H], negative
+    dt = jax.nn.softplus(dt + params["dt_bias"])      # [B,S,H]
+
+    xin = shard(xin, bspec(None, "model", None))
+    q = min(cfg.chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked layout [B, nc, q, ...] -> scan over nc
+    xc = xin.reshape(b, nc, q, h, p)
+    Bc = Bh.reshape(b, nc, q, h, n)
+    Cc = Ch.reshape(b, nc, q, h, n)
+    dtc = dt.reshape(b, nc, q, h)
+
+    init = (cache.ssm.astype(F32) if cache is not None
+            else jnp.zeros((b, h, p, n), F32))
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dq = inp                          # [B,q,H,*]
+        da = dq * A                                   # [B,q,H] log-decay
+        da_t = da.transpose(0, 2, 1)                  # [B,H,q]
+        L = jnp.exp(_segsum(da_t))                    # [B,H,q,q]
+        # intra-chunk: Y[i] = sum_j<=i (C_i . B_j) L_ij dt_j x_j
+        cb = tp.tp_einsum("bihn,bjhn->bhij", cq, bq, policy, out_fmt="fp32")
+        w = cb * L * dq.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = tp.tp_einsum("bhij,bjhp->bihp", w, xq, policy,
+                               out_fmt="fp32")
+        # inter-chunk: contribution of the carried state
+        cumda = jnp.cumsum(da_t, axis=-1)             # [B,H,q]
+        y_inter = tp.tp_einsum("bihn,bhpn->bihp", cq, state, policy,
+                               out_fmt="fp32")
+        y = y_intra + y_inter * jnp.exp(cumda).transpose(0, 2, 1)[..., None]
+        # state update: S' = exp(sum da) S + sum_j exp(sum_{k>j} da) dt_j x_j B_j^T
+        total = cumda[..., -1]                        # [B,H]
+        decay_j = jnp.exp(total[..., None] - cumda)   # [B,H,q]
+        wx = xq * (dq * decay_j.transpose(0, 2, 1))[..., None]
+        new_state = (state * jnp.exp(total)[..., None, None]
+                     + tp.tp_einsum("bjhp,bjhn->bhpn", wx, bq, policy,
+                                    out_fmt="fp32"))
+        return new_state, y
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3, 4),
+          Cc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_step, init, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, p)[:, :s]
+    y = y + xc.reshape(b, nc * q, h, p)[:, :s] * params["D"][:, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    # gated RMSNorm (Mamba2 norm_before_gate=False): norm(y * silu(z))
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = tp.tp_einsum("bse,ed->bsd", y, params["out_proj"], policy)
+    new_cache = Mamba2Cache(new_conv.astype(
+        cache.conv.dtype if cache is not None else jnp.bfloat16),
+        final_state) if cache is not None else None
+    return shard(out, residual_spec()), new_cache
+
+
+def init_mamba2_cache(batch, cfg: Mamba2Config, dtype):
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), F32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — matrix-memory LSTM, chunkwise parallel (xLSTM)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0
+    d_conv: int = 4
+    chunk: int = 128
+    # beyond-paper: materialize the intra-chunk [q, q] gate/weight tensors
+    # in bf16 (log-space stabilizers stay f32) — halves the dominant HBM
+    # term of the chunkwise mLSTM
+    narrow_intra: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.n_heads == 0
+        return self.d_inner // self.n_heads
+
+
+class MLSTMCache(NamedTuple):
+    conv: jnp.ndarray    # [B, d_conv-1, d_inner]
+    c: jnp.ndarray       # [B, H, dk, dv] matrix memory (f32)
+    nrm: jnp.ndarray     # [B, H, dk] normalizer (f32)
+    m: jnp.ndarray       # [B, H] log-stabilizer (f32)
+
+
+def mlstm_params(key, cfg: MLSTMConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * di, dtype),    # x branch + z gate
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), F32)
+                   * cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        # headwise (block-diagonal) projections, as in the xLSTM release.
+        # q/k are REPLICATED across the model axis (small; keeps the
+        # intra-chunk qk^T contraction collective-free — §Perf iteration),
+        # v stays column-sharded.
+        "wq_h": (jax.random.normal(ks[2], (h, cfg.head_dim, cfg.head_dim),
+                                   F32) * cfg.head_dim ** -0.5).astype(dtype),
+        "wk_h": (jax.random.normal(ks[3], (h, cfg.head_dim, cfg.head_dim),
+                                   F32) * cfg.head_dim ** -0.5).astype(dtype),
+        "wv_h": (jax.random.normal(ks[4], (h, cfg.head_dim, cfg.head_dim),
+                                   F32) * cfg.head_dim ** -0.5).astype(dtype),
+        "w_if": dense_init(ks[5], di, 2 * h, dtype),       # i/f gate heads
+        "b_if": jnp.concatenate([jnp.zeros((h,), F32),
+                                 jnp.linspace(3.0, 6.0, h)]).astype(F32),
+        "ln": jnp.zeros((di,), dtype),                     # per-head out norm
+        "down_proj": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def mlstm_mix(x, params, cfg: MLSTMConfig, policy, *,
+              cache: Optional[MLSTMCache] = None):
+    """Chunkwise-parallel mLSTM with log-space gate stabilization.
+
+    Within a chunk, attention-like weights W_ij = exp(F_i - F_j + logi_j - m)
+    give the intra-chunk term; the inter-chunk term reads the carried matrix
+    memory C.  All state math in f32 (the expanding-FMA destination)."""
+    b, s, d = x.shape
+    h, dk = cfg.n_heads, cfg.head_dim
+    act_fmt = "fp16alt" if cfg.narrow_intra else "fp32"
+    up = tp.tp_einsum("bsd,de->bse", x, params["up_proj"], policy,
+                      out_fmt=act_fmt)
+    xb, z = up[..., :cfg.d_inner], up[..., cfg.d_inner:]
+    conv_state = cache.conv if cache is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xc = xc.astype(up.dtype)
+    xch = xc.reshape(b, s, h, dk)
+    xbh = xb.reshape(b, s, h, dk)
+    q = tp.tp_einsum("bshe,hef->bshf", xch, params["wq_h"], policy,
+                     out_fmt=act_fmt)
+    k = tp.tp_einsum("bshe,hef->bshf", xch, params["wk_h"], policy,
+                     out_fmt=act_fmt) * dk ** -0.5
+    v = tp.tp_einsum("bshe,hef->bshf", xbh, params["wv_h"], policy,
+                     out_fmt=act_fmt)
+    gates = (tp.tp_einsum("bse,eg->bsg", xb, params["w_if"], policy,
+                          out_fmt="fp32") + params["b_if"])
+    logi = gates[..., :h]                             # [B,S,H] log input gate
+    logf = jax.nn.log_sigmoid(gates[..., h:])         # log forget gate
+
+    # inner chunk tensors are batch-sharded ONLY (model-replicated): any
+    # model sharding here reshards every chunk of the state scan
+    q = shard(q, bspec(None, None, None))
+    k = shard(k, bspec(None, None, None))
+    v = shard(v, bspec(None, None, None))
+
+    qq = min(cfg.chunk, s)
+    nc = -(-s // qq)
+    pad = nc * qq - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(t, extra):
+        return t.reshape((b, nc, qq) + extra).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra))))
+
+    qc, kc, vc = (to_chunks(t, (h, dk)) for t in (q, k, v))
+    ic = to_chunks(logi, (h,))
+    fc = to_chunks(logf, (h,))
+
+    if cache is not None:
+        init = (cache.c.astype(F32), cache.nrm.astype(F32),
+                cache.m.astype(F32))
+    else:
+        init = (jnp.zeros((b, h, dk, dk), F32), jnp.zeros((b, h, dk), F32),
+                jnp.full((b, h), -1e30, F32))
+
+    def chunk_step(carry, inp):
+        C, nrm, m = carry
+        qi, ki, vi, li, fi = inp                      # [B,q,H,*], [B,q,H]
+        fT = fi.transpose(0, 2, 1)                    # [B,H,q]
+        lT = li.transpose(0, 2, 1)
+        F_cum = jnp.cumsum(fT, axis=-1)               # [B,H,q] sum_{k<=i} logf
+        # intra log-weights D_ij = F_i - F_j + logi_j  (j <= i)
+        D = _segsum(fT) + lT[:, :, None, :]           # [B,H,q,q]
+        # stabilizers
+        m_intra = jnp.max(D, axis=-1)                 # [B,H,q]
+        m_inter = F_cum + m[..., None]                # [B,H,q]
+        m_i = jnp.maximum(m_intra, m_inter)
+        intra_dt = jnp.bfloat16 if cfg.narrow_intra else F32
+        W = jnp.exp(D - m_i[..., None]).astype(intra_dt)  # [B,H,q,q]
+        qk = tp.tp_einsum("bihe,bjhe->bhij", qi, ki, policy,
+                          out_fmt="fp16alt" if cfg.narrow_intra else "fp32")
+        wq_ = (W * qk).astype(intra_dt)
+        h_intra = tp.tp_einsum("bhij,bjhe->bihe", wq_, vi, policy,
+                               out_fmt="fp32")
+        inter_scale = jnp.exp(m_inter - m_i)          # [B,H,q]
+        h_inter = tp.tp_einsum("bihe,bhef->bihf", qi, C, policy,
+                               out_fmt="fp32") * inter_scale.transpose(
+                                   0, 2, 1)[..., None]
+        # normalizer: n_i = sum_j W_ij (q_i . k_j-dir) ... per xLSTM:
+        # n = max(|sum_j w_ij|, exp(-m)) with w = W @ (q.k) row sums
+        n_intra = jnp.sum(wq_.astype(F32), axis=-1)   # [B,H,q]
+        n_inter = tp.tp_einsum("bihe,bhe->bhi", qi, nrm, policy,
+                               out_fmt="fp32") * inter_scale
+        n_i = n_intra + n_inter                       # [B,H,q]
+        denom = jnp.maximum(jnp.abs(n_i), jnp.exp(-m_i))
+        h_out = (h_intra + h_inter) / denom.transpose(0, 2, 1)[..., None]
+        # carry update
+        F_tot = F_cum[..., -1]                        # [B,H]
+        m_new = jnp.maximum(F_tot + m, jnp.max(lT + (F_tot[..., None] - F_cum),
+                                               axis=-1))
+        kv_scale = jnp.exp(lT + F_tot[..., None] - F_cum - m_new[..., None])
+        kw = ki * kv_scale.transpose(0, 2, 1)[..., None]
+        C_new = (C * jnp.exp(F_tot + m - m_new)[..., None, None]
+                 + tp.tp_einsum("bjhe,bjhf->bhef", kw, vi, policy,
+                                out_fmt="fp32"))
+        nrm_new = (nrm * jnp.exp(F_tot + m - m_new)[..., None]
+                   + jnp.sum(kw, axis=1))
+        return (C_new, nrm_new, m_new), h_out
+
+    (C_f, n_f, m_f), ys = jax.lax.scan(chunk_step, init, (qc, kc, vc, ic, fc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * qq, h, dk)[:, :s]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(y, params["ln"])
+    y = y * jax.nn.silu(z)                            # output gate branch
+    out = tp.tp_einsum("bse,ed->bsd", y, params["down_proj"], policy)
+    new_cache = (MLSTMCache(new_conv.astype(cache.conv.dtype), C_f, n_f, m_f)
+                 if cache is not None else None)
+    return shard(out, residual_spec()), new_cache
+
+
+def init_mlstm_cache(batch, cfg: MLSTMConfig, dtype):
+    h, dk = cfg.n_heads, cfg.head_dim
+    return MLSTMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        c=jnp.zeros((batch, h, dk, dk), F32),
+        nrm=jnp.zeros((batch, h, dk), F32),
+        m=jnp.full((batch, h), -1e30, F32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory LSTM with exponential gating (xLSTM)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 4.0 / 3.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray    # [B, D] cell
+    nrm: jnp.ndarray  # [B, D] normalizer
+    m: jnp.ndarray    # [B, D] stabilizer
+    h: jnp.ndarray    # [B, D] hidden (recurrent input)
+
+
+def slstm_params(key, cfg: SLSTMConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dff = int(cfg.proj_factor * d)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),     # i,f,z,o from x
+        # block-diagonal recurrent matrix, one [dh, dh] block per head
+        "r_gates": (jax.random.normal(ks[1], (4, h, dh, dh), F32)
+                    * dh ** -0.5).astype(dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,), F32), jnp.linspace(3.0, 6.0, d),
+             jnp.zeros((2 * d,), F32)]).astype(F32),
+        "ln": jnp.zeros((d,), dtype),
+        "up": dense_init(ks[2], d, 2 * dff, dtype),        # gated FFN after
+        "down": dense_init(ks[3], dff, d, dtype),
+    }
+
+
+def slstm_mix(x, params, cfg: SLSTMConfig, policy, *,
+              cache: Optional[SLSTMCache] = None):
+    """Sequential scan over time (the sLSTM's memory mixing is inherently
+    recurrent — paper DIVSQRT-style latency/throughput trade, kept exact)."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    gx = tp.tp_einsum("bsd,dg->bsg", x, params["w_gates"], policy,
+                      out_fmt="fp32") + params["b_gates"]
+    if cache is not None:
+        init = (cache.c.astype(F32), cache.nrm.astype(F32),
+                cache.m.astype(F32), cache.h.astype(F32))
+    else:
+        zeros = jnp.zeros((b, d), F32)
+        init = (zeros, zeros, jnp.full((b, d), -1e30, F32), zeros)
+    r = params["r_gates"].astype(F32)
+
+    def step(carry, g_t):
+        c, nrm, m, h_prev = carry
+        hp = h_prev.reshape(b, h, dh)
+        rec = jnp.einsum("bhe,ghef->bghf", hp, r).reshape(b, 4 * d)
+        g = g_t + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)
+        i_ = jnp.exp(gi - m_new)
+        f_ = jnp.exp(gf + m - m_new)
+        c_new = f_ * c + i_ * jnp.tanh(gz)
+        n_new = jnp.maximum(f_ * nrm + i_, jnp.exp(-m_new))
+        h_new = jax.nn.sigmoid(go) * c_new / n_new
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c_f, n_f, m_f, h_f), ys = jax.lax.scan(step, init,
+                                            gx.transpose(1, 0, 2),
+                                            unroll=True if _UNROLL_TIME
+                                            else 1)
+    y = ys.transpose(1, 0, 2)                         # [B,S,D]
+    y = rmsnorm(y, params["ln"])
+    # gated FFN tail (part of the sLSTM block in xLSTM)
+    uu = tp.tp_einsum("bsd,df->bsf", y, params["up"], policy)
+    dff = uu.shape[-1] // 2
+    y = tp.tp_elementwise("gelu", uu[..., :dff], policy=policy) \
+        * uu[..., dff:]
+    out = tp.tp_einsum("bsf,fd->bsd", y, params["down"], policy)
+    new_cache = (SLSTMCache(c_f, n_f, m_f, h_f) if cache is not None
+                 else None)
+    return shard(out, residual_spec()), new_cache
+
+
+def init_slstm_cache(batch, cfg: SLSTMConfig, dtype):
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), F32)
+    return SLSTMCache(zeros, zeros, jnp.full((batch, d), -1e30, F32), zeros)

@@ -1,0 +1,517 @@
+"""Unified model composition for all assigned architectures.
+
+A model is: embedding (+ optional modality-frontend stub) -> a stack of
+layers described by ``cfg.prefix + cfg.pattern * repeats + cfg.suffix``
+(the pattern part runs under ``lax.scan`` with stacked weights, keeping HLO
+size O(1) in depth) -> final norm -> (tied) unembedding with chunked
+cross-entropy.
+
+Three entry points per model (the shapes of the assignment):
+  ``forward_train``  — [B, S] tokens -> scalar loss (train_4k)
+  ``prefill``        — [B, S] tokens -> (last-token logits, caches)  (prefill_32k)
+  ``decode_step``    — one token + caches -> (logits, caches)  (decode_32k/long_500k)
+
+Transprecision: every matmul routes through core.ops under the active
+PrecisionPolicy; caches store in ``policy.kv_fmt``; softmax/norm/router
+stay f32 (FPnew's COMP group).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import EncoderConfig, LayerSpec, ModelConfig
+from ..core import ops as tp
+from ..core.policy import PrecisionPolicy, get_policy
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import (batch_axes, bspec, dense_init, embed_init, gelu_mlp,
+                     layernorm, mlp_params, param_dtype, residual_spec,
+                     rmsnorm, shard, softcap, swiglu)
+
+F32 = jnp.float32
+
+#: embeddings/unembeddings are padded to a multiple of this so the vocab
+#: dimension shards evenly over any production model axis (16) and stays
+#: MXU-lane aligned (128) — standard practice (MaxText etc.); the pad tail
+#: is masked to -inf in logits and never trained or sampled.
+VOCAB_PAD = 256
+
+
+def padded_vocab(vocab: int) -> int:
+    return -(-vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+def _norm(x, p, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["g"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["g"], cfg.norm_eps)
+
+
+def _norm_params(cfg: ModelConfig, dtype):
+    p = {"g": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer init
+# ---------------------------------------------------------------------------
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": _norm_params(cfg, dtype)}
+    if spec.mixer == "gqa":
+        p["attn"] = attn.gqa_params(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype,
+                                    qk_norm=spec.qk_norm)
+    elif spec.mixer == "mla":
+        p["attn"] = attn.mla_params(
+            ks[0], cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+            kv_lora=cfg.kv_lora, nope_dim=cfg.nope_dim,
+            rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim, dtype=dtype)
+    elif spec.mixer == "mamba2":
+        p["attn"] = ssm.mamba2_params(ks[0], cfg.mamba, dtype)
+    elif spec.mixer == "mlstm":
+        p["attn"] = ssm.mlstm_params(ks[0], cfg.mlstm, dtype)
+    elif spec.mixer == "slstm":
+        p["attn"] = ssm.slstm_params(ks[0], cfg.slstm, dtype)
+    elif spec.mixer in ("shared_attn", "none"):
+        pass  # shared params live at top level / no mixer
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.cross_attn:
+        p["xattn"] = attn.gqa_params(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype)
+        p["norm_x"] = _norm_params(cfg, dtype)
+
+    if spec.ffn in ("swiglu", "gelu"):
+        p["mlp"] = mlp_params(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                              kind=spec.ffn if spec.ffn == "swiglu" else "gelu")
+        p["norm2"] = _norm_params(cfg, dtype)
+    elif spec.ffn == "moe":
+        p["mlp"] = moe_mod.moe_params(ks[2], cfg.d_model, cfg.moe, dtype)
+        p["norm2"] = _norm_params(cfg, dtype)
+    if spec.post_norms:
+        p["post1"] = _norm_params(cfg, dtype)
+        if spec.ffn != "none":
+            p["post2"] = _norm_params(cfg, dtype)
+    return p
+
+
+def init_shared_block(key, cfg: ModelConfig, dtype):
+    """zamba2: one attention+MLP block whose weights are reused at every
+    shared_attn position."""
+    sb = cfg.shared_block
+    ks = jax.random.split(key, 2)
+    p = {"norm1": _norm_params(cfg, dtype),
+         "attn": attn.gqa_params(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim, dtype),
+         "norm2": _norm_params(cfg, dtype),
+         "mlp": mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                           kind=sb.ffn if sb.ffn == "swiglu" else "gelu")}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     max_len: int, policy: PrecisionPolicy):
+    kv_dtype = attn.kv_store_dtype(policy)
+    c: dict = {}
+    if spec.mixer in ("gqa", "shared_attn"):
+        c["kv"] = attn.init_kv_cache(batch, cfg.n_kv_heads, max_len,
+                                     cfg.head_dim, kv_dtype)
+    elif spec.mixer == "mla":
+        c["kv"] = attn.init_mla_cache(batch, max_len, cfg.kv_lora,
+                                      cfg.rope_dim, kv_dtype)
+    elif spec.mixer == "mamba2":
+        c["kv"] = ssm.init_mamba2_cache(batch, cfg.mamba, kv_dtype)
+    elif spec.mixer == "mlstm":
+        c["kv"] = ssm.init_mlstm_cache(batch, cfg.mlstm, kv_dtype)
+    elif spec.mixer == "slstm":
+        c["kv"] = ssm.init_slstm_cache(batch, cfg.slstm, kv_dtype)
+    if spec.cross_attn:
+        enc_len = cfg.encoder.n_frames
+        c["xkv"] = attn.init_kv_cache(batch, cfg.n_kv_heads, enc_len,
+                                      cfg.head_dim, kv_dtype)
+    return c
+
+
+class Caches(NamedTuple):
+    prefix: Tuple
+    pattern: Any          # stacked [R, ...] pytree
+    suffix: Tuple
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                policy: PrecisionPolicy) -> Caches:
+    mk = lambda spec: init_layer_cache(spec, cfg, batch, max_len, policy)
+    pattern_one = tuple(mk(s) for s in cfg.pattern)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.repeats,) + x.shape),
+        pattern_one)
+    return Caches(prefix=tuple(mk(s) for s in cfg.prefix),
+                  pattern=stacked,
+                  suffix=tuple(mk(s) for s in cfg.suffix))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
+                policy: PrecisionPolicy, *, positions, mesh=None,
+                cache=None, cache_pos=None, enc_states=None,
+                shared_params=None, decode: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), F32)
+    new_cache: dict = {}
+    rs = cfg.residual_scale
+
+    ap = shared_params if spec.mixer == "shared_attn" else p
+    h = _norm(x, ap["norm1"], cfg)
+    kv_cache = cache.get("kv") if cache else None
+
+    if spec.mixer in ("gqa", "shared_attn"):
+        mix, nc = attn.gqa_attention(
+            h, ap["attn"], policy, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, causal=True, window=spec.window,
+            attn_softcap=spec.attn_softcap, rope_theta=cfg.rope_theta,
+            qk_norm=spec.qk_norm, norm_eps=cfg.norm_eps,
+            cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
+            chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice)
+    elif spec.mixer == "mla":
+        mix, nc = attn.mla_attention(
+            h, ap["attn"], policy, n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
+            rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim,
+            positions=positions, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps, cache=kv_cache, cache_pos=cache_pos,
+            chunk=cfg.attn_chunk)
+    elif spec.mixer == "mamba2":
+        mix, nc = ssm.mamba2_mix(h, ap["attn"], cfg.mamba, policy,
+                                 cache=kv_cache)
+    elif spec.mixer == "mlstm":
+        mix, nc = ssm.mlstm_mix(h, ap["attn"], cfg.mlstm, policy,
+                                cache=kv_cache)
+    elif spec.mixer == "slstm":
+        mix, nc = ssm.slstm_mix(h, ap["attn"], cfg.slstm, policy,
+                                cache=kv_cache)
+    elif spec.mixer == "none":
+        mix, nc = jnp.zeros_like(x), None
+    else:
+        raise ValueError(spec.mixer)
+
+    if nc is not None:
+        new_cache["kv"] = nc
+    if spec.post_norms:
+        mix = _norm(mix, p["post1"], cfg)
+    x = x + rs * mix
+
+    if spec.cross_attn:
+        hx = _norm(x, p["norm_x"], cfg)
+        if enc_states is not None:
+            # prefill / train: compute cross K/V from encoder states
+            mixx, xkv = attn.gqa_attention(
+                hx, p["xattn"], policy, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, causal=False, use_rope=False,
+                kv_states=enc_states,
+                cache=cache.get("xkv") if cache else None, cache_pos=0)
+        else:
+            # decode: attend against the cached cross K/V
+            mixx = attn.cross_attend_cached(
+                hx, p["xattn"], cache["xkv"], policy, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim)
+            xkv = cache["xkv"]
+        if cache is not None:
+            new_cache["xkv"] = xkv if xkv is not None else cache["xkv"]
+        x = x + rs * mixx
+
+    if spec.ffn != "none":
+        fp = shared_params if spec.mixer == "shared_attn" else p
+        h2 = _norm(x, fp["norm2"], cfg)
+        if spec.ffn == "swiglu" or (spec.mixer == "shared_attn"
+                                    and cfg.shared_block.ffn == "swiglu"):
+            f = swiglu(h2, fp["mlp"]["gate"], fp["mlp"]["up"],
+                       fp["mlp"]["down"], policy)
+        elif spec.ffn == "gelu":
+            f = gelu_mlp(h2, fp["mlp"]["up"], fp["mlp"]["b_up"],
+                         fp["mlp"]["down"], fp["mlp"]["b_down"], policy)
+        elif spec.ffn == "moe":
+            f, aux = moe_mod.moe_block(h2, fp["mlp"], cfg.moe, policy,
+                                       mesh=mesh)
+        else:
+            raise ValueError(spec.ffn)
+        if spec.post_norms:
+            f = _norm(f, p["post2"], cfg)
+        x = x + rs * f
+    return x, (new_cache if new_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder
+# ---------------------------------------------------------------------------
+def init_encoder(key, cfg: ModelConfig, dtype):
+    e = cfg.encoder
+    ks = jax.random.split(key, e.n_layers + 2)
+    head_dim = cfg.d_model // e.n_heads
+    layers = []
+    for i in range(e.n_layers):
+        kk = jax.random.split(ks[i], 2)
+        layers.append({
+            "norm1": _norm_params(cfg, dtype),
+            "attn": attn.gqa_params(kk[0], cfg.d_model, e.n_heads,
+                                    e.n_heads, head_dim, dtype),
+            "norm2": _norm_params(cfg, dtype),
+            "mlp": mlp_params(kk[1], cfg.d_model, e.d_ff, dtype, kind="gelu"),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"layers": stacked,
+            "pos": (jax.random.normal(ks[-1], (e.n_frames, cfg.d_model), F32)
+                    * 0.01).astype(dtype),
+            "norm_f": _norm_params(cfg, dtype)}
+
+
+def encode(frame_embeds, enc_params, cfg: ModelConfig,
+           policy: PrecisionPolicy):
+    e = cfg.encoder
+    head_dim = cfg.d_model // e.n_heads
+    x = frame_embeds + enc_params["pos"].astype(frame_embeds.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        a, _ = attn.gqa_attention(
+            _norm(h, lp["norm1"], cfg), lp["attn"], policy,
+            n_heads=e.n_heads, n_kv_heads=e.n_heads, head_dim=head_dim,
+            positions=positions, causal=False, use_rope=False)
+        h = h + a
+        f = gelu_mlp(_norm(h, lp["norm2"], cfg), lp["mlp"]["up"],
+                     lp["mlp"]["b_up"], lp["mlp"]["down"],
+                     lp["mlp"]["b_down"], policy)
+        return h + f, None
+
+    x, _ = jax.lax.scan(body, x, enc_params["layers"],
+                        unroll=True if cfg.unroll_scan else 1)
+    return _norm(x, enc_params["norm_f"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    policy: PrecisionPolicy
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = param_dtype(self.policy)
+        n_keys = len(cfg.prefix) + len(cfg.suffix) + cfg.repeats * len(
+            cfg.pattern) + 4
+        ks = list(jax.random.split(key, n_keys))
+        vpad = padded_vocab(cfg.vocab)
+        params: dict = {
+            "embed": embed_init(ks.pop(), vpad, cfg.d_model, dtype),
+            "norm_f": _norm_params(cfg, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks.pop(), cfg.d_model, vpad,
+                                           dtype)
+        if cfg.max_seq:
+            params["pos_embed"] = (jax.random.normal(
+                ks.pop(), (cfg.max_seq, cfg.d_model), F32) * 0.01).astype(dtype)
+        params["prefix"] = tuple(
+            init_layer(ks.pop(), s, cfg, dtype) for s in cfg.prefix)
+        params["suffix"] = tuple(
+            init_layer(ks.pop(), s, cfg, dtype) for s in cfg.suffix)
+        # stacked pattern params [R, ...]
+        groups = []
+        for _ in range(cfg.repeats):
+            groups.append(tuple(init_layer(ks.pop(), s, cfg, dtype)
+                                for s in cfg.pattern))
+        params["pattern"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+        if cfg.shared_block is not None:
+            params["shared"] = init_shared_block(ks.pop(), cfg, dtype)
+        if cfg.encoder is not None:
+            params["encoder"] = init_encoder(ks.pop(), cfg, dtype)
+        return params
+
+    # -- embedding / unembedding ------------------------------------------
+    def embed(self, params, tokens, frontend_embeds=None, *, pos_offset=0):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.emb_scale:
+            x = (x.astype(F32) * cfg.emb_scale).astype(x.dtype)
+        if cfg.frontend == "patch" and frontend_embeds is not None:
+            # VLM stub: patch embeddings occupy the first K positions
+            x = jax.lax.dynamic_update_slice(
+                x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+        if cfg.max_seq:
+            s = tokens.shape[1]
+            pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                              pos_offset, s, 0)
+            x = x + pe.astype(x.dtype)
+        return shard(x, residual_spec() if tokens.shape[1] > 1
+                     else bspec(None, None))
+
+    @property
+    def vocab_out(self) -> int:
+        """Logits width (padded vocab)."""
+        return padded_vocab(self.cfg.vocab)
+
+    def logits(self, params, x, policy=None):
+        cfg = self.cfg
+        policy = policy or self.policy
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        spec_str = "bsd,vd->bsv" if cfg.tie_embeddings else "bsd,dv->bsv"
+        out_fmt = "fp16alt" if cfg.ce_dtype == "fp16alt" else "fp32"
+        lg = tp.tp_einsum(spec_str, x, w, policy, out_fmt=out_fmt)
+        lg = softcap(lg, cfg.logit_softcap)
+        vpad = padded_vocab(cfg.vocab)
+        if vpad != cfg.vocab:  # mask the pad tail (never predicted)
+            lg = jnp.where(jnp.arange(vpad) < cfg.vocab, lg, -1e30)
+        return shard(lg, bspec(None, "model"))
+
+    # -- stacks ------------------------------------------------------------
+    def _run_stack(self, params, x, *, positions, mesh=None, caches=None,
+                   cache_pos=None, enc_states=None, remat: bool = False,
+                   decode: bool = False):
+        cfg = self.cfg
+        shared = params.get("shared")
+        aux_total = jnp.zeros((), F32)
+        new_prefix, new_suffix = [], []
+
+        def run_one(x, p, c, spec):
+            return apply_layer(x, p, spec, cfg, self.policy,
+                               positions=positions, mesh=mesh, cache=c,
+                               cache_pos=cache_pos, enc_states=enc_states,
+                               shared_params=shared, decode=decode)
+
+        for i, spec in enumerate(cfg.prefix):
+            c = caches.prefix[i] if caches else None
+            x, nc, aux = run_one(x, params["prefix"][i], c, spec)
+            new_prefix.append(nc)
+            aux_total += aux
+
+        def group_body(carry, xs):
+            h, aux_acc = carry
+            gp, gc = xs
+            new_gc = []
+            for j, spec in enumerate(cfg.pattern):
+                c = gc[j] if gc is not None else None
+                h, nc, aux = run_one(h, gp[j], c, spec)
+                new_gc.append(nc)
+            return (h, aux_acc + aux), (tuple(new_gc)
+                                        if caches is not None else None)
+
+        if remat and cfg.remat_policy == "full":
+            body = jax.checkpoint(group_body)
+        elif remat and cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:  # "none" or remat=False: save everything
+            body = group_body
+        pat_caches = caches.pattern if caches is not None else None
+        (x, aux_total), new_pat = jax.lax.scan(
+            body, (x, aux_total), (params["pattern"], pat_caches),
+            unroll=True if cfg.unroll_scan else 1)
+
+        for i, spec in enumerate(cfg.suffix):
+            c = caches.suffix[i] if caches else None
+            x, nc, aux = run_one(x, params["suffix"][i], c, spec)
+            new_suffix.append(nc)
+            aux_total += aux
+
+        new_caches = (Caches(tuple(new_prefix), new_pat, tuple(new_suffix))
+                      if caches is not None else None)
+        return x, new_caches, aux_total
+
+    # -- entry points -------------------------------------------------------
+    def forward_train(self, params, tokens, labels, *, frontend_embeds=None,
+                      mesh=None, remat: bool = True, aux_coef: float = 0.01,
+                      loss_chunk: int = 1024):
+        """[B,S] -> scalar LM loss (+ MoE aux)."""
+        cfg = self.cfg
+        enc_states = None
+        if cfg.encoder is not None:
+            enc_states = encode(frontend_embeds, params["encoder"], cfg,
+                                self.policy)
+        x = self.embed(params, tokens,
+                       frontend_embeds if cfg.frontend == "patch" else None)
+        positions = jnp.arange(tokens.shape[1])
+        x, _, aux = self._run_stack(params, x, positions=positions, mesh=mesh,
+                                    enc_states=enc_states, remat=remat)
+        x = _norm(x, params["norm_f"], cfg)
+        loss = self.chunked_ce(params, x, labels, chunk=loss_chunk)
+        return loss + aux_coef * aux
+
+    def chunked_ce(self, params, x, labels, *, chunk: int = 1024):
+        """Cross-entropy without materializing [B,S,V]: scan over S-chunks."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        chunk = min(chunk, s)
+        nchunks = -(-s // chunk)
+        pad = nchunks * chunk - s
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        xc = jnp.moveaxis(x.reshape(b, nchunks, chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nchunks, chunk), 1, 0)
+
+        def chunk_loss(carry, xs):
+            xi, li = xs
+            # [B,c,V]; bf16 under ce_dtype=fp16alt (stats below stay f32)
+            lg = self.logits(params, xi).astype(F32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            mask = li >= 0
+            li_safe = jnp.maximum(li, 0)
+            gold = jnp.take_along_axis(lg, li_safe[..., None],
+                                       axis=-1)[..., 0]
+            nll = jnp.where(mask, lse - gold, 0.0)
+            return (carry[0] + nll.sum(), carry[1] + mask.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_loss, (jnp.zeros((), F32), jnp.zeros((), jnp.int32)),
+            (xc, lc))
+        return tot / jnp.maximum(cnt, 1)
+
+    def prefill(self, params, tokens, *, max_len: int, frontend_embeds=None,
+                mesh=None):
+        """Consume a prompt, build caches sized ``max_len``."""
+        cfg = self.cfg
+        enc_states = None
+        if cfg.encoder is not None:
+            enc_states = encode(frontend_embeds, params["encoder"], cfg,
+                                self.policy)
+        caches = init_caches(cfg, tokens.shape[0], max_len, self.policy)
+        x = self.embed(params, tokens,
+                       frontend_embeds if cfg.frontend == "patch" else None)
+        positions = jnp.arange(tokens.shape[1])
+        x, caches, _ = self._run_stack(params, x, positions=positions,
+                                       mesh=mesh, caches=caches, cache_pos=0,
+                                       enc_states=enc_states)
+        x = _norm(x, params["norm_f"], cfg)
+        lg = self.logits(params, x[:, -1:]).astype(F32)
+        return lg, caches
+
+    def decode_step(self, params, token, caches: Caches, pos, *, mesh=None):
+        """One decode step: token [B,1], pos scalar -> (logits [B,1,V], caches)."""
+        cfg = self.cfg
+        x = self.embed(params, token, pos_offset=pos if cfg.max_seq else 0)
+        positions = pos + jnp.arange(1)
+        x, caches, _ = self._run_stack(params, x, positions=positions,
+                                       mesh=mesh, caches=caches,
+                                       cache_pos=pos, decode=True)
+        x = _norm(x, params["norm_f"], cfg)
+        return self.logits(params, x).astype(F32), caches

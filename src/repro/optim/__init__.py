@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, init_opt_state, apply_update, lr_at
+from .grad_compress import compress_sync_local, init_error_feedback

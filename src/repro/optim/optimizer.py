@@ -1,0 +1,243 @@
+"""Transprecision optimizers: AdamW and Adafactor in pure JAX.
+
+The paper's per-op-group format configurability extends naturally to the
+optimizer (a "CONV + ADDMUL" consumer of gradients):
+
+  * master weights in ``policy.master_fmt`` (fp32) — the expanding-FMA
+    destination of the weight update,
+  * model weights stored in ``policy.param_fmt`` (bf16/fp16), re-quantized
+    from master each step (optionally with stochastic rounding),
+  * Adam moments stored in ``policy.opt_m_fmt`` / ``opt_v_fmt`` (bf16
+    halves optimizer HBM, the dominant memory term at scale) with the
+    update math always in f32.
+
+ZeRO-1 (optimizer-state sharding over the data axis) is expressed purely
+through shardings: ``opt_state_specs`` places the data axis on the first
+divisible dimension of every state tensor; GSPMD then turns the update
+into reduce-scatter + all-gather automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import ops as tp
+from ..core import softfloat
+from ..core.policy import PrecisionPolicy
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"               # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    # adafactor
+    decay_adafactor: float = 0.8
+
+
+def lr_at(cfg: OptConfig, step):
+    step = jnp.asarray(step, F32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _q_state(x, fmt, policy):
+    """Quantize an optimizer-state tensor to its storage format."""
+    if fmt is None:
+        return x
+    if policy.mode == "native" and fmt.native_dtype is not None:
+        return x.astype(fmt.native_dtype)
+    return softfloat.quantize(x, fmt)
+
+
+def _is_matrix(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] > 1 and x.shape[-2] > 1
+
+
+def init_opt_state(params, cfg: OptConfig, policy: PrecisionPolicy) -> dict:
+    def zeros_like_fmt(x, fmt):
+        z = jnp.zeros(x.shape, F32)
+        return _q_state(z, fmt, policy)
+
+    state = {"step": jnp.zeros((), jnp.int32),
+             "master": jax.tree.map(lambda x: x.astype(F32), params)}
+    if cfg.name == "adamw":
+        state["m"] = jax.tree.map(
+            lambda x: zeros_like_fmt(x, policy.opt_m_fmt), params)
+        state["v"] = jax.tree.map(
+            lambda x: zeros_like_fmt(x, policy.opt_v_fmt), params)
+    elif cfg.name == "adafactor":
+        def fac(x):
+            if _is_matrix(x):
+                return {"row": jnp.zeros(x.shape[:-1], F32),
+                        "col": jnp.zeros(x.shape[:-2] + x.shape[-1:], F32)}
+            return {"full": jnp.zeros(x.shape, F32)}
+        state["v"] = jax.tree.map(fac, params)
+    else:
+        raise ValueError(cfg.name)
+    return state
+
+
+def _global_norm(tree):
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(F32))), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def apply_update(params, grads, state, cfg: OptConfig,
+                 policy: PrecisionPolicy, *, sr_key=None):
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    grads = jax.tree.map(lambda g: g.astype(F32), grads)
+    gnorm = _global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    new_state = {"step": step}
+    if cfg.name == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(F32)
+        bc2 = 1 - cfg.b2 ** step.astype(F32)
+        m_new = jax.tree.map(
+            lambda g, m: cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g,
+            grads, state["m"])
+        v_new = jax.tree.map(
+            lambda g, v: cfg.b2 * v.astype(F32) + (1 - cfg.b2) * g * g,
+            grads, state["v"])
+
+        def upd(master, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            wd = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+            return master - lr * (u + wd)
+
+        master_new = jax.tree.map(upd, state["master"], m_new, v_new)
+        new_state["m"] = jax.tree.map(
+            lambda m: _q_state(m, policy.opt_m_fmt, policy), m_new)
+        new_state["v"] = jax.tree.map(
+            lambda v: _q_state(v, policy.opt_v_fmt, policy), v_new)
+    else:  # adafactor
+        t = step.astype(F32)
+        rho = 1.0 - t ** (-cfg.decay_adafactor)
+        is_vdict = lambda d: isinstance(d, dict) and ("full" in d
+                                                      or "row" in d)
+
+        def v_upd(g, v):
+            if "full" in v:
+                return {"full": rho * v["full"] + (1 - rho) * g * g}
+            return {"row": rho * v["row"] + (1 - rho) * jnp.mean(g * g,
+                                                                 axis=-1),
+                    "col": rho * v["col"] + (1 - rho) * jnp.mean(g * g,
+                                                                 axis=-2)}
+
+        def upd(master, g, v):
+            if "full" in v:
+                precond = g * jax.lax.rsqrt(v["full"] + cfg.eps)
+            else:
+                rfac = v["row"] / jnp.maximum(
+                    jnp.mean(v["row"], axis=-1, keepdims=True), 1e-30)
+                precond = g * jax.lax.rsqrt(
+                    rfac[..., None] * v["col"][..., None, :] + cfg.eps)
+            # relative update clipping (Adafactor d=1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms)
+            wd = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+            return master - lr * (precond + wd)
+
+        # map grads-tree functions against the v-tree (one extra dict level)
+        v_new = jax.tree.map(v_upd, grads, state["v"],
+                             is_leaf=lambda x: is_vdict(x))
+        # align trees: v_new leaves are dicts under is_vdict
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["master"])
+        flat_v = jax.tree_util.tree_flatten(
+            v_new, is_leaf=is_vdict)[0]
+        master_new = jax.tree_util.tree_unflatten(
+            treedef, [upd(m, g, v) for m, g, v in
+                      zip(flat_m, flat_g, flat_v)])
+        new_state["v"] = v_new
+
+    new_state["master"] = master_new
+
+    # re-quantize model weights from master (CONV group; optional SR)
+    def requant(path, master, old):
+        if policy.mode == "native":
+            if policy.stochastic_grad_round and sr_key is not None:
+                kk = jax.random.fold_in(sr_key, hash(str(path)) % (1 << 30))
+                q = softfloat.quantize(master, policy.param_fmt,
+                                       "stochastic", key=kk)
+                return q.astype(old.dtype)
+            return master.astype(old.dtype)
+        return softfloat.quantize(master, policy.param_fmt)
+
+    new_params = jax.tree_util.tree_map_with_path(requant, master_new, params)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding specs
+# ---------------------------------------------------------------------------
+def opt_state_specs(param_specs_tree, opt_state, *, zero_axis: str = "data",
+                    mesh=None):
+    """Shard master/m/v over ``zero_axis`` on the first dimension that (a)
+    is unsharded in the parameter's own spec and (b) divides by the axis
+    size.  Falls back to the parameter's spec (replication over data)."""
+    size = mesh.shape[zero_axis] if mesh is not None else 1
+
+    def place(spec: P, leaf):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % size == 0 and dim >= size:
+                parts[i] = zero_axis
+                return P(*parts)
+        return P(*parts)
+
+    def visit(sub_specs, sub_state):
+        return jax.tree.map(place, sub_specs, sub_state,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    out = {"step": P()}
+    for k in opt_state:
+        if k == "step":
+            continue
+        if k == "v" and isinstance(jax.tree.leaves(opt_state[k]), list):
+            pass
+        # m/v/master mirror the param tree structure (adafactor v has an
+        # extra dict level; map with the state as reference)
+        def spec_for(path, leaf):
+            # find the matching param spec by walking the same path prefix
+            node = param_specs_tree
+            for entry in path:
+                key = getattr(entry, "key", getattr(entry, "idx", None))
+                if isinstance(node, dict) and key in node:
+                    node = node[key]
+                elif isinstance(node, (list, tuple)) and isinstance(key, int) \
+                        and key < len(node):
+                    node = node[key]
+                else:
+                    node = None
+                    break
+            base = node if isinstance(node, P) else P()
+            return place(base, leaf)
+
+        out[k] = jax.tree_util.tree_map_with_path(spec_for, opt_state[k])
+    return out

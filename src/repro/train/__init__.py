@@ -1,0 +1,4 @@
+from .train_step import make_train_step, train_input_shardings
+from .serve_step import make_prefill, make_decode_step
+from .loop import TrainLoop, LoopConfig
+from .fault import StragglerMonitor, SimulatedFailure

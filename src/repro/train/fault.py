@@ -1,0 +1,82 @@
+"""Fault tolerance: straggler detection and failure/restart machinery.
+
+On a real multi-pod deployment the failure modes are: a host crashing
+(process exit -> restart from checkpoint), a chip slowing down
+(straggler -> flag, drain, reschedule), and a pod-slice loss (restore onto
+a smaller mesh — covered by mesh-elastic checkpoints in ckpt/).
+
+This module provides the process-level pieces that are testable on CPU:
+  * :class:`StragglerMonitor` — per-step wall-clock EWMA + deviation
+    flagging (the signal a cluster scheduler consumes),
+  * :class:`SimulatedFailure` — deterministic fault injection for tests
+    and the fault-tolerance example,
+  * :func:`run_with_restarts` — supervisor loop: run -> crash -> restore
+    from the latest checkpoint -> continue, bounded retries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+class StragglerMonitor:
+    """EWMA of step wall-clock; flags steps slower than ``threshold`` x the
+    running mean (after a warmup)."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.flagged: list = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.n += 1
+        straggler = False
+        if self.ewma is None:
+            self.ewma = dt
+        else:
+            if self.n > self.warmup and dt > self.threshold * self.ewma:
+                straggler = True
+                self.flagged.append((step, dt, self.ewma))
+            # EWMA update excludes flagged outliers (keeps baseline honest)
+            if not straggler:
+                self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return straggler
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure."""
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic fault injection: raise at the listed step indices
+    (global step count, each raised once)."""
+    fail_at: tuple = ()
+    raised: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.raised:
+            self.raised.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+def run_with_restarts(make_runner: Callable[[], "object"],
+                      max_restarts: int = 3):
+    """Supervisor: build a runner (which restores from the latest
+    checkpoint), run it; on failure rebuild and continue.  Returns the
+    final runner and the number of restarts consumed."""
+    restarts = 0
+    while True:
+        runner = make_runner()
+        try:
+            runner.run()
+            return runner, restarts
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

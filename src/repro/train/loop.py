@@ -1,0 +1,134 @@
+"""The training loop: data + step + checkpoint + fault handling.
+
+Single-process version that is mesh-agnostic (1 CPU device for tests and
+examples; 256/512-device meshes on real hardware — the loop code is
+identical, only the mesh differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..data.pipeline import DataConfig, SyntheticLMData
+from ..models.transformer import Model
+from ..optim.optimizer import OptConfig, init_opt_state
+from ..optim import grad_compress
+from .fault import FailurePlan, StragglerMonitor
+from .train_step import make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    compress_grads: Optional[str] = None
+    remat: bool = True
+    seed: int = 0
+
+
+class TrainLoop:
+    """Build everything, optionally restore, run; safe to re-instantiate
+    after a crash (run_with_restarts does exactly that)."""
+
+    def __init__(self, model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
+                 loop_cfg: LoopConfig, mesh=None,
+                 failure_plan: Optional[FailurePlan] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.loop_cfg = loop_cfg
+        self.mesh = mesh
+        self.failure_plan = failure_plan
+        self.data = SyntheticLMData(data_cfg)
+        self.monitor = StragglerMonitor()
+        self.metrics_log: list = []
+
+        from .train_step import init_error_feedback
+        dp_axes = () if mesh is None else ("data",)
+        self.step_fn = jax.jit(make_train_step(
+            model, opt_cfg, mesh, dp_axes=dp_axes,
+            compress_grads=loop_cfg.compress_grads, remat=loop_cfg.remat))
+
+        key = jax.random.key(loop_cfg.seed)
+        self.params = model.init(key)
+        self.opt_state = init_opt_state(self.params, opt_cfg, model.policy)
+        self.ef = (init_error_feedback(self.params, mesh, dp_axes)
+                   if loop_cfg.compress_grads and mesh is not None else None)
+        self.step = 0
+        self.ckpt = (CheckpointManager(loop_cfg.ckpt_dir,
+                                       keep=loop_cfg.keep_ckpts)
+                     if loop_cfg.ckpt_dir else None)
+        if self.ckpt is not None:
+            self._try_restore()
+
+    # -- checkpoint plumbing -------------------------------------------------
+    def _state_tree(self):
+        t = {"params": self.params, "opt": self.opt_state}
+        if self.ef is not None:
+            t["ef"] = self.ef
+        return t
+
+    def _try_restore(self):
+        like = self._state_tree()
+        step, tree, extra = self.ckpt.restore_latest(like)
+        if step is not None:
+            self.params = tree["params"]
+            self.opt_state = tree["opt"]
+            if self.ef is not None:
+                self.ef = tree["ef"]
+            self.step = int(extra["step"])
+            self.data.load_state_dict(extra["data"])
+
+    def _save(self, sync=False):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step, self._state_tree(),
+                       extra={"data": self.data.state_dict()}, sync=sync)
+
+    # -- the loop -------------------------------------------------------------
+    def run(self):
+        lc = self.loop_cfg
+        use_key = (self.ef is not None
+                   or self.model.policy.stochastic_grad_round)
+        while self.step < lc.total_steps:
+            if self.failure_plan is not None:
+                self.failure_plan.maybe_fail(self.step)
+            batch = self.data.batch_at(self.data.step)
+            t0 = time.perf_counter()
+            args = [self.params, self.opt_state, batch]
+            if self.ef is not None:
+                args.append(self.ef)
+            if use_key:
+                args.append(jax.random.key_data(jax.random.fold_in(
+                    jax.random.key(lc.seed + 1), self.step)).astype(
+                        jnp.uint32))
+            out = self.step_fn(*args)
+            if self.ef is not None:
+                self.params, self.opt_state, metrics, self.ef = out
+            else:
+                self.params, self.opt_state, metrics = out
+            metrics = {k: float(v) for k, v in metrics.items()}
+            jax.block_until_ready(self.params)
+            dt = time.perf_counter() - t0
+            straggler = self.monitor.record(self.step, dt)
+            metrics.update(step=self.step, dt=dt, straggler=straggler)
+            self.metrics_log.append(metrics)
+            if lc.log_every and self.step % lc.log_every == 0:
+                print(f"step {self.step:5d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics['lr']:.2e} gnorm "
+                      f"{metrics['grad_norm']:.3f} {dt*1e3:.0f}ms"
+                      + (" STRAGGLER" if straggler else ""))
+            self.step += 1
+            self.data.step = self.step
+            if lc.ckpt_every and self.step % lc.ckpt_every == 0:
+                self._save()
+        self._save(sync=True)
+        return self.metrics_log

@@ -1,0 +1,94 @@
+"""Serving-step factories: prefill and decode under explicit shardings.
+
+``decode_32k`` / ``long_500k`` lower the *decode step* (one new token
+against a KV cache of seq_len), ``prefill_32k`` lowers the prefill.
+KV caches store in ``policy.kv_fmt`` (the paper's storage-format knob) and
+shard per models/sharding.py (heads over ``model`` when divisible, else
+sequence — flash-decode style with GSPMD-reduced softmax stats).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import sharding as shd
+from ..models.layers import set_batch_axes
+from ..models.transformer import Model, init_caches
+
+F32 = jnp.float32
+
+
+def serve_shardings(model: Model, mesh, *, batch: int, max_len: int,
+                    dp_axes=("data",), model_axis="model"):
+    cfg = model.cfg
+    msize = mesh.shape[model_axis]
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    overrides = ({"embed": "rep", "lm_head": "rep"}
+                 if cfg.embed_sharding == "replicated" else None)
+    pspecs = shd.param_specs(params_shape, model_axis, msize,
+                             overrides=overrides)
+    caches_shape = jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, model.policy))
+    cspecs = shd.cache_specs(cfg, caches_shape, batch=batch, mesh=mesh,
+                             batch_axes=dp_axes, model_axis=model_axis)
+    ba = shd.batch_spec_axes(batch, dp_axes, mesh)
+    return params_shape, pspecs, caches_shape, cspecs, ba
+
+
+def make_prefill(model: Model, mesh, *, batch: int, seq_len: int,
+                 max_len: int, dp_axes=("data",), model_axis="model"):
+    cfg = model.cfg
+    set_batch_axes(dp_axes)
+    params_shape, pspecs, caches_shape, cspecs, ba = serve_shardings(
+        model, mesh, batch=batch, max_len=max_len, dp_axes=dp_axes,
+        model_axis=model_axis)
+
+    def prefill(params, tokens, frontend_embeds=None):
+        return model.prefill(params, tokens, max_len=max_len,
+                             frontend_embeds=frontend_embeds, mesh=mesh)
+
+    args = [params_shape,
+            jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)]
+    in_sh = [shd.named(mesh, pspecs),
+             NamedSharding(mesh, P(ba, None))]
+    if cfg.frontend is not None:
+        n = (cfg.n_frontend_tokens if cfg.frontend == "patch"
+             else cfg.encoder.n_frames)
+        args.append(jax.ShapeDtypeStruct((batch, n, cfg.d_model), F32))
+        in_sh.append(NamedSharding(mesh, P(ba, None, None)))
+    out_sh = (NamedSharding(mesh, P(ba, None, model_axis)),
+              shd.named(mesh, cspecs))
+    jitted = jax.jit(prefill, in_shardings=tuple(in_sh),
+                     out_shardings=out_sh)
+    return jitted, tuple(args)
+
+
+def make_decode_step(model: Model, mesh, *, batch: int, max_len: int,
+                     dp_axes=("data",), model_axis="model"):
+    """One-token decode step against a ``max_len`` cache (the decode_32k /
+    long_500k dry-run target)."""
+    cfg = model.cfg
+    set_batch_axes(dp_axes)
+    params_shape, pspecs, caches_shape, cspecs, ba = serve_shardings(
+        model, mesh, batch=batch, max_len=max_len, dp_axes=dp_axes,
+        model_axis=model_axis)
+
+    def decode(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos, mesh=mesh)
+
+    args = (params_shape,
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            caches_shape,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (shd.named(mesh, pspecs),
+             NamedSharding(mesh, P(ba, None)),
+             shd.named(mesh, cspecs),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(ba, None, model_axis)),
+              shd.named(mesh, cspecs))
+    jitted = jax.jit(decode, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jitted, args

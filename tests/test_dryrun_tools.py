@@ -1,0 +1,72 @@
+"""Unit tests for the dry-run machinery: the collective-schedule parser,
+differential algebra, roofline factors and model-flops estimates."""
+import pytest
+
+from repro.launch.dryrun import (_coll_diff, _coll_scale_add, _lin,
+                                 parse_collectives)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[8,128,2048]{2,1,0} parameter(0)
+  %ar = f32[8,4096]{1,0} all-reduce(%x), channel_id=3, replica_groups=[16,16]<=[16,16]T(1,0), use_global_device_ids=true, to_apply=%add
+  %ag = bf16[8,128,2048]{2,1,0} all-gather(%p0), channel_id=4, replica_groups=[32,8]<=[256], dimensions={2}
+  %rs = f32[512]{0} reduce-scatter(%y), channel_id=5, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %cp = bf16[64]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[2,16]{1,0} all-to-all(%w), replica_groups=[8,2]<=[16], dimensions={0}
+}
+"""
+
+
+def test_parse_collectives():
+    out = parse_collectives(HLO_SAMPLE)
+    assert out["all-reduce@16"] == {"count": 1, "bytes": 8 * 4096 * 4}
+    assert out["all-gather@8"] == {"count": 1, "bytes": 8 * 128 * 2048 * 2}
+    assert out["reduce-scatter@4"] == {"count": 1, "bytes": 512 * 4}
+    assert out["collective-permute@2"] == {"count": 1, "bytes": 64 * 2}
+    assert out["all-to-all@2"] == {"count": 1, "bytes": 2 * 16 * 4}
+
+
+def test_coll_algebra():
+    a = {"all-reduce@16": {"count": 3, "bytes": 300}}
+    b = {"all-reduce@16": {"count": 1, "bytes": 100},
+         "all-gather@8": {"count": 1, "bytes": 50}}
+    d = _coll_diff(a, b)
+    assert d["all-reduce@16"] == {"count": 2, "bytes": 200}
+    assert d["all-gather@8"] == {"count": 0, "bytes": 0}  # clipped
+    s = _coll_scale_add((2, a), (1, b))
+    assert s["all-reduce@16"] == {"count": 7, "bytes": 700}
+
+
+def test_lin_extrapolation():
+    v1 = {"flops": 100.0, "bytes": 10.0, "transcendentals": 1.0,
+          "coll": {"all-reduce@16": {"count": 1, "bytes": 8}}}
+    v2 = {"flops": 160.0, "bytes": 14.0, "transcendentals": 1.5,
+          "coll": {"all-reduce@16": {"count": 2, "bytes": 16}}}
+    t = _lin(v1, v2, 5)
+    assert t["flops"] == 100 + 4 * 60
+    assert t["bytes"] == 10 + 4 * 4
+    assert t["coll"]["all-reduce@16"]["bytes"] == 8 + 4 * 8
+
+
+def test_roofline_ring_factors():
+    from benchmarks.roofline import coll_bytes_moved
+    coll = {"all-reduce@16": {"count": 1, "bytes": 160},
+            "all-gather@16": {"count": 1, "bytes": 160},
+            "reduce-scatter@16": {"count": 1, "bytes": 10},
+            "collective-permute@2": {"count": 1, "bytes": 7}}
+    got = coll_bytes_moved(coll)
+    want = 2 * 160 * 15 / 16 + 160 * 15 / 16 + 10 * 15 + 7
+    assert got == pytest.approx(want)
+
+
+def test_model_flops_estimates():
+    from benchmarks.roofline import model_flops_global
+    # granite train: 6*N*D within 2x of the pure-param estimate (attention
+    # quadratic term adds on top)
+    n = 20.5e9
+    d = 256 * 4096
+    est = model_flops_global("granite-20b", "train_4k")
+    assert 6 * n * d < est < 6 * n * d * 1.5
+    # decode: per-token cost ~ 2*N*B plus cache reads
+    est_d = model_flops_global("granite-20b", "decode_32k")
+    assert est_d < est / 1000

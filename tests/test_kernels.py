@@ -1,0 +1,195 @@
+"""Pallas kernel sweeps: every kernel vs its ref.py pure-jnp oracle, across
+shapes and dtypes, in interpret mode (CPU).  Paper-level contract: identical
+format semantics between kernel and oracle (operand format, f32 accumulation,
+store format).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import get_format
+from repro.core.policy import PRESETS
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.dotp_ex import dotp_ex_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.tp_matmul import tp_matmul_pallas
+from repro.kernels.tp_quant import cast_and_pack_pallas, tp_quantize_pallas
+
+F32 = np.float32
+
+
+def rnd(*shape, seed=0, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# tp_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n,block", [
+    (128, 128, 128, (128, 128, 128)),
+    (256, 512, 128, (128, 256, 128)),
+    (128, 384, 256, (64, 128, 128)),
+])
+@pytest.mark.parametrize("in_dtype,out_dtype", [
+    (jnp.float32, jnp.float32),
+    (jnp.bfloat16, jnp.bfloat16),
+    (jnp.bfloat16, jnp.float32),
+    (jnp.float16, jnp.float32),
+])
+def test_tp_matmul_dtypes(m, k, n, block, in_dtype, out_dtype):
+    a = jnp.asarray(rnd(m, k, seed=1), in_dtype)
+    b = jnp.asarray(rnd(k, n, seed=2), in_dtype)
+    got = tp_matmul_pallas(a, b, block=block, out_dtype=out_dtype)
+    want = ref.tp_matmul_ref(a, b, out_dtype=out_dtype, bk=block[1])
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got, F32), np.asarray(want, F32))
+
+
+@pytest.mark.parametrize("quant_fmt", ["fp16", "fp16alt", "fp8", "fp8_e4m3"])
+def test_tp_matmul_fused_quantization(quant_fmt):
+    """Fused CONV->ADDMUL operand snap inside the kernel == oracle snap."""
+    a = jnp.asarray(rnd(128, 256, seed=3))
+    b = jnp.asarray(rnd(256, 128, seed=4))
+    got = tp_matmul_pallas(a, b, block=(128, 128, 128),
+                           quant_fmt_name=quant_fmt)
+    want = ref.tp_matmul_ref(a, b, quant_fmt_name=quant_fmt, bk=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tp_matmul_wrapper_pads_and_batches():
+    a = jnp.asarray(rnd(2, 50, 100, seed=5))
+    b = jnp.asarray(rnd(100, 70, seed=6))
+    got = kops.tp_matmul(a, b, policy=PRESETS["em_fp16"])
+    qa = np.asarray(jax.vmap(lambda x: x)(a))
+    want = np.stack([
+        np.asarray(ref.tp_matmul_ref(a[i], b, quant_fmt_name="fp16",
+                                     out_dtype=jnp.float32))
+        for i in range(2)])
+    assert got.shape == (2, 50, 70)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tp_quantize / cast_and_pack
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", ["fp16", "fp16alt", "fp8", "fp8_e4m3", "tf32"])
+@pytest.mark.parametrize("rows,cols", [(256, 128), (512, 256)])
+def test_tp_quantize_vs_ref(fmt, rows, cols):
+    x = jnp.asarray(rnd(rows, cols, seed=7, scale=100.0))
+    got = tp_quantize_pallas(x, fmt_name=fmt)
+    want = ref.tp_quantize_ref(x, fmt_name=fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tp_quantize_stochastic_statistics():
+    fmt = get_format("fp8")
+    x = jnp.full((256, 128), 1.0 + 0.25 * fmt.eps, jnp.float32)
+    rbits = jax.random.bits(jax.random.key(0), x.shape, jnp.uint32)
+    got = np.asarray(tp_quantize_pallas(x, rbits, fmt_name="fp8",
+                                        stochastic=True))
+    lo, hi = 1.0, 1.0 + fmt.eps
+    assert set(np.unique(got)) <= {F32(lo), F32(hi)}
+    frac_hi = (got == F32(hi)).mean()
+    assert 0.15 < frac_hi < 0.35  # E = 0.25
+
+
+def test_cast_and_pack_vs_ref():
+    a = jnp.asarray(rnd(256, 128, seed=8))
+    b = jnp.asarray(rnd(256, 128, seed=9))
+    got = cast_and_pack_pallas(a, b, fmt_name="fp8")
+    want = ref.cast_and_pack_ref(a, b, fmt_name="fp8")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_wrapper_unpadded():
+    x = jnp.asarray(rnd(100, 60, seed=10))
+    got = kops.tp_quantize(x, fmt="fp16alt")
+    want = ref.tp_quantize_ref(x, fmt_name="fp16alt")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (bh, bkv, sq, skv, d, causal, window, softcap)
+    (2, 2, 256, 256, 64, True, None, None),     # dense causal
+    (4, 2, 256, 256, 64, True, None, None),     # GQA group=2
+    (2, 2, 128, 384, 64, False, None, None),    # cross-attention-like
+    (2, 2, 256, 256, 64, True, 128, None),      # sliding window
+    (2, 2, 256, 256, 64, True, None, 50.0),     # gemma softcap
+    (8, 2, 128, 512, 128, True, 256, 30.0),     # everything at once
+]
+
+
+@pytest.mark.parametrize("bh,bkv,sq,skv,d,causal,window,softcap", ATTN_CASES)
+def test_flash_attention_vs_ref(bh, bkv, sq, skv, d, causal, window, softcap):
+    group = bh // bkv
+    q = jnp.asarray(rnd(bh, sq, d, seed=11))
+    k = jnp.asarray(rnd(bkv, skv, d, seed=12))
+    v = jnp.asarray(rnd(bkv, skv, d, seed=13))
+    scale = d ** -0.5
+    kw = dict(group=group, scale=scale, causal=causal, window=window,
+              softcap=softcap, src_dtype=jnp.bfloat16, out_dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, bq=128, bk=128, **kw)
+    want = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_kv_len_masking():
+    """Padding keys beyond kv_len must not affect the output."""
+    q = jnp.asarray(rnd(2, 128, 64, seed=14))
+    k = jnp.asarray(rnd(2, 256, 64, seed=15))
+    v = jnp.asarray(rnd(2, 256, 64, seed=16))
+    kv_len = 200
+    got = flash_attention_pallas(q, k, v, group=1, scale=0.125, causal=False,
+                                 kv_len=kv_len)
+    k2 = k.at[:, kv_len:].set(1e9)
+    got2 = flash_attention_pallas(q, k2, v, group=1, scale=0.125, causal=False,
+                                  kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2), atol=1e-6)
+
+
+def test_flash_attention_wrapper_4d():
+    q = jnp.asarray(rnd(2, 4, 200, 64, seed=17))
+    k = jnp.asarray(rnd(2, 2, 200, 64, seed=18))
+    v = jnp.asarray(rnd(2, 2, 200, 64, seed=19))
+    got = kops.flash_attention(q, k, v, causal=True)
+    assert got.shape == (2, 4, 200, 64)
+    want = ref.flash_attention_ref(
+        q.reshape(8, 200, 64), k.reshape(4, 200, 64), v.reshape(4, 200, 64),
+        group=2, scale=64 ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.reshape(2, 4, 200, 64)),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# dotp_ex — the paper's case-study kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1024, 4096, 5000])
+@pytest.mark.parametrize("src_dtype", [jnp.float16, jnp.bfloat16])
+def test_dotp_ex_vs_parallel_oracle(n, src_dtype):
+    a = jnp.asarray(rnd(n, seed=20, scale=0.5))
+    b = jnp.asarray(rnd(n, seed=21, scale=0.5))
+    pol = PRESETS["tp_fp16" if src_dtype == jnp.float16 else "tp_bf16"]
+    got = float(kops.dotp_ex(a, b, policy=pol))
+    want = float(ref.dotp_ex_ref(a, b, src_dtype=src_dtype))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_dotp_ex_close_to_sequential_paper_semantics():
+    """Parallel-tiled accumulation vs the paper's sequential fmacex loop:
+    reassociation error must stay at the fp32-rounding scale."""
+    n = 2048
+    a = jnp.asarray(rnd(n, seed=22, scale=0.3) + 1.0)
+    b = jnp.asarray(rnd(n, seed=23, scale=0.3) + 1.0)
+    got = float(kops.dotp_ex(a, b, policy=PRESETS["tp_fp16"]))
+    seq = float(ref.dotp_sequential_ref(np.asarray(a), np.asarray(b),
+                                        src_fmt="fp16", acc_fmt="fp32"))
+    np.testing.assert_allclose(got, seq, rtol=1e-5)

@@ -1,0 +1,198 @@
+"""Tests for core.ops — the multi-format operation semantics (paper §II.B.4,
+§III.A.2): expanding FMA with single rounding, policy-driven einsum,
+cast-and-pack, STE gradients, per-op-group elementwise formats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops as tp
+from repro.core import softfloat
+from repro.core.formats import get_format
+from repro.core.policy import MatmulPolicy, PrecisionPolicy, PRESETS, get_policy
+
+F32 = np.float32
+finite = st.floats(width=16, allow_nan=False, allow_infinity=False)
+
+
+def em_policy(src, acc, out=None):
+    return PrecisionPolicy(
+        name=f"t_{src}_{acc}", mode="emulate",
+        matmul=MatmulPolicy(get_format(src), get_format(acc),
+                            get_format(out) if out else None))
+
+
+# ---------------------------------------------------------------------------
+# expanding FMA: dst fma(src a, src b, dst c) with ONE rounding
+# ---------------------------------------------------------------------------
+@given(a=finite, b=finite, c=finite)
+@settings(max_examples=300, deadline=None)
+def test_tp_fma_single_rounding_fp16_fp32(a, b, c):
+    """Emulated fmacex.s.h == round_fp32(exact(a16*b16) + c32): the product
+    of two fp16 values is exact in f32, the f32 add is the single rounding."""
+    pol = em_policy("fp16", "fp32")
+    got = tp.tp_fma(jnp.float32(a), jnp.float32(b), jnp.float32(c), pol)
+    qa = float(np.asarray(softfloat.quantize(jnp.float32(a), "fp16")))
+    qb = float(np.asarray(softfloat.quantize(jnp.float32(b), "fp16")))
+    want = F32(np.float64(qa) * np.float64(qb) + np.float64(F32(c)))
+    if np.isnan(want):
+        assert np.isnan(float(got))
+    else:
+        assert float(got) == want
+
+
+@given(a=finite, b=finite)
+@settings(max_examples=200, deadline=None)
+def test_tp_fma_fp8_src_exact_product(a, b):
+    """fp8 (5,2) products are exact in f32 (2*3 significand bits <= 24)."""
+    pol = em_policy("fp8", "fp16")
+    got = float(tp.tp_fma(jnp.float32(a), jnp.float32(b), jnp.float32(0), pol))
+    qa = float(np.asarray(softfloat.quantize(jnp.float32(a), "fp8")))
+    qb = float(np.asarray(softfloat.quantize(jnp.float32(b), "fp8")))
+    want = float(np.asarray(softfloat.quantize(
+        jnp.float32(np.float64(qa) * np.float64(qb)), "fp16")))
+    if np.isnan(want):
+        assert np.isnan(got)
+    else:
+        assert got == want
+
+
+def test_fma_beats_narrow_accumulation():
+    """The paper's Fig 10/11 point: fp16-multiply + fp32-accumulate keeps
+    fp32-level accuracy while fp16-accumulate drifts."""
+    rs = np.random.RandomState(0)
+    a = rs.uniform(0.5, 1.5, 4096).astype(F32)
+    b = rs.uniform(0.5, 1.5, 4096).astype(F32)
+    exact = float(np.dot(a.astype(np.float64), b.astype(np.float64)))
+
+    pol_ex = em_policy("fp16", "fp32")
+    pol_narrow = em_policy("fp16", "fp16")
+
+    def run(pol):
+        def step(acc, ab):
+            return tp.tp_fma(ab[0], ab[1], acc, pol), ()
+        out, _ = jax.lax.scan(step, jnp.float32(0.0), (jnp.asarray(a), jnp.asarray(b)))
+        return float(out)
+
+    qa = np.asarray(softfloat.quantize(jnp.asarray(a), "fp16"), np.float64)
+    qb = np.asarray(softfloat.quantize(jnp.asarray(b), "fp16"), np.float64)
+    exact_q = float(qa @ qb)  # exact dot of the quantized inputs
+
+    err_ex = abs(run(pol_ex) - exact_q)
+    err_narrow = abs(run(pol_narrow) - exact_q)
+    assert err_ex < 1e-2
+    assert err_narrow > 50 * max(err_ex, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# tp_einsum / tp_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("src,acc,out", [
+    ("fp16", "fp32", "fp16"), ("fp8", "fp32", "fp16alt"),
+    ("fp16alt", "fp32", None)])
+def test_tp_einsum_emulate_matches_manual(src, acc, out):
+    pol = em_policy(src, acc, out)
+    rs = np.random.RandomState(1)
+    a = rs.randn(8, 32).astype(F32)
+    b = rs.randn(32, 16).astype(F32)
+    got = np.asarray(tp.tp_einsum("ij,jk->ik", a, b, pol))
+    qa = np.asarray(softfloat.quantize(jnp.asarray(a), src))
+    qb = np.asarray(softfloat.quantize(jnp.asarray(b), src))
+    want = qa @ qb
+    want = np.asarray(softfloat.quantize(jnp.asarray(want),
+                                         pol.matmul.resolved_out()))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_tp_einsum_native_dtypes():
+    pol = get_policy("tp_bf16")
+    a = jnp.ones((4, 8), jnp.float32)
+    b = jnp.ones((8, 4), jnp.float32)
+    r = tp.tp_einsum("ij,jk->ik", a, b, pol)
+    assert r.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(r, F32), 8.0)
+
+
+def test_tp_matmul_batched():
+    pol = em_policy("fp16", "fp32")
+    rs = np.random.RandomState(2)
+    a = rs.randn(2, 3, 8, 16).astype(F32)
+    b = rs.randn(16, 12).astype(F32)
+    got = tp.tp_matmul(a, b, pol)
+    assert got.shape == (2, 3, 8, 12)
+
+
+# ---------------------------------------------------------------------------
+# STE gradient
+# ---------------------------------------------------------------------------
+def test_quantize_ste_gradient_passthrough():
+    g = jax.grad(lambda x: jnp.sum(tp.quantize_ste(x, get_format("fp8"))))(
+        jnp.arange(8, dtype=jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), np.ones(8, F32))
+
+
+def test_tp_einsum_differentiable():
+    pol = em_policy("fp8", "fp32")
+    rs = np.random.RandomState(3)
+    a = jnp.asarray(rs.randn(4, 8).astype(F32))
+    b = jnp.asarray(rs.randn(8, 4).astype(F32))
+    ga, gb = jax.grad(lambda a, b: jnp.sum(tp.tp_einsum("ij,jk->ik", a, b, pol)),
+                      argnums=(0, 1))(a, b)
+    # STE: dL/da = ones @ qb.T on the quantized grid
+    qb = np.asarray(softfloat.quantize(b, "fp8"))
+    np.testing.assert_allclose(np.asarray(ga), np.ones((4, 4)) @ qb.T,
+                               rtol=1e-5)
+    assert gb.shape == b.shape
+
+
+# ---------------------------------------------------------------------------
+# cast_and_pack / conversions
+# ---------------------------------------------------------------------------
+def test_cast_and_pack_interleaves():
+    a = jnp.asarray(np.arange(8, dtype=F32).reshape(2, 4))
+    b = -a
+    pol = em_policy("fp16", "fp32")
+    r = np.asarray(tp.cast_and_pack(a, b, "fp8", pol))
+    assert r.shape == (2, 8)
+    np.testing.assert_array_equal(r[:, 0::2], np.asarray(
+        softfloat.quantize(a, "fp8")))
+    np.testing.assert_array_equal(r[:, 1::2], np.asarray(
+        softfloat.quantize(b, "fp8")))
+
+
+def test_tp_cast_native_and_emulate_agree():
+    rs = np.random.RandomState(4)
+    x = rs.randn(128).astype(F32) * 10
+    em = np.asarray(tp.tp_cast(x, "fp16alt",
+                               PRESETS["em_fp16"].replace(rounding="rne")))
+    nat = np.asarray(tp.tp_cast(x, "fp16alt", None).astype(jnp.float32))
+    np.testing.assert_array_equal(em, nat)
+
+
+# ---------------------------------------------------------------------------
+# elementwise group + policies
+# ---------------------------------------------------------------------------
+def test_tp_elementwise_runs_in_elem_fmt():
+    pol = PRESETS["em_fp16"].replace(elem_fmt=get_format("fp8"))
+    x = jnp.linspace(0.1, 2.0, 16)
+    r = np.asarray(tp.tp_elementwise("rsqrt", x, policy=pol))
+    # every output value must be on the fp8 grid
+    q = np.asarray(softfloat.quantize(jnp.asarray(r), "fp8"))
+    np.testing.assert_array_equal(r, q)
+
+
+def test_policy_presets_valid():
+    for name, p in PRESETS.items():
+        assert p.matmul.src_fmt is not None
+        assert p.mode in ("native", "emulate")
+        if p.mode == "native":
+            assert p.matmul.src_fmt.native_dtype is not None
+
+
+def test_native_policy_rejects_unrepresentable_format():
+    with pytest.raises(ValueError):
+        PrecisionPolicy(
+            name="bad", mode="native",
+            matmul=MatmulPolicy(get_format("fp6_e3m2"), get_format("fp32")))

@@ -1,0 +1,43 @@
+"""The paper-claims benchmarks as tests: Table III / Table IV / Fig 7 /
+Fig 8 reproductions must keep passing their internal assertions."""
+import pytest
+
+
+def test_table3_case_study():
+    from benchmarks import table3_case_study
+    rows = table3_case_study.main()
+    assert len(rows) == 5
+    # energy ratios within 0.05 of the paper's published values
+    for k, bits, bits_p, core, core_p, sys, sys_p in rows:
+        assert abs(core - core_p) < 0.05, (k, core, core_p)
+        assert abs(sys - sys_p) < 0.05, (k, sys, sys_p)
+        assert abs(bits - bits_p) <= 2, (k, bits, bits_p)
+
+
+def test_table4_fma():
+    from benchmarks import table4_fma
+    table4_fma.main()
+
+
+def test_fig7_energy():
+    from benchmarks import fig7_instruction_energy
+    fig7_instruction_energy.main()
+
+
+def test_fig8_dvfs():
+    from benchmarks import fig8_dvfs
+    fig8_dvfs.main()
+
+
+def test_energy_model_energy_proportionality():
+    """The framework-level thesis: per-flop energy strictly decreases with
+    format width, scalar and SIMD (paper's energy proportionality)."""
+    from repro.core import energy
+    order = ["fp64", "fp32", "fp16", "fp16alt", "fp8"]
+    prev = float("inf")
+    for f in order:
+        e = energy.FMA_PJ_PER_FLOP[(f, False)]
+        assert e < prev or f == "fp16alt"   # fp16alt ~ fp16 band
+        prev = min(prev, e)
+    assert energy.FMA_PJ_PER_FLOP[("fp8", True)] == min(
+        v for v in energy.FMA_PJ_PER_FLOP.values())

@@ -1,0 +1,236 @@
+"""Property + bit-exactness tests for core.softfloat (paper §II.A.1, Fig 1).
+
+The emulation layer must behave exactly like an IEEE-754-2008 hardware
+rounding stage for *any* (e, m) format: these tests pin that down against
+ml_dtypes' reference conversions (for formats with native implementations)
+and against grid-membership / ordering properties (for arbitrary formats).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import softfloat
+from repro.core.formats import FPFormat, get_format
+
+F32 = np.float32
+
+# formats with a trusted third-party reference conversion
+NATIVE_FMTS = [
+    ("fp16", np.float16),
+    ("fp16alt", ml_dtypes.bfloat16),
+    ("fp8", ml_dtypes.float8_e5m2),
+]
+# arbitrary-(e,m) formats exercising the generic machinery
+CUSTOM_FMTS = ["fp8_e4m3", "tf32", "fp6_e3m2", (3, 4), (6, 1)]
+
+finite_f32 = st.floats(width=32, allow_nan=False, allow_infinity=False,
+                       allow_subnormal=True)
+any_f32 = st.floats(width=32, allow_nan=True, allow_infinity=True,
+                    allow_subnormal=True)
+
+
+def q(x, fmt, mode="rne", **kw):
+    out = softfloat.quantize(jnp.asarray(x, jnp.float32), fmt, mode, **kw)
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs ml_dtypes (RNE)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt_name,ref_dtype", NATIVE_FMTS)
+@given(x=any_f32)
+@settings(max_examples=300, deadline=None)
+def test_rne_matches_mldtypes(fmt_name, ref_dtype, x):
+    got = q(x, fmt_name)
+    want = np.asarray(F32(x)).astype(ref_dtype).astype(F32)
+    if np.isnan(want):
+        assert np.isnan(got)
+    else:
+        assert got == want and np.signbit(got) == np.signbit(want), (
+            fmt_name, x, got, want)
+
+
+@pytest.mark.parametrize("fmt_name,ref_dtype", NATIVE_FMTS)
+def test_rne_matches_mldtypes_exhaustive_grid(fmt_name, ref_dtype):
+    """Sweep every boundary-adjacent value: all 16-bit patterns upcast."""
+    bits = np.arange(0, 1 << 16, dtype=np.uint16)
+    xs = bits.view(np.float16).astype(F32)
+    xs = xs[np.isfinite(xs)]
+    got = q(xs, fmt_name)
+    want = xs.astype(ref_dtype).astype(F32)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.signbit(got), np.signbit(want))
+
+
+@pytest.mark.parametrize("fmt_name,ref_dtype", NATIVE_FMTS)
+def test_specials(fmt_name, ref_dtype):
+    assert np.isnan(q(np.nan, fmt_name))
+    assert q(np.inf, fmt_name) == np.inf
+    assert q(-np.inf, fmt_name) == -np.inf
+    z, nz = q(0.0, fmt_name), q(-0.0, fmt_name)
+    assert z == 0 and not np.signbit(z)
+    assert nz == 0 and np.signbit(nz)
+
+
+# ---------------------------------------------------------------------------
+# generic grid properties (any format, any mode)
+# ---------------------------------------------------------------------------
+def _on_grid(v, fmt: FPFormat) -> bool:
+    """A finite v is representable in fmt iff v = M * 2^(e-m) with |M| < 2^(m+1)
+    and emin <= e <= emax (normals), or v = M * 2^(emin-m), |M| < 2^m (subs)."""
+    if v == 0 or not math.isfinite(v):
+        return True
+    a = abs(float(v))
+    if a > fmt.max_normal:
+        return False
+    e = math.floor(math.log2(a))
+    e = max(e, fmt.emin)
+    scaled = a / 2.0 ** (e - fmt.m_bits)
+    return scaled == int(scaled)
+
+
+@pytest.mark.parametrize("fmt_name", [n for n, _ in NATIVE_FMTS] + CUSTOM_FMTS)
+@pytest.mark.parametrize("mode", ["rne", "rtz", "rdn", "rup", "rmm"])
+@given(x=finite_f32)
+@settings(max_examples=200, deadline=None)
+def test_result_on_grid(fmt_name, mode, x):
+    fmt = get_format(fmt_name)
+    got = float(q(x, fmt, mode))
+    assert _on_grid(got, fmt), (fmt_name, mode, x, got)
+
+
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp16alt", "fp8", "fp8_e4m3"])
+@given(x=finite_f32)
+@settings(max_examples=200, deadline=None)
+def test_directed_modes_bracket(fmt_name, x):
+    dn = float(q(x, fmt_name, "rdn"))
+    up = float(q(x, fmt_name, "rup"))
+    tz = float(q(x, fmt_name, "rtz"))
+    ne = float(q(x, fmt_name, "rne"))
+    assert dn <= x <= up
+    assert abs(tz) <= abs(x)
+    assert dn <= ne <= up
+    # rne picks one of the two enclosing grid points
+    assert ne in (dn, up)
+
+
+@pytest.mark.parametrize("fmt_name", [n for n, _ in NATIVE_FMTS] + CUSTOM_FMTS)
+@pytest.mark.parametrize("mode", ["rne", "rtz", "rdn", "rup", "rmm"])
+@given(x=finite_f32)
+@settings(max_examples=100, deadline=None)
+def test_idempotent(fmt_name, mode, x):
+    once = q(x, fmt_name, mode)
+    twice = q(once, fmt_name, mode)
+    np.testing.assert_array_equal(once, twice)
+
+
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp8", "fp8_e4m3"])
+def test_monotone(fmt_name):
+    xs = np.sort(np.random.RandomState(0).uniform(-100, 100, 4096).astype(F32))
+    for mode in ("rne", "rtz", "rdn", "rup", "rmm"):
+        ys = q(xs, fmt_name, mode)
+        assert np.all(np.diff(ys) >= 0), mode
+
+
+# ---------------------------------------------------------------------------
+# subnormals / overflow
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp16alt", "fp8", "fp8_e4m3"])
+def test_gradual_underflow(fmt_name):
+    fmt = get_format(fmt_name)
+    sub = fmt.min_subnormal
+    # every multiple of min_subnormal below min_normal is exactly representable
+    ks = np.arange(1, 1 << fmt.m_bits)
+    xs = (ks * sub).astype(F32)
+    np.testing.assert_array_equal(q(xs, fmt), xs)
+    # halfway points round to even neighbours under RNE
+    half = F32(0.5 * sub)
+    assert q(half, fmt) == 0.0          # ties-to-even: 0 is even
+    assert q(F32(1.5 * sub), fmt) == F32(2 * sub)
+    # below half of min subnormal flushes to (signed) zero
+    tiny = F32(0.49 * sub)
+    assert q(tiny, fmt) == 0.0
+    assert np.signbit(q(-tiny, fmt))
+
+
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp16alt", "fp8", "fp8_e4m3"])
+def test_overflow_modes(fmt_name):
+    fmt = get_format(fmt_name)
+    mx = F32(fmt.max_normal)
+    # finite f32 value safely above the format's RNE overflow boundary
+    big = F32(min(fmt.max_normal * 4.0, float(np.finfo(np.float32).max)))
+    assert q(big, fmt, "rne") == np.inf
+    assert q(-big, fmt, "rne") == -np.inf
+    assert q(big, fmt, "rtz") == mx
+    assert q(big, fmt, "rdn") == mx
+    assert q(big, fmt, "rup") == np.inf
+    assert q(-big, fmt, "rdn") == -np.inf
+    assert q(-big, fmt, "rup") == -mx
+    assert q(big, fmt, "rne", saturate=True) == mx
+    assert q(-big, fmt, "rne", saturate=True) == -mx
+    # just over max_normal but under the rounding boundary stays finite (RNE)
+    eps_under = F32(fmt.max_normal * (1 + 2.0 ** (-fmt.m_bits - 2)))
+    assert q(eps_under, fmt, "rne") == mx
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp8", "fp8_e4m3"])
+def test_stochastic_lands_on_neighbours(fmt_name):
+    fmt = get_format(fmt_name)
+    rs = np.random.RandomState(1)
+    xs = rs.uniform(-8, 8, 512).astype(F32)
+    lo, hi = q(xs, fmt, "rdn"), q(xs, fmt, "rup")
+    got = q(xs, fmt, "stochastic", key=jax.random.key(0))
+    assert np.all((got == lo) | (got == hi))
+
+
+def test_stochastic_unbiased():
+    fmt = get_format("fp8")
+    x = F32(1.0 + 0.3 * fmt.eps)  # strictly between two fp8 grid points
+    n = 4000
+    keys = jax.random.split(jax.random.key(42), n)
+    vals = jax.vmap(
+        lambda k: softfloat.quantize(jnp.float32(x), fmt, "stochastic", key=k)
+    )(keys)
+    mean = float(jnp.mean(vals))
+    # E[q] = x; tolerance ~4 sigma of Bernoulli(p)*ulp / sqrt(n)
+    ulp = fmt.eps
+    assert abs(mean - float(x)) < 4 * ulp * 0.5 / math.sqrt(n)
+
+
+# ---------------------------------------------------------------------------
+# arbitrary-format sanity: widths, constants
+# ---------------------------------------------------------------------------
+def test_format_constants():
+    fp8 = get_format("fp8")
+    assert (fp8.e_bits, fp8.m_bits, fp8.width) == (5, 2, 8)
+    assert fp8.max_normal == 57344.0          # e5m2 max
+    assert fp8.min_normal == 2.0 ** -14
+    bf16 = get_format("fp16alt")
+    assert bf16.max_normal == float(ml_dtypes.finfo(ml_dtypes.bfloat16).max)
+    fp16 = get_format("fp16")
+    assert fp16.max_normal == 65504.0
+    e4m3 = get_format("fp8_e4m3")
+    # IEEE-style e4m3 keeps inf/NaN encodings (paper principles, Fig 1):
+    # max = (2 - 2^-3) * 2^7 = 240, unlike the OCP e4m3fn variant's 448.
+    assert e4m3.max_normal == 240.0
+
+
+def test_tuple_format_construction():
+    f = get_format((4, 3))
+    assert f.e_bits == 4 and f.m_bits == 3
+    with pytest.raises(ValueError):
+        FPFormat("bad", 1, 3)
+
+
+def test_identity_for_wide_targets():
+    xs = np.random.RandomState(0).randn(64).astype(F32)
+    np.testing.assert_array_equal(q(xs, "fp32"), xs)
+    np.testing.assert_array_equal(q(xs, "fp64"), xs)
