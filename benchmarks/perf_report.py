@@ -68,6 +68,8 @@ def tpu_projection(arch: str, shape: str, sets: list) -> dict:
 
 def main():
     import argparse
+    from repro.launch.dryrun import force_dryrun_devices
+    force_dryrun_devices()   # before jax init: lowering needs the 512-mesh
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internvl2-26b")
     ap.add_argument("--shape", default="train_4k")

@@ -1,0 +1,164 @@
+"""Serving benchmark: prefill latency + steady-state decode tok/s.
+
+Compares the three decode paths on reduced archs (CPU; the same code runs
+compiled on TPU):
+
+  * ``python``      — the seed per-step loop: one jit'd ``decode_step``
+                      dispatch per generated token.
+  * ``scan``        — ``Model.generate``: the whole generation is ONE
+                      compiled ``lax.scan`` (one dispatch total).
+  * ``scan+pallas`` — the scan loop with the fused in-kernel KV-dequant
+                      Pallas decode-attention kernel under an fp8 KV cache
+                      (policy tp_bf16_kv8): the quantized-cache serving
+                      scenario of the FPnew storage-format story.
+
+Steady-state tok/s for the scan paths is measured by differencing two
+generation lengths (removes prefill + constant dispatch cost); the python
+loop is timed directly over its steps (that IS its steady state).
+
+Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
+tracked PR-over-PR.
+
+``PYTHONPATH=src python -m benchmarks.serve_decode [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ARCHS = ("gemma2-9b", "qwen3-moe-30b-a3b")
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "BENCH_serve.json") if "__file__" in globals() else \
+    "BENCH_serve.json"
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def _time_call(fn, repeats=3):
+    import jax
+    jax.block_until_ready(fn())          # compile + warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return _median(ts)
+
+
+def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
+               repeats: int = 3) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.models.registry import build_model
+
+    short = max(2, gen // 4)
+    row = {"batch": batch, "prompt_len": prompt_len, "gen": gen}
+
+    def build(policy, backend):
+        model = build_model(arch, policy=policy,
+                            reduced=True).with_cfg(decode_backend=backend)
+        params = model.init(jax.random.key(0))
+        prompts = jax.random.randint(
+            jax.random.key(1), (batch, prompt_len), 0, model.cfg.vocab)
+        return model, params, prompts
+
+    max_len = prompt_len + gen
+    model, params, prompts = build("tp_bf16", "dense")
+
+    # -- prefill latency ----------------------------------------------------
+    prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
+    row["prefill_ms"] = _time_call(
+        lambda: prefill(params, prompts)[0], repeats) * 1e3
+
+    # -- python per-step loop (the seed path) -------------------------------
+    step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+    lg, caches0 = prefill(params, prompts)
+    tok0 = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    _ = jax.block_until_ready(step(params, tok0, caches0, prompt_len)[0])
+
+    def run_loop():
+        tok, caches = tok0, caches0
+        for i in range(gen - 1):
+            lg, caches = step(params, tok, caches, prompt_len + i)
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        return tok
+
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_loop())
+        ts.append(time.perf_counter() - t0)
+    row["python_tok_s"] = batch * (gen - 1) / _median(ts)
+
+    # -- scan paths ---------------------------------------------------------
+    def scan_tok_s(model, params, prompts):
+        long_fn = jax.jit(lambda p, t: model.generate(
+            p, t, gen_len=gen, max_len=max_len)[0])
+        short_fn = jax.jit(lambda p, t: model.generate(
+            p, t, gen_len=short, max_len=max_len)[0])
+        t_long = _time_call(lambda: long_fn(params, prompts), repeats)
+        t_short = _time_call(lambda: short_fn(params, prompts), repeats)
+        dt = t_long - t_short
+        if dt <= 0:
+            # timing noise swamped the per-token cost (tiny model / loaded
+            # box): report the conservative whole-run rate instead of an
+            # astronomical differenced number, and flag it in the row
+            print(f"  [warn] unstable differencing (dt={dt * 1e3:.3f} ms); "
+                  f"falling back to whole-run rate", flush=True)
+            row["steady_state_unstable"] = True
+            return batch * gen / t_long
+        return batch * (gen - short) / dt
+
+    row["scan_tok_s"] = scan_tok_s(model, params, prompts)
+    row["scan_speedup"] = row["scan_tok_s"] / row["python_tok_s"]
+
+    # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
+    row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=list(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="one arch, short generation (CI smoke)")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.archs, args.gen, args.repeats = args.archs[:1], 16, 1
+
+    import jax
+    report = {"meta": {"backend": jax.default_backend(),
+                       "device": str(jax.devices()[0]),
+                       "quick": bool(args.quick)},
+              "archs": {}}
+    for arch in args.archs:
+        print(f"[serve_decode] {arch} ...", flush=True)
+        row = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
+                         gen=args.gen, repeats=args.repeats)
+        report["archs"][arch] = row
+        print(f"  prefill {row['prefill_ms']:.1f} ms | "
+              f"python {row['python_tok_s']:.1f} tok/s | "
+              f"scan {row['scan_tok_s']:.1f} tok/s "
+              f"({row['scan_speedup']:.2f}x) | "
+              f"scan+pallas(kv8) {row['scan_pallas_kv8_tok_s']:.1f} tok/s",
+              flush=True)
+
+    if not args.quick:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[serve_decode] wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

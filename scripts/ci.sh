@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 tests + a smoke serving-decode benchmark.
+#
+# Mirrors the tier-1 verify line in ROADMAP.md; the benchmark smoke run
+# exercises the scan-based generation path and the fused Pallas decode
+# kernel end-to-end without writing BENCH_serve.json (use
+# `python -m benchmarks.serve_decode` for the full tracked run).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serve decode smoke benchmark =="
+python -m benchmarks.serve_decode --quick
+
+echo "CI OK"

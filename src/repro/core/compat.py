@@ -1,0 +1,35 @@
+"""jax cross-version shims.
+
+The framework targets the current jax API surface but must also run on the
+0.4.x line (this container ships 0.4.37).  Keep every version branch in
+this leaf module — call sites stay clean and the suite exercises one
+definition.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map_compat"]
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names=None,
+                     check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.5 exposes ``jax.shard_map(..., axis_names=, check_vma=)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., check_rep=,
+    auto=)``.  ``axis_names`` (the axes that are manual inside the body;
+    all others stay auto) is translated to the old ``auto=`` complement.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, **kw)

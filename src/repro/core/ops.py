@@ -172,12 +172,17 @@ def tp_matmul(a, b, policy, *, out_fmt=None, use_pallas: bool = False,
 
 def cast_and_pack(a, b, fmt, policy=None, *, axis: int = -1):
     """Paper §III.A.2c: convert two scalar operand streams to ``fmt`` and
-    pack them as interleaved elements of the destination vector."""
+    pack them as interleaved elements of the destination vector along
+    ``axis``: ``out[.., 2i, ..] = a[.., i, ..]`` and ``out[.., 2i+1, ..] =
+    b[.., i, ..]``, so ``out.shape[axis] == 2 * a.shape[axis]``."""
     fmt = get_format(fmt)
     qa = tp_cast(a, fmt, policy)
     qb = tp_cast(b, fmt, policy)
-    stacked = jnp.stack([qa, qb], axis=-1)
-    return stacked.reshape(*qa.shape[:-1], -1) if axis == -1 else stacked
+    axis = axis % qa.ndim
+    stacked = jnp.stack([qa, qb], axis=axis + 1)
+    shape = list(qa.shape)
+    shape[axis] *= 2
+    return stacked.reshape(shape)
 
 
 # -- DIVSQRT / elementwise group --------------------------------------------

@@ -6,5 +6,6 @@ Each kernel ships three pieces (framework convention):
   ref.py    — pure-jnp oracle with identical format semantics.
 Validated in interpret mode on CPU; compiled on TPU via interpret=False.
 """
-from . import ops, ref
-from .ops import tp_matmul, tp_quantize, cast_and_pack, flash_attention, dotp_ex
+from . import autotune, ops, ref
+from .ops import (tp_matmul, tp_quantize, cast_and_pack, flash_attention,
+                  decode_attention, dotp_ex)

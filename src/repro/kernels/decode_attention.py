@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: fused single-query decode attention over a quantized
+KV cache — the serving-path instantiation of FPnew's CONV->ADDMUL fusion.
+
+FPnew's headline energy-proportionality result comes from keeping narrow
+formats *on the wire* and fusing the format conversion (CONV block) into the
+FMA datapath (ADDMUL block) so values are widened exactly once, at the
+multiplier input (paper §II.B.4, the expanding multi-format FMA
+``dst fma(src a, src b, dst c)``).  This kernel applies that contract to the
+hottest serving loop — decode attention against a long KV cache:
+
+  stage           FPnew block   what happens here
+  -----------     -----------   ------------------------------------------
+  KV dequant      CONV          cache lines enter in their *storage* format
+                                (native bf16/fp16/fp8 dtype, or an f32
+                                container holding values on the ``kv_fmt``
+                                grid); they are RNE-snapped / widened
+                                in-kernel, per VMEM tile — never
+                                materialized wide in HBM.
+  q·K^T           ADDMUL        src-format multiplies, f32 accumulation
+                                (the expanding FMA; MXU semantics).
+  softmax stats   COMP          max / exp / sum stay f32 (the paper keeps
+                                COMP in full precision).
+  p·V             ADDMUL        src-format multiplies, f32 accumulation.
+  store           CONV          single cast to ``out_dtype`` on the way out.
+
+Layout: q [BHkv, G, D] (the G = n_heads/n_kv_heads query heads that share
+one KV head), k/v [BHkv, Smax, D] cache buffers, kv_len a *dynamic* scalar
+(SMEM) masking dead cache slots — it changes every decode step, so it must
+not trigger a retrace inside the ``lax.scan`` generation loop.
+
+Schedule: grid (BHkv, 2, Smax/bk), kv innermost, two passes over the KV
+blocks.  Pass 0 computes the exact global score max; pass 1 recomputes
+scores (flash-style recompute) and accumulates the numerator / denominator
+blockwise in f32 VMEM scratch.  Unlike online-softmax rescaling, the
+two-pass schedule is *bit-exact* against the dense reference
+(ref.decode_attention_ref with matching ``bk``): the max is exact, and the
+blockwise f32 sums are part of the op's numerical contract, exactly like
+tp_matmul's K-blocking.  The cost is streaming K twice (V's block index is
+pinned during the max pass, so V streams once) — for single-query decode
+the score pass is a thin [G, bk] strip, so the extra traffic is the K
+reload, not a 2x compute or bandwidth bill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import get_format
+from .quant_common import quantize_rne_bits
+
+NEG_INF = -1e30
+
+
+def softcap_scores(s, cap: float):
+    """Attention-logit soft-capping via exp: ``cap * tanh(s / cap)`` with
+    ``tanh(x) = 1 - 2/(exp(2x) + 1)``.  Written out this way (instead of
+    ``jnp.tanh``) because XLA expands tanh into a polynomial whose FMA
+    contraction depends on the surrounding fusion context — the exp form
+    uses only context-stable ops, so kernel and oracle stay bit-identical.
+    Shared by decode_attention_pallas and ref.decode_attention_ref."""
+    e = jnp.exp(s * (2.0 / cap))
+    return cap * (1.0 - 2.0 / (e + 1.0))
+
+
+def _widen(x, fmt, src_dtype):
+    """CONV stage: storage format -> compute format at the FMA input.
+    Native narrow dtypes widen exactly; f32 containers RNE-snap onto the
+    storage grid first (emulated narrow storage)."""
+    if fmt is not None and x.dtype == jnp.float32:
+        x = quantize_rne_bits(x, fmt)
+    return x.astype(src_dtype)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, acc_ref,
+                   l_ref, *, nk: int, bk: int, scale: float,
+                   window: Optional[int], softcap: Optional[float],
+                   kv_fmt, q_fmt, src_dtype, out_dtype):
+    ip = pl.program_id(1)          # 0 = max pass, 1 = accumulate pass
+    j = pl.program_id(2)           # kv block
+    kvl = len_ref[0, 0]
+
+    @pl.when((ip == 0) & (j == 0))
+    def _init_max():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    @pl.when((ip == 1) & (j == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = _widen(q_ref[0], q_fmt, src_dtype)          # (G, D)
+    k = _widen(k_ref[0], kv_fmt, src_dtype)         # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap_scores(s, softcap)
+
+    g = s.shape[0]
+    k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    mask = k_idx < kvl
+    if window is not None:
+        mask &= k_idx > kvl - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    @pl.when(ip == 0)
+    def _max_pass():
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_ref[...] = jnp.maximum(m_ref[...], jnp.broadcast_to(m_cur,
+                                                              m_ref.shape))
+
+    @pl.when(ip == 1)
+    def _acc_pass():
+        m = m_ref[:, :1]
+        # guard fully-masked rows (m == NEG_INF): keep exp argument finite
+        p = jnp.exp(s - jnp.where(m <= NEG_INF / 2, 0.0, m))
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = _widen(v_ref[0], kv_fmt, src_dtype)
+        acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+            p.astype(src_dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(j == nk - 1)
+        def _store():
+            l = l_ref[:, :1]
+            o_ref[0] = (acc_ref[...] /
+                        jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bk", "scale", "window", "softcap", "kv_fmt_name", "q_fmt_name",
+    "src_dtype", "out_dtype", "interpret"))
+def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
+                            scale: float = 1.0,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            kv_fmt_name: Optional[str] = None,
+                            q_fmt_name: Optional[str] = None,
+                            src_dtype=jnp.bfloat16,
+                            out_dtype=jnp.float32,
+                            interpret: bool = True):
+    """q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: [1, 1] int32 (live
+    cache length — a traced value, not a static).
+
+    Smax % bk == 0 (the ops.py wrapper pads; padded slots have
+    ``k_idx >= kv_len`` and are masked).  ``kv_fmt_name`` / ``q_fmt_name``
+    request the in-kernel RNE grid snap for f32-container (emulated narrow)
+    storage; native narrow dtypes are widened exactly without it.
+    """
+    bh, g, d = q.shape
+    bkv, smax, dk = k.shape
+    assert d == dk and bh == bkv, (q.shape, k.shape)
+    assert smax % bk == 0, (k.shape, bk)
+    nk = smax // bk
+
+    kern = functools.partial(
+        _decode_kernel, nk=nk, bk=bk, scale=scale, window=window,
+        softcap=softcap,
+        kv_fmt=get_format(kv_fmt_name) if kv_fmt_name else None,
+        q_fmt=get_format(q_fmt_name) if q_fmt_name else None,
+        src_dtype=src_dtype, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, 2, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, p, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j, 0)),
+            # V is only read in the accumulate pass (p == 1): pin its block
+            # index to 0 during the max pass so consecutive grid steps hit
+            # the same tile and Mosaic skips the copy — V streams from HBM
+            # once, K twice (the cost stated in the module docstring).
+            pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j * p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),   # running max
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+            pltpu.VMEM((g, 128), jnp.float32),   # softmax denominator
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)

@@ -15,9 +15,11 @@ import jax.numpy as jnp
 
 from ..core.formats import get_format
 from ..core.policy import PrecisionPolicy, get_policy
+from . import autotune
 from .tp_matmul import tp_matmul_pallas, DEFAULT_BLOCK
 from .tp_quant import tp_quantize_pallas, cast_and_pack_pallas
 from .flash_attention import flash_attention_pallas
+from .decode_attention import decode_attention_pallas
 from .dotp_ex import dotp_ex_pallas
 
 
@@ -42,8 +44,10 @@ def tp_matmul(a, b, *, policy=None, out_fmt=None, block=None,
     a2 = a.reshape(-1, a.shape[-1]) if lead else a
     m, k = a2.shape
     _, n = b.shape
-    bm, bk, bn = block or (min(128, max(8, m)), min(512, k), min(128, n))
-    bm, bk, bn = (max(8, bm), max(128, bk), max(128, bn))
+    if block is None:  # memoized autotuner winner, else static heuristic
+        block = autotune.best_block("matmul", (m, k, n), a.dtype)
+    bm, bk, bn = block
+    bm, bk, bn = (max(8, min(bm, m)), max(128, bk), max(128, bn))
     a2, _ = _pad_to(a2, (bm, bk), (0, 1))
     b2, _ = _pad_to(b, (bk, bn), (0, 1))
 
@@ -94,8 +98,9 @@ def cast_and_pack(a, b, *, fmt, stochastic: bool = False, key=None,
 
 def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
                     causal: bool = True, window: Optional[int] = None,
-                    softcap: Optional[float] = None, bq: int = 128,
-                    bk: int = 128, interpret: bool = True):
+                    softcap: Optional[float] = None,
+                    bq: Optional[int] = None, bk: Optional[int] = None,
+                    interpret: bool = True):
     """q [B, H, S, D], k/v [B, Hkv, Skv, D] -> [B, H, S, D] (f32)."""
     policy = get_policy(policy) if policy is not None else get_policy("tp_bf16")
     src_dt = (policy.matmul.src_fmt.native_dtype
@@ -104,6 +109,9 @@ def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
     _, hkv, skv, _ = k.shape
     group = h // hkv
     scale = scale if scale is not None else d ** -0.5
+    if bq is None or bk is None:
+        tq, tk = autotune.best_block("attn", (sq, skv, d), q.dtype)
+        bq, bk = (bq or tq), (bk or tk)
     qf = q.reshape(b * h, sq, d)
     kf = k.reshape(b * hkv, skv, d)
     vf = v.reshape(b * hkv, skv, d)
@@ -117,6 +125,62 @@ def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
         window=window, softcap=softcap, kv_len=skv, src_dtype=src_dt,
         out_dtype=jnp.float32, interpret=interpret)
     return o[:, :sq].reshape(b, h, sq, d)
+
+
+def decode_attention(q, k, v, *, kv_len, policy=None,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     bk: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Fused single-query decode attention over the (quantized) KV cache.
+
+    q [B, H, 1, D]; k/v [B, Hkv, Smax, D] *in their storage dtype* (native
+    narrow dtype, or f32 container on the ``policy.kv_fmt`` grid);
+    ``kv_len`` the live cache length (python int or traced scalar — it is a
+    dynamic kernel input, so per-step calls under ``lax.scan`` never
+    retrace).  Returns [B, H, 1, D] f32.
+
+    ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
+    accelerators — this wrapper sits on the serving hot path (behind
+    ``cfg.decode_backend``), so it must not silently run the interpreter
+    on TPU like the explicit ``interpret=True`` research wrappers do.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    policy = get_policy(policy) if policy is not None else get_policy("tp_bf16")
+    mp = policy.matmul
+    if policy.mode == "native":
+        # cache already carries the narrow dtype — widening is exact
+        src_dt, kv_fmt_name, q_fmt_name = mp.src_fmt.native_dtype, None, None
+    else:
+        # f32 containers: snap q / KV onto their grids inside the kernel
+        src_dt = jnp.float32
+        kv_fmt_name = policy.kv_fmt.name if policy.kv_fmt is not None else None
+        q_fmt_name = mp.src_fmt.name if mp.src_fmt.name != "fp32" else None
+    b, h, sq, d = q.shape
+    _, hkv, smax, _ = k.shape
+    assert sq == 1, q.shape
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    g_pad = max(8, group)                    # sublane-align the query strip
+    if g_pad != group:
+        qf = jnp.pad(qf, ((0, 0), (0, g_pad - group), (0, 0)))
+    kf = k.reshape(b * hkv, smax, d)
+    vf = v.reshape(b * hkv, smax, d)
+    if bk is None:
+        bk = autotune.best_block("decode_attn", (g_pad, smax, d), src_dt)[0]
+    bk = min(bk, max(128, smax))
+    kf, _ = _pad_to(kf, (bk,), (1,))
+    vf, _ = _pad_to(vf, (bk,), (1,))
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (1, 1))
+    o = decode_attention_pallas(
+        qf, kf, vf, kvl, bk=bk, scale=scale, window=window, softcap=softcap,
+        kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name, src_dtype=src_dt,
+        out_dtype=jnp.float32, interpret=interpret)
+    return o[:, :group].reshape(b, hkv, group, d).reshape(b, h, 1, d)
 
 
 def dotp_ex(a, b, *, policy=None, interpret: bool = True):

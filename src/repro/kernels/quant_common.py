@@ -1,0 +1,64 @@
+"""Shared in-kernel quantization primitives (FPnew CONV block).
+
+Integer-space rounding of f32 containers onto an arbitrary (e, m) grid —
+the bit-twiddling core used by every Pallas kernel that fuses a format
+conversion into its datapath: tp_quant (standalone CONV), tp_matmul
+(CONV->ADDMUL operand snap), and decode_attention (CONV->ADDMUL dequant of
+the narrow KV cache inside the attention loop).
+
+Hoisted here so kernels share one bit-exact implementation; the pure-jnp
+oracle is ``softfloat.quantize`` + FTZ (see kernels/ref.py), and
+tests/test_kernels.py pins the two against each other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.formats import FPFormat
+
+
+def quantize_bits(x, rbits, fmt: FPFormat, stochastic: bool):
+    """Integer-space rounding onto fmt's grid (normals; FTZ below min normal,
+    matching the MXU input stage; softfloat.quantize keeps the gradual-
+    underflow oracle).
+
+    ``rbits`` is a uint32 array of x's shape supplying the stochastic
+    addend; ignored (may be None) when ``stochastic`` is False.
+    """
+    m, emax, emin = fmt.m_bits, fmt.emax, fmt.emin
+    s = 23 - m
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & jnp.uint32(0x80000000)
+    mag = bits ^ sign
+    if stochastic:
+        addend = rbits & jnp.uint32((1 << s) - 1)
+    else:
+        tie = (mag >> s) & jnp.uint32(1)
+        addend = (jnp.uint32(1) << (s - 1)) - jnp.uint32(1) + tie
+    special = mag >= jnp.uint32(0xFF << 23)
+    rmag = ((mag + addend) >> s) << s
+    max_bits = jnp.uint32(((emax + 127) << 23) | (((1 << m) - 1) << s))
+    rmag = jnp.where(rmag > max_bits, jnp.uint32(0xFF << 23), rmag)
+    # FTZ below min normal, except the RNE subnormal-boundary band
+    # [min_normal*(1-2^-(m+1)), min_normal) which rounds up to min_normal
+    # on the true IEEE grid (deterministic mode only; stochastic keeps the
+    # plain flush — the bias is confined to that half-ulp band).
+    min_bits = jnp.uint32((emin + 127) << 23)
+    if stochastic:
+        rmag = jnp.where(rmag < min_bits, jnp.uint32(0), rmag)
+    else:
+        # boundary = 2^(emin-1) * (2 - 2^-m) = min_normal * (1 - 2^-(m+1))
+        boundary = jnp.uint32(((emin - 1 + 127) << 23)
+                              | (((1 << m) - 1) << (23 - m)))
+        rmag = jnp.where(rmag < min_bits,
+                         jnp.where(mag >= boundary, min_bits, jnp.uint32(0)),
+                         rmag)
+    rmag = jnp.where(special, mag, rmag)
+    return jax.lax.bitcast_convert_type(sign | rmag, jnp.float32)
+
+
+def quantize_rne_bits(x, fmt: FPFormat):
+    """RNE grid snap of an f32 array onto ``fmt`` (no randomness operand) —
+    the in-kernel dequant step for narrow formats stored in f32 containers."""
+    return quantize_bits(x, None, fmt, stochastic=False)

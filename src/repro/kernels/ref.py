@@ -96,6 +96,72 @@ def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
     return (o / jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
 
 
+def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         kv_fmt_name: Optional[str] = None,
+                         q_fmt_name: Optional[str] = None,
+                         src_dtype=jnp.float32, out_dtype=jnp.float32,
+                         bk: Optional[int] = None):
+    """Dense single-query decode-attention oracle with the decode kernel's
+    exact format contract: in-container RNE snap of KV (and optionally q)
+    onto the storage grid, src-format multiplies, f32 accumulation, exact
+    global softmax max, single store cast.
+
+    ``bk`` fixes the KV-blocking schedule of the numerator/denominator
+    accumulation (and the score dot shapes), exactly like tp_matmul_ref's
+    K-blocking — with matching ``bk`` the oracle is bit-exact against
+    decode_attention_pallas in interpret mode; with ``bk=None`` it is the
+    plain dense path (one block).
+
+    q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: int (or 0-d array).
+    """
+    bh, g, d = q.shape
+    _, smax, _ = k.shape
+    bk = smax if bk is None else bk
+    assert smax % bk == 0, (smax, bk)
+
+    def snap(x, fmt_name):
+        if fmt_name is not None and x.dtype == jnp.float32:
+            fmt = get_format(fmt_name)
+            x = _ftz(softfloat.quantize(x, fmt), fmt)
+        return x.astype(src_dtype)
+
+    qs = snap(q, q_fmt_name)
+    ks = snap(k, kv_fmt_name)
+    vs = snap(v, kv_fmt_name)
+    dot_qk = lambda qi, ki: jax.lax.dot_general(
+        qi, ki, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    dot_pv = lambda pi, vi: jax.lax.dot_general(
+        pi, vi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    out = []
+    for h in range(bh):
+        blocks = []
+        for kk in range(0, smax, bk):
+            s = dot_qk(qs[h], ks[h, kk:kk + bk]) * scale
+            if softcap is not None:
+                from .decode_attention import softcap_scores
+                s = softcap_scores(s, softcap)
+            k_idx = kk + jnp.arange(bk)[None, :]
+            mask = k_idx < kv_len
+            if window is not None:
+                mask = mask & (k_idx > kv_len - 1 - window)
+            blocks.append((jnp.where(mask, s, NEG_INF), mask))
+        m = jnp.max(jnp.concatenate([s for s, _ in blocks], axis=-1),
+                    axis=-1, keepdims=True)
+        m = jnp.where(m <= NEG_INF / 2, 0.0, m)
+        acc = jnp.zeros((g, d), jnp.float32)
+        l = jnp.zeros((g, 1), jnp.float32)
+        for bi, (s, mask) in enumerate(blocks):
+            p = jnp.where(mask, jnp.exp(s - m), 0.0)
+            l = l + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc + dot_pv(p.astype(src_dtype),
+                               vs[h, bi * bk:(bi + 1) * bk])
+        out.append((acc / jnp.where(l == 0.0, 1.0, l)).astype(out_dtype))
+    return jnp.stack(out)
+
+
 def dotp_ex_ref(a, b, *, src_dtype=jnp.float16):
     """Expanding dot product oracle (f32 accumulate of exact products)."""
     prod = (a.astype(src_dtype).astype(jnp.float32)

@@ -28,37 +28,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import FPFormat, get_format
+from .quant_common import quantize_rne_bits as _quantize_rne_bits
 
 DEFAULT_BLOCK = (128, 512, 128)  # (bm, bk, bn)
-
-
-def _quantize_rne_bits(x: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
-    """In-kernel RNE grid snap (f32, normal/overflow handling only — the
-    kernel path flushes target subnormals like the MXU does; the exact
-    gradual-underflow path lives in core.softfloat for emulation)."""
-    m, emax, emin = fmt.m_bits, fmt.emax, fmt.emin
-    s = 23 - m
-    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    sign = bits & jnp.uint32(0x80000000)
-    mag = bits ^ sign
-    tie = (mag >> s) & jnp.uint32(1)
-    mag = ((mag + ((jnp.uint32(1) << (s - 1)) - jnp.uint32(1) + tie)) >> s) << s
-    max_bits = jnp.uint32(((emax + 127) << 23) | (((1 << m) - 1) << s))
-    inf_bits = jnp.uint32(0xFF << 23)
-    mag = jnp.where(mag > max_bits, inf_bits, mag)
-    # flush-to-zero below min normal (MXU-style) — but RNE on the true
-    # subnormal grid rounds |x| >= min_normal*(1 - 2^-(m+1)) UP to
-    # min_normal, so those survive the flush (boundary found by the
-    # hypothesis sweep in tests/test_kernels.py).
-    min_bits = jnp.uint32((emin + 127) << 23)
-    # boundary = 2^(emin-1) * (2 - 2^-m) = min_normal * (1 - 2^-(m+1))
-    boundary = jnp.uint32(((emin - 1 + 127) << 23)
-                          | (((1 << m) - 1) << (23 - m)))
-    pre = bits ^ sign
-    mag = jnp.where(mag < min_bits,
-                    jnp.where(pre >= boundary, min_bits, jnp.uint32(0)),
-                    mag)
-    return jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int,

@@ -19,42 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.formats import FPFormat, get_format
-
-
-def _quant_bits(x, rbits, fmt: FPFormat, stochastic: bool):
-    """Integer-space rounding onto fmt's grid (normals; FTZ below min normal,
-    matching the MXU input stage; softfloat.quantize keeps the gradual-
-    underflow oracle)."""
-    m, emax, emin = fmt.m_bits, fmt.emax, fmt.emin
-    s = 23 - m
-    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    sign = bits & jnp.uint32(0x80000000)
-    mag = bits ^ sign
-    if stochastic:
-        addend = rbits & jnp.uint32((1 << s) - 1)
-    else:
-        tie = (mag >> s) & jnp.uint32(1)
-        addend = (jnp.uint32(1) << (s - 1)) - jnp.uint32(1) + tie
-    special = mag >= jnp.uint32(0xFF << 23)
-    rmag = ((mag + addend) >> s) << s
-    max_bits = jnp.uint32(((emax + 127) << 23) | (((1 << m) - 1) << s))
-    rmag = jnp.where(rmag > max_bits, jnp.uint32(0xFF << 23), rmag)
-    # FTZ below min normal, except the RNE subnormal-boundary band
-    # [min_normal*(1-2^-(m+1)), min_normal) which rounds up to min_normal
-    # on the true IEEE grid (deterministic mode only; stochastic keeps the
-    # plain flush — the bias is confined to that half-ulp band).
-    min_bits = jnp.uint32((emin + 127) << 23)
-    if stochastic:
-        rmag = jnp.where(rmag < min_bits, jnp.uint32(0), rmag)
-    else:
-        # boundary = 2^(emin-1) * (2 - 2^-m) = min_normal * (1 - 2^-(m+1))
-        boundary = jnp.uint32(((emin - 1 + 127) << 23)
-                              | (((1 << m) - 1) << (23 - m)))
-        rmag = jnp.where(rmag < min_bits,
-                         jnp.where(mag >= boundary, min_bits, jnp.uint32(0)),
-                         rmag)
-    rmag = jnp.where(special, mag, rmag)
-    return jax.lax.bitcast_convert_type(sign | rmag, jnp.float32)
+from .quant_common import quantize_bits as _quant_bits
 
 
 def _quant_kernel(x_ref, r_ref, o_ref, *, fmt, stochastic, out_dtype):

@@ -1,6 +1,24 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
+
+
+def force_dryrun_devices() -> None:
+    """Spawn 512 placeholder CPU devices for production-mesh lowering.
+
+    MUST run before jax's first backend initialization (jax locks the
+    device count on first init).  Fired automatically when this module is
+    executed as the dry-run tool (``python -m repro.launch.dryrun``), and
+    called explicitly by in-process consumers (benchmarks/perf_report)
+    before they touch jax.  Deliberately NOT a plain-import side effect:
+    importing the parsing helpers from a pytest process must not
+    reconfigure that process's devices — tests must see the real single
+    CPU device (see conftest.py), and the 512-device layout perturbs XLA:CPU
+    codegen enough to break bit-exact kernel-vs-oracle comparisons.
+    """
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+if __name__ == "__main__":
+    force_dryrun_devices()
 
 """Multi-pod dry-run + roofline cost extraction.
 
@@ -172,14 +190,28 @@ def lower_and_compile(arch_cfg, shape_name, mesh, policy, **kw):
                                "compile_s": round(t2 - t1, 2)}
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict (jax >= 0.5) or a one-element
+    list of dicts (0.4.x)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def compiled_record(compiled, times) -> dict:
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = _cost_dict(compiled)
     txt = compiled.as_text()
     return {
         "times": times,
         "memory": {
-            "peak_bytes": ma.peak_memory_in_bytes,
+            # jax 0.4.x CompiledMemoryStats has no peak_memory_in_bytes;
+            # temp+args+output is the standard upper-bound proxy there
+            "peak_bytes": getattr(
+                ma, "peak_memory_in_bytes",
+                ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                + ma.output_size_in_bytes),
             "argument_bytes": ma.argument_size_in_bytes,
             "output_bytes": ma.output_size_in_bytes,
             "temp_bytes": ma.temp_size_in_bytes,
@@ -286,7 +318,7 @@ def _measure(cfg, shape_name, mesh, policy, *, seq=None, batch=None,
         lowered, compiled, times = lower_and_compile(
             cfg, name, mesh, policy,
             loss_chunk=loss_chunk or sh["seq"])
-        ca = compiled.cost_analysis()
+        ca = _cost_dict(compiled)
         return {
             "flops": ca.get("flops", 0.0),
             "bytes": ca.get("bytes accessed", 0.0),

@@ -15,9 +15,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     a second data-parallel axis crossing the DCN/ICI boundary."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.5 (Auto is the
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)  # 0.4.x default)
 
 
 def dp_axes_of(mesh) -> tuple:

@@ -1,4 +1,9 @@
-"""Serving launcher: batched prefill+decode.
+"""Serving launcher: batched prefill + decode.
+
+The decode loop is a single compiled ``lax.scan`` (``Model.generate``) —
+one XLA dispatch for the whole generation.  ``--loop python`` keeps the
+seed per-step loop (one dispatch per token) for A/B comparison; the
+benchmark in benchmarks/serve_decode.py tracks the two paths over time.
 
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 """
@@ -15,6 +20,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--loop", choices=("scan", "python"), default="scan")
+    ap.add_argument("--decode-backend", choices=("dense", "pallas"),
+                    default="dense",
+                    help="pallas: fused in-kernel KV-dequant decode attention")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args(argv)
@@ -24,24 +33,35 @@ def main(argv=None):
     from ..models.registry import build_model
 
     model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
+    model = model.with_cfg(decode_backend=args.decode_backend)
     params = model.init(jax.random.key(0))
     max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  model.cfg.vocab)
-    prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
-    step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
 
-    lg, caches = prefill(params, prompts)
-    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        lg, caches = step(params, tok, caches, args.prompt_len + i)
+    if args.loop == "scan":
+        gen_fn = jax.jit(lambda p, t: model.generate(
+            p, t, gen_len=args.gen, max_len=max_len)[0])
+        gen = jax.block_until_ready(gen_fn(params, prompts))  # compile
+        t0 = time.time()
+        gen = jax.block_until_ready(gen_fn(params, prompts))
+        dt = time.time() - t0
+        n_tok = args.batch * args.gen
+    else:
+        prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
+        step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+        lg, caches = prefill(params, prompts)
         tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"{args.arch}: {args.batch} x {args.gen - 1} tokens in "
-          f"{dt:.2f}s ({args.batch * (args.gen - 1) / dt:.1f} tok/s)")
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            lg, caches = step(params, tok, caches, args.prompt_len + i)
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        n_tok = args.batch * (args.gen - 1)
+    print(f"{args.arch} [{args.loop}/{args.decode_backend}]: "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
 
 
 if __name__ == "__main__":

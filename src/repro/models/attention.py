@@ -146,7 +146,8 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   cache: Optional[KVCache] = None,
                   cache_pos: Optional[jnp.ndarray] = None,
                   kv_states=None, use_rope=True, chunk: int = 512,
-                  windowed_slice: bool = False):
+                  windowed_slice: bool = False,
+                  decode_backend: str = "dense"):
     """Returns (out [B,S,D], new_cache).
 
     Train/prefill: cache None.  Decode: x is [B,1,D], cache holds Smax slots,
@@ -207,7 +208,8 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
         else:
             kv_len = cache_pos + s
             out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
-                                 window=window, cap=attn_softcap)
+                                 window=window, cap=attn_softcap,
+                                 backend=decode_backend)
     else:
         out = _masked_softmax_attend(
             q, k, v, policy, causal=causal,
@@ -219,8 +221,18 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     return shard(proj, residual_spec()), new_cache
 
 
-def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap):
-    """q [B,H,1,Dh] vs cache [B,Hkv,Smax,Dh]."""
+def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,
+                   backend: str = "dense"):
+    """q [B,H,1,Dh] vs cache [B,Hkv,Smax,Dh].
+
+    ``backend="pallas"`` routes through the fused decode-attention kernel
+    (kernels/decode_attention.py): the cache stays in its narrow storage
+    format until the in-kernel CONV->ADDMUL widening, and ``kv_len`` is a
+    dynamic kernel input so scan-based generation never retraces."""
+    if backend == "pallas":
+        from ..kernels import ops as kops
+        return kops.decode_attention(q, ck, cv, kv_len=kv_len, policy=policy,
+                                     window=window, softcap=cap)
     b, h, s, dh = q.shape
     _, hkv, smax, _ = ck.shape
     group = h // hkv

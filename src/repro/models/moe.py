@@ -172,7 +172,7 @@ def moe_block(x, params, cfg: MoEConfig, policy, *, mesh=None,
     if mesh is not None and ep_axis in mesh.axis_names and \
             mesh.shape[ep_axis] > 1:
         ep = mesh.shape[ep_axis]
-        from jax import shard_map
+        from ..core.compat import shard_map_compat as shard_map
         espec = P(ep_axis)
         pspec = {"router": P(), "w_gate": espec, "w_up": espec,
                  "w_down": espec}

@@ -188,7 +188,8 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             attn_softcap=spec.attn_softcap, rope_theta=cfg.rope_theta,
             qk_norm=spec.qk_norm, norm_eps=cfg.norm_eps,
             cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
-            chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice)
+            chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
+            decode_backend=cfg.decode_backend)
     elif spec.mixer == "mla":
         mix, nc = attn.mla_attention(
             h, ap["attn"], policy, n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
@@ -311,6 +312,12 @@ def encode(frame_embeds, enc_params, cfg: ModelConfig,
 class Model:
     cfg: ModelConfig
     policy: PrecisionPolicy
+
+    def with_cfg(self, **overrides) -> "Model":
+        """Copy of this model with config fields replaced (e.g.
+        ``model.with_cfg(decode_backend="pallas")``)."""
+        return dataclasses.replace(
+            self, cfg=dataclasses.replace(self.cfg, **overrides))
 
     # -- init ------------------------------------------------------------
     def init(self, key) -> dict:
@@ -504,6 +511,43 @@ class Model:
         x = _norm(x, params["norm_f"], cfg)
         lg = self.logits(params, x[:, -1:]).astype(F32)
         return lg, caches
+
+    def generate(self, params, tokens, *, gen_len: int,
+                 max_len: Optional[int] = None, frontend_embeds=None,
+                 mesh=None, return_logits: bool = False):
+        """Prefill + greedy decode of ``gen_len`` tokens as ONE compiled
+        program: the decode loop is a ``lax.scan`` over ``decode_step``, so
+        the whole generation costs a single dispatch instead of one per
+        token (the per-step Python loop pays XLA dispatch + argument
+        flattening ~every token; see benchmarks/serve_decode.py).
+
+        The cache write index and the attention ``kv_len`` are traced scan
+        carries — decode_step (and the Pallas decode kernel, which takes
+        ``kv_len`` as a dynamic input) compile exactly once.
+
+        Returns ``(gen_tokens [B, gen_len], logits)`` where ``logits`` is
+        ``[B, gen_len, V]`` (prefill last-token logits followed by each
+        step's) when ``return_logits`` else None.
+        """
+        b, prompt_len = tokens.shape
+        max_len = max_len if max_len is not None else prompt_len + gen_len
+        lg0, caches = self.prefill(params, tokens, max_len=max_len,
+                                   frontend_embeds=frontend_embeds, mesh=mesh)
+        tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
+
+        def body(carry, _):
+            tok, c, pos = carry
+            lg, c = self.decode_step(params, tok, c, pos, mesh=mesh)
+            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            ys = (nxt[:, 0], lg[:, 0]) if return_logits else (nxt[:, 0],)
+            return (nxt, c, pos + 1), ys
+
+        init = (tok0, caches, jnp.asarray(prompt_len, jnp.int32))
+        _, ys = jax.lax.scan(body, init, None, length=gen_len - 1)
+        gen = jnp.concatenate([tok0, ys[0].swapaxes(0, 1)], axis=1)
+        if not return_logits:
+            return gen, None
+        return gen, jnp.concatenate([lg0, jnp.moveaxis(ys[1], 0, 1)], axis=1)
 
     def decode_step(self, params, token, caches: Caches, pos, *, mesh=None):
         """One decode step: token [B,1], pos scalar -> (logits [B,1,V], caches)."""

@@ -1,0 +1,54 @@
+"""core.ops.cast_and_pack general-axis interleave (paper §III.A.2c).
+
+The seed silently ignored ``axis`` for anything but -1 (returning the
+un-flattened stack); the contract is now: interleave along ``axis`` with
+``out.shape[axis] == 2 * in.shape[axis]`` for ANY axis.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops as tp
+
+
+def _ab(shape, seed=0):
+    rs = np.random.RandomState(seed)
+    return (jnp.asarray(rs.randn(*shape).astype(np.float32)),
+            jnp.asarray(rs.randn(*shape).astype(np.float32)))
+
+
+@pytest.mark.parametrize("axis", [-1, 0, 1, -2])
+def test_interleave_any_axis(axis):
+    a, b = _ab((4, 6))
+    out = tp.cast_and_pack(a, b, "fp16alt", axis=axis)
+    ax = axis % 2
+    want_shape = [4, 6]
+    want_shape[ax] *= 2
+    assert out.shape == tuple(want_shape)
+    qa = np.asarray(tp.tp_cast(a, "fp16alt"), np.float32)
+    qb = np.asarray(tp.tp_cast(b, "fp16alt"), np.float32)
+    got = np.asarray(out, np.float32)
+    even = np.take(got, np.arange(0, want_shape[ax], 2), axis=ax)
+    odd = np.take(got, np.arange(1, want_shape[ax], 2), axis=ax)
+    np.testing.assert_array_equal(even, qa)
+    np.testing.assert_array_equal(odd, qb)
+
+
+def test_axis_minus_one_matches_seed_behavior():
+    """The axis=-1 fast path keeps its original semantics."""
+    a, b = _ab((3, 5), seed=1)
+    out = tp.cast_and_pack(a, b, "fp8", axis=-1)
+    qa = np.asarray(tp.tp_cast(a, "fp8"), np.float32)
+    qb = np.asarray(tp.tp_cast(b, "fp8"), np.float32)
+    want = np.stack([qa, qb], axis=-1).reshape(3, 10)
+    np.testing.assert_array_equal(np.asarray(out, np.float32), want)
+
+
+def test_3d_middle_axis():
+    a, b = _ab((2, 3, 4), seed=2)
+    out = tp.cast_and_pack(a, b, "fp16", axis=1)
+    assert out.shape == (2, 6, 4)
+    np.testing.assert_array_equal(np.asarray(out[:, 0::2]),
+                                  np.asarray(tp.tp_cast(a, "fp16")))
+    np.testing.assert_array_equal(np.asarray(out[:, 1::2]),
+                                  np.asarray(tp.tp_cast(b, "fp16")))

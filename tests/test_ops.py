@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property-based tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ops as tp

@@ -12,6 +12,9 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property-based tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import softfloat
