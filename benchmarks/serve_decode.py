@@ -1,7 +1,9 @@
 """Serving benchmark: prefill latency + steady-state decode tok/s.
 
-Compares the three decode paths on reduced archs (CPU; the same code runs
-compiled on TPU):
+Prefill is A/B'd dense-vs-pallas (``prefill_dense_ms`` / ``prefill_pallas_ms``:
+the pure-JAX chunked softmax vs the pruned-grid Pallas flash-attention
+kernel behind ``cfg.prefill_backend``), and three decode paths are compared,
+on reduced archs (CPU; the same code runs compiled on TPU):
 
   * ``python``      — the seed per-step loop: one jit'd ``decode_step``
                       dispatch per generated token.
@@ -70,10 +72,17 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     max_len = prompt_len + gen
     model, params, prompts = build("tp_bf16", "dense")
 
-    # -- prefill latency ----------------------------------------------------
+    # -- prefill latency: dense vs pruned-grid Pallas A/B -------------------
+    # (pallas runs in interpret mode on CPU — expected to lose here; the A/B
+    # tracks both so the TPU rerun lands in the same columns.)
     prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
     row["prefill_ms"] = _time_call(
         lambda: prefill(params, prompts)[0], repeats) * 1e3
+    row["prefill_dense_ms"] = row["prefill_ms"]
+    model_pp = model.with_cfg(prefill_backend="pallas")
+    prefill_pp = jax.jit(lambda p, t: model_pp.prefill(p, t, max_len=max_len))
+    row["prefill_pallas_ms"] = _time_call(
+        lambda: prefill_pp(params, prompts)[0], repeats) * 1e3
 
     # -- python per-step loop (the seed path) -------------------------------
     step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
@@ -146,7 +155,8 @@ def main(argv=None):
         row = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
                          gen=args.gen, repeats=args.repeats)
         report["archs"][arch] = row
-        print(f"  prefill {row['prefill_ms']:.1f} ms | "
+        print(f"  prefill dense {row['prefill_dense_ms']:.1f} ms "
+              f"/ pallas {row['prefill_pallas_ms']:.1f} ms | "
               f"python {row['python_tok_s']:.1f} tok/s | "
               f"scan {row['scan_tok_s']:.1f} tok/s "
               f"({row['scan_speedup']:.2f}x) | "

@@ -2,9 +2,10 @@
 # CI entrypoint: tier-1 tests + a smoke serving-decode benchmark.
 #
 # Mirrors the tier-1 verify line in ROADMAP.md; the benchmark smoke run
-# exercises the scan-based generation path and the fused Pallas decode
-# kernel end-to-end without writing BENCH_serve.json (use
-# `python -m benchmarks.serve_decode` for the full tracked run).
+# exercises the scan-based generation path, the fused Pallas decode kernel,
+# and the dense-vs-pallas pruned-grid prefill A/B end-to-end without
+# writing BENCH_serve.json (use `python -m benchmarks.serve_decode` for the
+# full tracked run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -87,7 +87,10 @@ class ModelConfig:
     unroll_scan: bool = False  # unroll the layer scan (cost extraction only)
     # --- beyond-paper perf knobs (default off = paper-faithful baseline) ---
     windowed_slice: bool = False  # local attn: slice KV to the window
-    decode_backend: str = "dense"  # "pallas": fused KV-dequant decode kernel
+    decode_backend: str = "dense"  # "pallas": fused KV-dequant decode kernel;
+    #                                "auto": pallas off-CPU, dense on CPU
+    prefill_backend: str = "dense"  # "pallas": pruned-grid flash-attention
+    #                                 kernel on prefill/train; "auto" as above
     ce_dtype: str = "fp32"        # "fp16alt": bf16 CE logits (half HBM)
     embed_sharding: str = "vocab"  # "replicated": no embed collectives
     remat_policy: str = "full"    # full | dots (save matmul outputs) | none

@@ -16,7 +16,13 @@ winner in a JSON cache keyed by (op, shape, dtype, backend):
 
 The cache file lives at ``$REPRO_AUTOTUNE_CACHE`` (default
 ``~/.cache/repro/autotune.json``); entries from different backends never
-collide, so a cache warmed on TPU is inert on CPU and vice versa.
+collide, so a cache warmed on TPU is inert on CPU and vice versa.  Entries
+are additionally keyed by the jax version that timed them — a jax upgrade
+changes Mosaic/XLA codegen, so pre-upgrade winners silently invalidate and
+``best_block`` falls back to the heuristic until re-tuned.  Legacy
+(pre-versioning) cache files load fine: their entries are adopted once
+under the running jax version (they were timed on the install that wrote
+them) and re-persisted in the keyed form on the next ``record``.
 """
 from __future__ import annotations
 
@@ -50,7 +56,7 @@ def _key(op: str, shape: Sequence[int], dtype, backend: Optional[str] = None
          ) -> str:
     backend = backend or jax.default_backend()
     return f"{op}|{'x'.join(str(int(s)) for s in shape)}|" \
-           f"{jnp.dtype(dtype).name}|{backend}"
+           f"{jnp.dtype(dtype).name}|{backend}|jax-{jax.__version__}"
 
 
 def _load_file() -> None:
@@ -65,7 +71,15 @@ def _load_file() -> None:
     except (OSError, ValueError):
         return
     for k, v in disk.items():
-        _MEM.setdefault(k, [int(x) for x in v])
+        try:
+            block = [int(x) for x in v]
+        except (TypeError, ValueError):
+            continue                     # unknown entry shape: skip, don't die
+        if k.count("|") == 3:            # legacy op|shape|dtype|backend key:
+            k = f"{k}|jax-{jax.__version__}"   # one-time adoption (docstring)
+        elif k.count("|") != 4:
+            continue
+        _MEM.setdefault(k, block)
 
 
 def reset(clear_env_cache: bool = False) -> None:

@@ -51,7 +51,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import get_format
-from .quant_common import quantize_rne_bits
+from .quant_common import widen as _widen
 
 NEG_INF = -1e30
 
@@ -65,15 +65,6 @@ def softcap_scores(s, cap: float):
     Shared by decode_attention_pallas and ref.decode_attention_ref."""
     e = jnp.exp(s * (2.0 / cap))
     return cap * (1.0 - 2.0 / (e + 1.0))
-
-
-def _widen(x, fmt, src_dtype):
-    """CONV stage: storage format -> compute format at the FMA input.
-    Native narrow dtypes widen exactly; f32 containers RNE-snap onto the
-    storage grid first (emulated narrow storage)."""
-    if fmt is not None and x.dtype == jnp.float32:
-        x = quantize_rne_bits(x, fmt)
-    return x.astype(src_dtype)
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, acc_ref,

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: transprecision flash attention.
+"""Pallas TPU kernel: pruned-grid transprecision flash attention (prefill).
 
 Attention is the framework's dominant non-GEMM compute hot-spot; this kernel
 applies FPnew's multi-format FMA contract to both attention contractions:
@@ -6,120 +6,226 @@ QK^T and PV multiply in ``src_fmt`` (bf16/fp16/fp8), while the online-softmax
 statistics (running max / denominator) and the output accumulator stay in
 f32 — the expanding-FMA pattern of paper §II.B.4 at the kernel level.
 
-Features: GQA head mapping, causal masking, sliding-window (local) masking,
-attention-logit soft-capping (gemma-2/3), per-block VMEM tiling.
+Energy proportionality at the schedule level (§II.B.4): the grid visits ONLY
+the KV blocks a query block can actually see.  ``block_schedule`` computes
+the active ``(iq, ik)`` pairs host-side — causal future blocks and blocks
+left of a sliding window never appear in the grid at all — and the flattened
+schedule is fed to the kernel as scalar-prefetch tables that drive the block
+index maps (splash-attention style).  Causal ``sq == skv`` prefill thus runs
+~half the dense grid's block visits, and a window layer O(window / skv) of
+them.  ``kv_len`` is a *dynamic* kernel input (SMEM scalar-prefetch, like
+the decode kernel): distinct prompt lengths reuse one compiled kernel, and
+blocks entirely past ``kv_len`` early-out via ``pl.when`` at run time.
 
-Layout: q [BH, Sq, D], k/v [BKV, Skv, D] (heads pre-flattened by ops.py).
-Grid (BH, Sq/bq, Skv/bk), kv innermost; scratch: acc (bq, D) f32, running
-max m and denominator l as (bq, 128) replicated lanes (TPU-friendly 2D).
+Features: GQA head mapping, causal masking, sliding-window (local) masking,
+attention-logit soft-capping (gemma-2/3), V head dim != QK head dim (MLA
+expanded prefill), optional in-kernel RNE operand snap for emulate-mode
+policies, per-block VMEM tiling, optional block-visit instrumentation.
+
+Layout: q [BH, Sq, D], k [BKV, Skv, D], v [BKV, Skv, Dv] (heads
+pre-flattened by ops.py).  Grid (BH, n_steps) over the pruned schedule;
+scratch: acc (bq, Dv) f32, running max m and denominator l as (bq, 128)
+replicated lanes (TPU-friendly 2D).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import get_format
+from .decode_attention import softcap_scores
+from .quant_common import widen as _widen
 
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                 nk: int, bq: int, bk: int, scale: float, causal: bool,
-                 window: Optional[int], softcap: Optional[float],
-                 kv_len: int, src_dtype, out_dtype):
-    ik = pl.program_id(2)
+def block_schedule(sq: int, skv: int, bq: int, bk: int, *, causal: bool,
+                   window: Optional[int], q_offset: int = 0
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The pruned grid: active ``(iq, ik)`` block pairs, host-side.
 
-    @pl.when(ik == 0)
+    Returns int32 arrays ``(qi, ki, first, last)`` of equal length — for
+    each grid step, the query-block index, the KV-block index, and flags
+    marking the first / last KV block of that query block's run (scratch
+    init / output store points).  A KV block is scheduled iff some query row
+    in the block can attend to some key in it under the *static* masks:
+
+      causal  — key blocks past the last query row of the block are dropped
+                (``ik * bk > q_offset + (iq+1)*bq - 1``),
+      window  — key blocks entirely left of the earliest reachable key
+                (``q_offset + iq*bq - window + 1``) are dropped.
+
+    The dynamic ``kv_len`` bound cannot shrink the grid (it is a traced
+    value) — the kernel ``pl.when``-skips those blocks at run time instead.
+    Every query block keeps >= 1 step so its output is always stored.
+    """
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    nq, nk = sq // bq, skv // bk
+    qi, ki, first, last = [], [], [], []
+    for iq in range(nq):
+        k_hi = nk - 1
+        if causal:
+            k_hi = min(k_hi, (q_offset + (iq + 1) * bq - 1) // bk)
+        k_lo = 0
+        if window is not None:
+            k_lo = max(0, (q_offset + iq * bq - window + 1) // bk)
+        k_lo = min(k_lo, k_hi)   # degenerate: keep one step for the store
+        for ik in range(k_lo, k_hi + 1):
+            qi.append(iq)
+            ki.append(ik)
+            first.append(1 if ik == k_lo else 0)
+            last.append(1 if ik == k_hi else 0)
+    mk = lambda a: np.asarray(a, np.int32)
+    return mk(qi), mk(ki), mk(first), mk(last)
+
+
+def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref,
+                 q_ref, k_ref, v_ref, o_ref, *rest, bq: int, bk: int,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], q_offset: int, src_fmt,
+                 src_dtype, out_dtype, debug_visits: bool):
+    if debug_visits:
+        visits_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        acc_ref, m_ref, l_ref = rest
+    step = pl.program_id(1)
+    iq = qi_ref[step]
+    ik = ki_ref[step]
+    kvl = kvl_ref[0]
+
+    @pl.when(ff_ref[step] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0].astype(src_dtype)           # (bq, D)
-    k = k_ref[0].astype(src_dtype)           # (bk, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s * scale
-    if softcap is not None:
-        s = softcap * jnp.tanh(s / softcap)
+    # dynamic early-out: the whole KV block lies past the live length.
+    # Skipping is exact — a fully-masked block contributes p = 0 and
+    # alpha = exp(0) = 1, so the online state would be bit-identical.
+    active = ik * bk < kvl
 
-    iq = pl.program_id(1)
-    q_idx = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = k_idx < kv_len
-    if causal:
-        mask &= q_idx >= k_idx
-    if window is not None:
-        mask &= (q_idx - k_idx) < window
-    s = jnp.where(mask, s, NEG_INF)
+    @pl.when(active)
+    def _work():
+        q = _widen(q_ref[0], src_fmt, src_dtype)     # (bq, D)
+        k = _widen(k_ref[0], src_fmt, src_dtype)     # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = softcap_scores(s, softcap)
 
-    m_prev = m_ref[:, :1]                     # (bq, 1)
-    m_cur = jnp.max(s, axis=-1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    # guard fully-masked rows (m_new == NEG_INF): keep exp argument finite
-    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
-    p = jnp.where(mask, p, 0.0)
-    alpha = jnp.exp(jnp.where(m_new <= NEG_INF / 2, 0.0, m_prev - m_new))
+        q_idx = (q_offset + iq * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        k_idx = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_idx < kvl
+        if causal:
+            mask &= q_idx >= k_idx
+        if window is not None:
+            mask &= (q_idx - k_idx) < window
+        s = jnp.where(mask, s, NEG_INF)
 
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    v = v_ref[0].astype(src_dtype)
-    pv = jax.lax.dot_general(p.astype(src_dtype), v,
-                             (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * alpha + pv
-    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        m_prev = m_ref[:, :1]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m_new == NEG_INF): keep exp arg finite
+        p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(jnp.where(m_new <= NEG_INF / 2, 0.0, m_prev - m_new))
 
-    @pl.when(ik == nk - 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = _widen(v_ref[0], src_fmt, src_dtype)
+        pv = jax.lax.dot_general(_widen(p, src_fmt, src_dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(lf_ref[step] == 1)
     def _store():
         l = l_ref[:, :1]
         o_ref[0] = (acc_ref[...] /
                     jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
 
+    if debug_visits:
+        visits_ref[0, 0] = active.astype(jnp.int32)
+
 
 @functools.partial(jax.jit, static_argnames=(
-    "group", "bq", "bk", "scale", "causal", "window", "softcap", "kv_len",
-    "src_dtype", "out_dtype", "interpret"))
-def flash_attention_pallas(q, k, v, *, group: int = 1, bq: int = 128,
-                           bk: int = 128, scale: float = 1.0,
+    "group", "bq", "bk", "scale", "causal", "window", "softcap", "q_offset",
+    "src_fmt_name", "src_dtype", "out_dtype", "interpret", "debug_visits"))
+def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
+                           bq: int = 128, bk: int = 128, scale: float = 1.0,
                            causal: bool = True,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
-                           kv_len: Optional[int] = None,
+                           q_offset: int = 0,
+                           src_fmt_name: Optional[str] = None,
                            src_dtype=jnp.bfloat16,
                            out_dtype=jnp.float32,
-                           interpret: bool = True):
-    """q: [BH, Sq, D]; k, v: [BKV, Skv, D] with BH = BKV * group.
+                           interpret: bool = True,
+                           debug_visits: bool = False):
+    """q: [BH, Sq, D]; k: [BKV, Skv, D]; v: [BKV, Skv, Dv]; BH = BKV * group.
 
-    Sq % bq == 0 and Skv % bk == 0 (ops.py pads); ``kv_len`` masks padding.
+    Sq % bq == 0 and Skv % bk == 0 (ops.py pads).  ``kv_len`` masks keys at
+    or past the live length — it is a DYNAMIC input (python int, 0-d array,
+    or traced scalar; None means Skv), so distinct prompt lengths sharing a
+    padded shape reuse one compiled kernel.  ``src_fmt_name`` requests the
+    in-kernel RNE operand snap for emulate-mode policies (f32 containers);
+    native narrow ``src_dtype`` casts need none.  With ``debug_visits`` the
+    kernel also returns an int32 [n_steps, 1] array flagging which scheduled
+    grid steps did QK/PV work (the dynamic ``kv_len`` early-outs write 0).
     """
     bh, sq, d = q.shape
     bkv, skv, dk = k.shape
-    assert d == dk and bh == bkv * group, (q.shape, k.shape, group)
+    _, skv_v, dv = v.shape
+    assert d == dk and skv == skv_v and bh == bkv * group, \
+        (q.shape, k.shape, v.shape, group)
     assert sq % bq == 0 and skv % bk == 0, (q.shape, k.shape, bq, bk)
-    kv_len = skv if kv_len is None else kv_len
-    nk = skv // bk
+    kvl = jnp.reshape(jnp.asarray(skv if kv_len is None else kv_len,
+                                  jnp.int32), (1,))
+    qi, ki, ff, lf = block_schedule(sq, skv, bq, bk, causal=causal,
+                                    window=window, q_offset=q_offset)
+    n_steps = len(qi)
 
     kern = functools.partial(
-        _attn_kernel, nk=nk, bq=bq, bk=bk, scale=scale, causal=causal,
-        window=window, softcap=softcap, kv_len=kv_len,
-        src_dtype=src_dtype, out_dtype=out_dtype)
-    return pl.pallas_call(
-        kern,
-        grid=(bh, sq // bq, nk),
+        _attn_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+        window=window, softcap=softcap, q_offset=q_offset,
+        src_fmt=get_format(src_fmt_name) if src_fmt_name else None,
+        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+    out_shape = [jax.ShapeDtypeStruct((bh, sq, dv), out_dtype)]
+    out_specs = [pl.BlockSpec((1, bq, dv),
+                              lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0))]
+    if debug_visits:
+        out_shape.append(jax.ShapeDtypeStruct((n_steps, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec(
+            (1, 1), lambda h, s, kvl, qi, ki, ff, lf: (s, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(bh, n_steps),
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bq, d),
+                         lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, s, kvl, qi, ki, ff, lf, g=group:
+                         (h // g, ki[s], 0)),
+            pl.BlockSpec((1, bk, dv),
+                         lambda h, s, kvl, qi, ki, ff, lf, g=group:
+                         (h // g, ki[s], 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), out_dtype),
+        out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)
+        ])
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(kvl, jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(ff),
+      jnp.asarray(lf), q, k, v)
+    return tuple(out) if debug_visits else out[0]

@@ -96,17 +96,54 @@ def cast_and_pack(a, b, *, fmt, stochastic: bool = False, key=None,
     return r[:rows, :2 * cols]
 
 
-def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
+def resolve_backend(backend: str) -> str:
+    """Shared decode/prefill attention-backend resolution.
+
+    ``"auto"`` picks the Pallas kernels only off-CPU: on CPU the kernels run
+    in interpret mode, which is ~20x slower than the dense jnp path on the
+    serving hot loop (BENCH_serve.json, gemma2-9b: ``scan_pallas_kv8_tok_s``
+    716 vs ``scan_tok_s`` 14043) — ``auto`` must never silently interpret
+    there.  Explicit ``"pallas"`` is honored anywhere (tests/benchmarks).
+    """
+    if backend == "auto":
+        return "dense" if jax.default_backend() == "cpu" else "pallas"
+    if backend not in ("dense", "pallas"):
+        raise ValueError(f"backend must be dense|pallas|auto, got {backend!r}")
+    return backend
+
+
+def flash_attention(q, k, v, *, kv_len=None, policy=None,
+                    scale: Optional[float] = None,
                     causal: bool = True, window: Optional[int] = None,
-                    softcap: Optional[float] = None,
+                    softcap: Optional[float] = None, q_offset: int = 0,
                     bq: Optional[int] = None, bk: Optional[int] = None,
-                    interpret: bool = True):
-    """q [B, H, S, D], k/v [B, Hkv, Skv, D] -> [B, H, S, D] (f32)."""
+                    interpret: Optional[bool] = None):
+    """q [B, H, S, D], k/v [B, Hkv, Skv, Dk/Dv] -> [B, H, S, Dv] (f32).
+
+    The prefill/train attention entry point (behind ``cfg.prefill_backend``):
+    heads are flattened, ``(bq, bk)`` comes from the autotuner unless pinned,
+    and the kernel runs the pruned block schedule — causal future blocks and
+    blocks left of a sliding window are never visited.  ``kv_len`` is a
+    dynamic kernel input (padding/ragged masking without retrace);
+    ``q_offset`` shifts query positions (prefill at a nonzero cache write
+    index).  V may have a different head dim than Q/K (MLA expanded form).
+
+    ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
+    accelerators — same hot-path contract as ``decode_attention``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     policy = get_policy(policy) if policy is not None else get_policy("tp_bf16")
-    src_dt = (policy.matmul.src_fmt.native_dtype
-              if policy.mode == "native" else jnp.float32)
+    mp = policy.matmul
+    if policy.mode == "native":
+        src_dt, src_fmt_name = mp.src_fmt.native_dtype, None
+    else:
+        # f32 containers: RNE-snap operands onto the src grid in-kernel
+        src_dt = jnp.float32
+        src_fmt_name = mp.src_fmt.name if mp.src_fmt.name != "fp32" else None
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
     group = h // hkv
     scale = scale if scale is not None else d ** -0.5
     if bq is None or bk is None:
@@ -114,17 +151,18 @@ def flash_attention(q, k, v, *, policy=None, scale: Optional[float] = None,
         bq, bk = (bq or tq), (bk or tk)
     qf = q.reshape(b * h, sq, d)
     kf = k.reshape(b * hkv, skv, d)
-    vf = v.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, dv)
     bq_ = min(bq, max(8, sq))
     bk_ = min(bk, max(128, skv))
     qf, _ = _pad_to(qf, (bq_,), (1,))
     kf, _ = _pad_to(kf, (bk_,), (1,))
     vf, _ = _pad_to(vf, (bk_,), (1,))
     o = flash_attention_pallas(
-        qf, kf, vf, group=group, bq=bq_, bk=bk_, scale=scale, causal=causal,
-        window=window, softcap=softcap, kv_len=skv, src_dtype=src_dt,
-        out_dtype=jnp.float32, interpret=interpret)
-    return o[:, :sq].reshape(b, h, sq, d)
+        qf, kf, vf, skv if kv_len is None else kv_len, group=group,
+        bq=bq_, bk=bk_, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, src_fmt_name=src_fmt_name,
+        src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+    return o[:, :sq].reshape(b, h, sq, dv)
 
 
 def decode_attention(q, k, v, *, kv_len, policy=None,

@@ -62,3 +62,13 @@ def quantize_rne_bits(x, fmt: FPFormat):
     """RNE grid snap of an f32 array onto ``fmt`` (no randomness operand) —
     the in-kernel dequant step for narrow formats stored in f32 containers."""
     return quantize_bits(x, None, fmt, stochastic=False)
+
+
+def widen(x, fmt, src_dtype):
+    """CONV stage: storage format -> compute format at the FMA input.
+    Native narrow dtypes widen exactly; f32 containers RNE-snap onto the
+    storage grid first (emulated narrow storage).  Shared by the decode-
+    and prefill-attention kernels."""
+    if fmt is not None and x.dtype == jnp.float32:
+        x = quantize_rne_bits(x, fmt)
+    return x.astype(src_dtype)

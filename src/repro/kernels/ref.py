@@ -6,6 +6,7 @@ assert_allclose kernels against them over shape/dtype sweeps.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -50,6 +51,15 @@ def _ftz(x, fmt):
     return jnp.where(jnp.abs(x) < fmt.min_normal, jnp.sign(x) * 0.0, x)
 
 
+def _snap(x, fmt, src_dtype):
+    """Oracle twin of quant_common.widen: emulate-mode f32 containers are
+    RNE-snapped (with FTZ) onto the storage grid, then cast to the compute
+    dtype.  Shared by every attention oracle in this module."""
+    if fmt is not None and x.dtype == jnp.float32:
+        x = _ftz(softfloat.quantize(x, fmt), fmt)
+    return x.astype(src_dtype)
+
+
 def tp_quantize_ref(x, *, fmt_name, out_dtype=jnp.float32):
     fmt = get_format(fmt_name)
     q = _ftz(softfloat.quantize(x.astype(jnp.float32), fmt), fmt)
@@ -66,19 +76,45 @@ def cast_and_pack_ref(a, b, *, fmt_name, out_dtype=jnp.float32):
 def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
                         causal: bool = True, window: Optional[int] = None,
                         softcap: Optional[float] = None,
-                        kv_len: Optional[int] = None,
-                        src_dtype=jnp.bfloat16, out_dtype=jnp.float32):
-    """Dense-softmax oracle with identical format contract to the kernel."""
+                        kv_len: Optional[int] = None, q_offset: int = 0,
+                        src_fmt_name: Optional[str] = None,
+                        src_dtype=jnp.bfloat16, out_dtype=jnp.float32,
+                        bq: Optional[int] = None, bk: Optional[int] = None):
+    """Flash-attention oracle with identical format contract to the kernel.
+
+    ``bq``/``bk`` fix the online-softmax blocking schedule: the oracle then
+    walks the SAME pruned block schedule as the kernel
+    (``flash_attention.block_schedule``) with the same per-block rescaling
+    ops, making it bit-exact against ``flash_attention_pallas`` in interpret
+    mode — the prefill analogue of ``decode_attention_ref``'s ``bk``.  With
+    ``bq=bk=None`` it is the plain dense-softmax reference (one global max,
+    one sum — tolerance comparisons only).
+
+    ``src_fmt_name`` mirrors the kernel's emulate-mode RNE operand snap
+    (f32 containers); ``q_offset`` shifts query positions for the causal /
+    window masks.  q: [BH, Sq, D]; k: [BKV, Skv, D]; v: [BKV, Skv, Dv].
+    """
     bh, sq, d = q.shape
     bkv, skv, _ = k.shape
     kv_len = skv if kv_len is None else kv_len
+    if bq is not None or bk is not None:
+        assert bq is not None and bk is not None, (bq, bk)
+        return _flash_blocked_ref(
+            q, k, v, group=group, scale=scale, causal=causal, window=window,
+            softcap=softcap, kv_len=kv_len, q_offset=q_offset,
+            src_fmt_name=src_fmt_name, src_dtype=src_dtype,
+            out_dtype=out_dtype, bq=bq, bk=bk)
+
+    fmt = get_format(src_fmt_name) if src_fmt_name else None
+    snap = lambda x: _snap(x, fmt, src_dtype)
+
     kk = jnp.repeat(k, group, axis=0)
     vv = jnp.repeat(v, group, axis=0)
-    s = jnp.einsum("hqd,hkd->hqk", q.astype(src_dtype), kk.astype(src_dtype),
+    s = jnp.einsum("hqd,hkd->hqk", snap(q), snap(kk),
                    preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    q_idx = jnp.arange(sq)[:, None]
+    q_idx = q_offset + jnp.arange(sq)[:, None]
     k_idx = jnp.arange(skv)[None, :]
     mask = k_idx < kv_len
     if causal:
@@ -91,9 +127,86 @@ def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
     p = jnp.exp(s - m)
     p = jnp.where(mask[None], p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("hqk,hkd->hqd", p.astype(src_dtype).astype(jnp.float32),
+    o = jnp.einsum("hqk,hkd->hqd", snap(p).astype(jnp.float32),
                    vv.astype(jnp.float32), preferred_element_type=jnp.float32)
     return (o / jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+
+
+def _flash_block_update(qb, kb, vb, acc, m, l, q_base, k_base, kvl, *,
+                        scale, causal, window, softcap, src_fmt_name,
+                        src_dtype):
+    """One online-softmax block step — the exact op sequence of
+    ``flash_attention._attn_kernel``'s work block.  MUST run jitted: the
+    rescale updates are mul+add chains that XLA:CPU contracts into FMAs
+    (single rounding) inside any compiled computation — eager op-by-op
+    dispatch rounds twice and is one ulp off.  The jitted form matches the
+    kernel (whose body is always compiled, interpret mode included)."""
+    from .decode_attention import softcap_scores
+
+    fmt = get_format(src_fmt_name) if src_fmt_name else None
+    snap = lambda x: _snap(x, fmt, src_dtype)
+    bq, bk = qb.shape[0], kb.shape[0]
+    s = jax.lax.dot_general(snap(qb), snap(kb), (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap_scores(s, softcap)
+    q_idx = q_base + jnp.arange(bq)[:, None]
+    k_idx = k_base + jnp.arange(bk)[None, :]
+    mask = k_idx < kvl
+    if causal:
+        mask = mask & (q_idx >= k_idx)
+    if window is not None:
+        mask = mask & ((q_idx - k_idx) < window)
+    s = jnp.where(mask, s, NEG_INF)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.where(m_new <= NEG_INF / 2, 0.0, m - m_new))
+    l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(snap(p), snap(vb), (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc = acc * alpha + pv
+    return acc, m_new, l
+
+
+def _flash_blocked_ref(q, k, v, *, group, scale, causal, window, softcap,
+                       kv_len, q_offset, src_fmt_name, src_dtype, out_dtype,
+                       bq, bk):
+    """Blocked online-softmax walk over the kernel's pruned schedule —
+    elementary-op-for-op the same updates as ``_attn_kernel``, so the
+    result is bitwise identical in interpret mode."""
+    from .flash_attention import block_schedule
+
+    bh, sq, d = q.shape
+    dv = v.shape[-1]
+    qi, ki, ff, lf = block_schedule(sq, k.shape[1], bq, bk, causal=causal,
+                                    window=window, q_offset=q_offset)
+    upd = jax.jit(functools.partial(
+        _flash_block_update, scale=scale, causal=causal, window=window,
+        softcap=softcap, src_fmt_name=src_fmt_name, src_dtype=src_dtype))
+    out = []
+    for h in range(bh):
+        hk = h // group
+        rows = {}
+        for step in range(len(qi)):
+            iq, ik = int(qi[step]), int(ki[step])
+            if ff[step]:
+                acc = jnp.zeros((bq, dv), jnp.float32)
+                m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+                l = jnp.zeros((bq, 1), jnp.float32)
+            if ik * bk < kv_len:   # the kernel's dynamic pl.when early-out
+                acc, m, l = upd(q[h, iq * bq:(iq + 1) * bq],
+                                k[hk, ik * bk:(ik + 1) * bk],
+                                v[hk, ik * bk:(ik + 1) * bk],
+                                acc, m, l,
+                                jnp.int32(q_offset + iq * bq),
+                                jnp.int32(ik * bk), jnp.int32(kv_len))
+            if lf[step]:
+                rows[iq] = (acc /
+                            jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+        out.append(jnp.concatenate([rows[iq] for iq in sorted(rows)], axis=0))
+    return jnp.stack(out)
 
 
 def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
@@ -121,12 +234,8 @@ def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
     bk = smax if bk is None else bk
     assert smax % bk == 0, (smax, bk)
 
-    def snap(x, fmt_name):
-        if fmt_name is not None and x.dtype == jnp.float32:
-            fmt = get_format(fmt_name)
-            x = _ftz(softfloat.quantize(x, fmt), fmt)
-        return x.astype(src_dtype)
-
+    snap = lambda x, fmt_name: _snap(
+        x, get_format(fmt_name) if fmt_name else None, src_dtype)
     qs = snap(q, q_fmt_name)
     ks = snap(k, kv_fmt_name)
     vs = snap(v, kv_fmt_name)

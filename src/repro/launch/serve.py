@@ -21,9 +21,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--loop", choices=("scan", "python"), default="scan")
-    ap.add_argument("--decode-backend", choices=("dense", "pallas"),
-                    default="dense",
-                    help="pallas: fused in-kernel KV-dequant decode attention")
+    ap.add_argument("--decode-backend", choices=("dense", "pallas", "auto"),
+                    default="auto",
+                    help="pallas: fused in-kernel KV-dequant decode attention;"
+                         " auto (default): pallas off-CPU, dense on CPU")
+    ap.add_argument("--prefill-backend", choices=("dense", "pallas", "auto"),
+                    default="auto",
+                    help="pallas: pruned-grid flash-attention prefill kernel;"
+                         " auto (default): pallas off-CPU, dense on CPU")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 enables sampling (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--top-p", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args(argv)
@@ -33,7 +43,8 @@ def main(argv=None):
     from ..models.registry import build_model
 
     model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
-    model = model.with_cfg(decode_backend=args.decode_backend)
+    model = model.with_cfg(decode_backend=args.decode_backend,
+                           prefill_backend=args.prefill_backend)
     params = model.init(jax.random.key(0))
     max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(jax.random.key(1),
@@ -41,22 +52,34 @@ def main(argv=None):
                                  model.cfg.vocab)
 
     if args.loop == "scan":
+        key = jax.random.key(args.seed)
         gen_fn = jax.jit(lambda p, t: model.generate(
-            p, t, gen_len=args.gen, max_len=max_len)[0])
+            p, t, gen_len=args.gen, max_len=max_len,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, key=key)[0])
         gen = jax.block_until_ready(gen_fn(params, prompts))  # compile
         t0 = time.time()
         gen = jax.block_until_ready(gen_fn(params, prompts))
         dt = time.time() - t0
         n_tok = args.batch * args.gen
     else:
+        # same sampling rule as the scan path so the A/B stays
+        # apples-to-apples when sampling flags are set
+        from ..models.transformer import sample_token
+        key = jax.random.key(args.seed)
+        pick = jax.jit(lambda lg, k: sample_token(
+            lg, k, temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p))
         prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
         step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
         lg, caches = prefill(params, prompts)
-        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        key, sk = jax.random.split(key)
+        tok = pick(lg[:, -1], sk)[:, None]
         t0 = time.time()
         for i in range(args.gen - 1):
             lg, caches = step(params, tok, caches, args.prompt_len + i)
-            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            key, sk = jax.random.split(key)
+            tok = pick(lg[:, -1], sk)[:, None]
         jax.block_until_ready(tok)
         dt = time.time() - t0
         n_tok = args.batch * (args.gen - 1)

@@ -54,6 +54,28 @@ def gqa_params(key, d_model, n_heads, n_kv_heads, head_dim, dtype,
     return p
 
 
+def _use_pallas_prefill(backend: str, q_offset=0) -> bool:
+    """Route prefill/train attention through the pruned-grid Pallas kernel?
+    ``q_offset`` must be a concrete int (it is a static kernel arg that
+    shapes the block schedule); a traced offset falls back to dense."""
+    if backend == "dense":
+        return False
+    from ..kernels.ops import resolve_backend
+    return resolve_backend(backend) == "pallas" and isinstance(q_offset, int)
+
+
+def _flash_attend(q, k, v, policy, *, causal, window, cap, q_offset=0):
+    """q [B,H,S,Dh] vs k/v [B,Hkv,T,Dk/Dv] -> [B,H,S,Dv] via the pruned-grid
+    Pallas flash-attention kernel (kernels/flash_attention.py): causal future
+    blocks and blocks left of the sliding window are never visited, so the
+    windowed-slice trick of ``_masked_softmax_attend`` is subsumed by the
+    block schedule itself."""
+    from ..kernels import ops as kops
+    return kops.flash_attention(q, k, v, policy=policy,
+                                scale=q.shape[-1] ** -0.5, causal=causal,
+                                window=window, softcap=cap, q_offset=q_offset)
+
+
 def _masked_softmax_attend(q, k, v, policy, *, causal, window, cap,
                            q_offset, kv_len=None, chunk=512,
                            windowed_slice=False):
@@ -147,7 +169,8 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   cache_pos: Optional[jnp.ndarray] = None,
                   kv_states=None, use_rope=True, chunk: int = 512,
                   windowed_slice: bool = False,
-                  decode_backend: str = "dense"):
+                  decode_backend: str = "dense",
+                  prefill_backend: str = "dense"):
     """Returns (out [B,S,D], new_cache).
 
     Train/prefill: cache None.  Decode: x is [B,1,D], cache holds Smax slots,
@@ -199,17 +222,24 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
         new_cache = KVCache(ck, cv)
         if s > 1:
             # prefill: the prompt itself is the entire live cache content —
-            # attend chunked over the *current* k/v (O(chunk*S) memory)
-            # instead of densely over the cache buffer.
-            out = _masked_softmax_attend(
-                q, k, v, policy, causal=causal, window=window,
-                cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
-                windowed_slice=windowed_slice)
+            # attend over the *current* k/v, not the cache buffer.
+            if _use_pallas_prefill(prefill_backend, cache_pos):
+                out = _flash_attend(q, k, v, policy, causal=causal,
+                                    window=window, cap=attn_softcap,
+                                    q_offset=cache_pos)
+            else:
+                out = _masked_softmax_attend(
+                    q, k, v, policy, causal=causal, window=window,
+                    cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
+                    windowed_slice=windowed_slice)
         else:
             kv_len = cache_pos + s
             out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
                                  window=window, cap=attn_softcap,
                                  backend=decode_backend)
+    elif _use_pallas_prefill(prefill_backend):
+        out = _flash_attend(q, k, v, policy, causal=causal, window=window,
+                            cap=attn_softcap, q_offset=0)
     else:
         out = _masked_softmax_attend(
             q, k, v, policy, causal=causal,
@@ -228,11 +258,15 @@ def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,
     ``backend="pallas"`` routes through the fused decode-attention kernel
     (kernels/decode_attention.py): the cache stays in its narrow storage
     format until the in-kernel CONV->ADDMUL widening, and ``kv_len`` is a
-    dynamic kernel input so scan-based generation never retraces."""
-    if backend == "pallas":
+    dynamic kernel input so scan-based generation never retraces.
+    ``backend="auto"`` resolves via ``kernels.ops.resolve_backend`` (pallas
+    off-CPU only — shared with the prefill path)."""
+    if backend != "dense":
         from ..kernels import ops as kops
-        return kops.decode_attention(q, ck, cv, kv_len=kv_len, policy=policy,
-                                     window=window, softcap=cap)
+        if kops.resolve_backend(backend) == "pallas":
+            return kops.decode_attention(q, ck, cv, kv_len=kv_len,
+                                         policy=policy, window=window,
+                                         softcap=cap)
     b, h, s, dh = q.shape
     _, hkv, smax, _ = ck.shape
     group = h // hkv
@@ -301,7 +335,8 @@ def mla_params(key, d_model, n_heads, *, q_lora, kv_lora, nope_dim, rope_dim,
 def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
                   v_head_dim, positions, rope_theta=1e4, norm_eps=1e-6,
                   cache: Optional[MLACache] = None,
-                  cache_pos: Optional[jnp.ndarray] = None, chunk: int = 512):
+                  cache_pos: Optional[jnp.ndarray] = None, chunk: int = 512,
+                  prefill_backend: str = "dense"):
     """MLA with decoupled rope.  Prefill expands k/v; decode runs the
     absorbed form directly against the latent cache."""
     b, s, d = x.shape
@@ -363,10 +398,15 @@ def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
         qq = shard(qq, bspec("model", None, None))
         kk = shard(kk, bspec("model", None, None))
         vv = shard(vv, bspec("model", None, None))
-        # _masked_softmax_attend scales by qd**-0.5 internally == MLA scale
-        out = _masked_softmax_attend(qq, kk, vv, policy, causal=True,
-                                     window=None, cap=None, q_offset=0,
-                                     chunk=chunk)
+        if _use_pallas_prefill(prefill_backend):
+            # the kernel supports Dv != Dqk directly (expanded MLA prefill)
+            out = _flash_attend(qq, kk, vv, policy, causal=True, window=None,
+                                cap=None, q_offset=0)
+        else:
+            # _masked_softmax_attend scales by qd**-0.5 internally == MLA
+            out = _masked_softmax_attend(qq, kk, vv, policy, causal=True,
+                                         window=None, cap=None, q_offset=0,
+                                         chunk=chunk)
         out = out.swapaxes(1, 2)
 
     out = out.reshape(b, s, n_heads * v_head_dim)

@@ -48,6 +48,36 @@ def padded_vocab(vocab: int) -> int:
     return -(-vocab // VOCAB_PAD) * VOCAB_PAD
 
 
+def sample_token(lg, key, *, temperature: float = 0.0,
+                 top_k: Optional[int] = None,
+                 top_p: Optional[float] = None):
+    """One sampling step: logits [B, V] -> token ids [B] (int32).
+
+    ``temperature <= 0`` is greedy argmax — bit-identical to the
+    pre-sampling decode path (``key`` is ignored, so XLA dead-code-
+    eliminates the PRNG plumbing).  Otherwise: temperature scaling, then
+    optional top-k truncation, then optional nucleus (top-p) truncation —
+    the smallest prefix of the sorted distribution whose mass reaches
+    ``top_p`` is kept (always >= 1 token) — then a categorical draw.
+    Truncated logits go to a large negative (not -inf: the vocab pad tail
+    is already masked at -1e30 and stays unsampleable)."""
+    lg = lg.astype(F32)
+    if temperature is None or temperature <= 0.0:
+        return jnp.argmax(lg, -1).astype(jnp.int32)
+    lg = lg / temperature
+    if top_k is not None and top_k > 0:
+        kth = jax.lax.top_k(lg, min(top_k, lg.shape[-1]))[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    if top_p is not None and top_p < 1.0:
+        srt = jnp.sort(lg, axis=-1)[..., ::-1]
+        prob = jax.nn.softmax(srt, axis=-1)
+        exclusive_mass = jnp.cumsum(prob, axis=-1) - prob
+        keep = exclusive_mass < top_p           # first token always kept
+        kth = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
 def _norm(x, p, cfg: ModelConfig):
     if cfg.norm == "layernorm":
         return layernorm(x, p["g"], p["b"], cfg.norm_eps)
@@ -189,14 +219,15 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             qk_norm=spec.qk_norm, norm_eps=cfg.norm_eps,
             cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
             chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
-            decode_backend=cfg.decode_backend)
+            decode_backend=cfg.decode_backend,
+            prefill_backend=cfg.prefill_backend)
     elif spec.mixer == "mla":
         mix, nc = attn.mla_attention(
             h, ap["attn"], policy, n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
             rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim,
             positions=positions, rope_theta=cfg.rope_theta,
             norm_eps=cfg.norm_eps, cache=kv_cache, cache_pos=cache_pos,
-            chunk=cfg.attn_chunk)
+            chunk=cfg.attn_chunk, prefill_backend=cfg.prefill_backend)
     elif spec.mixer == "mamba2":
         mix, nc = ssm.mamba2_mix(h, ap["attn"], cfg.mamba, policy,
                                  cache=kv_cache)
@@ -514,16 +545,25 @@ class Model:
 
     def generate(self, params, tokens, *, gen_len: int,
                  max_len: Optional[int] = None, frontend_embeds=None,
-                 mesh=None, return_logits: bool = False):
-        """Prefill + greedy decode of ``gen_len`` tokens as ONE compiled
-        program: the decode loop is a ``lax.scan`` over ``decode_step``, so
-        the whole generation costs a single dispatch instead of one per
-        token (the per-step Python loop pays XLA dispatch + argument
-        flattening ~every token; see benchmarks/serve_decode.py).
+                 mesh=None, return_logits: bool = False,
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 top_p: Optional[float] = None, key=None):
+        """Prefill + decode of ``gen_len`` tokens as ONE compiled program:
+        the decode loop is a ``lax.scan`` over ``decode_step``, so the whole
+        generation costs a single dispatch instead of one per token (the
+        per-step Python loop pays XLA dispatch + argument flattening ~every
+        token; see benchmarks/serve_decode.py).
 
         The cache write index and the attention ``kv_len`` are traced scan
         carries — decode_step (and the Pallas decode kernel, which takes
         ``kv_len`` as a dynamic input) compile exactly once.
+
+        Sampling: ``temperature > 0`` enables temperature / top-k / top-p
+        sampling (``sample_token``) with the PRNG ``key`` threaded through
+        the scan carry (split once per step).  The default ``temperature=0``
+        is greedy argmax, bit-identical to the pre-sampling path — the
+        sampling knobs are static, so the greedy graph carries no PRNG
+        state at all.
 
         Returns ``(gen_tokens [B, gen_len], logits)`` where ``logits`` is
         ``[B, gen_len, V]`` (prefill last-token logits followed by each
@@ -531,18 +571,36 @@ class Model:
         """
         b, prompt_len = tokens.shape
         max_len = max_len if max_len is not None else prompt_len + gen_len
+        do_sample = temperature is not None and temperature > 0.0
+        pick = functools.partial(sample_token, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
         lg0, caches = self.prefill(params, tokens, max_len=max_len,
                                    frontend_embeds=frontend_embeds, mesh=mesh)
-        tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
+        if do_sample:
+            key = jax.random.key(0) if key is None else key
+            key, k0 = jax.random.split(key)
+            tok0 = pick(lg0[:, -1], k0)[:, None]
+        else:
+            tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
 
         def body(carry, _):
-            tok, c, pos = carry
+            if do_sample:
+                tok, c, pos, ky = carry
+                ky, step_key = jax.random.split(ky)
+            else:
+                tok, c, pos = carry
             lg, c = self.decode_step(params, tok, c, pos, mesh=mesh)
-            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            if do_sample:
+                nxt = pick(lg[:, -1], step_key)[:, None]
+            else:
+                nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
             ys = (nxt[:, 0], lg[:, 0]) if return_logits else (nxt[:, 0],)
-            return (nxt, c, pos + 1), ys
+            nc = (nxt, c, pos + 1, ky) if do_sample else (nxt, c, pos + 1)
+            return nc, ys
 
         init = (tok0, caches, jnp.asarray(prompt_len, jnp.int32))
+        if do_sample:
+            init = init + (key,)
         _, ys = jax.lax.scan(body, init, None, length=gen_len - 1)
         gen = jnp.concatenate([tok0, ys[0].swapaxes(0, 1)], axis=1)
         if not return_logits:

@@ -66,6 +66,40 @@ def test_sweep_picks_and_persists_winner(tuner_cache):
     assert os.path.exists(str(tuner_cache))
 
 
+def test_cache_keys_carry_jax_version(tuner_cache):
+    """Entries are keyed by the jax version that timed them: winners from a
+    different jax install never resolve (stale-on-upgrade invalidation)."""
+    import jax
+
+    shape, block = (64, 256, 128), (32, 128, 128)
+    autotune.record("matmul", shape, jnp.float32, block)
+    disk = json.loads(tuner_cache.read_text())
+    assert all(k.endswith(f"|jax-{jax.__version__}") for k in disk)
+    # simulate an entry timed on another jax version: must not resolve
+    other = next(iter(disk)).replace(f"|jax-{jax.__version__}", "|jax-0.0.0")
+    disk[other] = [256, 512, 256]
+    tuner_cache.write_text(json.dumps(disk))
+    autotune.reset()
+    assert autotune.lookup("matmul", shape, jnp.float32) == block
+
+
+def test_legacy_cache_file_migrates(tuner_cache):
+    """Pre-versioning cache files (4-field keys) load without error and are
+    adopted once under the running jax version; malformed entries are
+    skipped, not fatal."""
+    tuner_cache.write_text(json.dumps({
+        "matmul|64x256x128|float32|cpu": [32, 128, 128],
+        "attn|256x512x64|float32|cpu": [64, 256],
+        "bogus": "not-a-block",
+        "matmul|8x8x8|float32|cpu|jax-0.0.0|extra": [8, 128, 128],
+    }))
+    autotune.reset()
+    assert autotune.lookup("matmul", (64, 256, 128), jnp.float32,
+                           backend="cpu") == (32, 128, 128)
+    assert autotune.lookup("attn", (256, 512, 64), jnp.float32,
+                           backend="cpu") == (64, 256)
+
+
 def test_recorded_block_drives_tp_matmul(tuner_cache):
     """tp_matmul with block=None uses the memoized winner: the result is
     bit-exact against the oracle with the RECORDED K-blocking (bk=128) —

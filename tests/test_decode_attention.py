@@ -165,3 +165,55 @@ def test_generate_single_token():
     gen, lgs = model.generate(params, toks, gen_len=1, return_logits=True)
     assert gen.shape == (2, 1)
     assert lgs.shape == (2, 1, model.vocab_out)
+
+
+# ---------------------------------------------------------------------------
+# sampling in generate(): PRNG key through the scan carry
+# ---------------------------------------------------------------------------
+def test_sample_token_greedy_and_truncations():
+    from repro.models.transformer import sample_token
+
+    lg = jnp.asarray(rnd(4, 64, seed=21, scale=3.0))
+    key = jax.random.key(0)
+    # temperature<=0: exact argmax, key ignored
+    np.testing.assert_array_equal(
+        np.asarray(sample_token(lg, key, temperature=0.0)),
+        np.asarray(jnp.argmax(lg, -1).astype(jnp.int32)))
+    # top_k=1 collapses the distribution onto the argmax
+    np.testing.assert_array_equal(
+        np.asarray(sample_token(lg, key, temperature=1.0, top_k=1)),
+        np.asarray(jnp.argmax(lg, -1).astype(jnp.int32)))
+    # tiny top_p keeps only the head of the distribution
+    np.testing.assert_array_equal(
+        np.asarray(sample_token(lg, key, temperature=1.0, top_p=1e-6)),
+        np.asarray(jnp.argmax(lg, -1).astype(jnp.int32)))
+    # top_k truncation: samples always land in the top-k set
+    for seed in range(5):
+        s = sample_token(lg, jax.random.key(seed), temperature=2.0, top_k=4)
+        topk = jax.lax.top_k(lg, 4)[1]
+        assert all(int(s[i]) in np.asarray(topk[i]) for i in range(4))
+
+
+def test_generate_sampling_deterministic_and_greedy_default():
+    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
+    params = model.init(jax.random.key(0))
+    B, P, G = 2, 12, 6
+    toks = jax.random.randint(jax.random.key(1), (B, P), 0, model.cfg.vocab)
+
+    # greedy default is bit-identical to an explicit temperature=0 call
+    g0, _ = jax.jit(lambda p, t: model.generate(
+        p, t, gen_len=G))(params, toks)
+    g1, _ = jax.jit(lambda p, t: model.generate(
+        p, t, gen_len=G, temperature=0.0, key=jax.random.key(5)))(params, toks)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+
+    # sampling: deterministic given the key, in-vocab (pad never sampled)
+    fn = jax.jit(lambda p, t, k: model.generate(
+        p, t, gen_len=G, temperature=0.9, top_k=50, top_p=0.95, key=k)[0])
+    s1 = fn(params, toks, jax.random.key(7))
+    s2 = fn(params, toks, jax.random.key(7))
+    s3 = fn(params, toks, jax.random.key(8))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert s1.shape == (B, G)
+    assert bool(jnp.all((s1 >= 0) & (s1 < model.cfg.vocab)))
+    assert not np.array_equal(np.asarray(s1), np.asarray(s3))  # key matters

@@ -1,0 +1,226 @@
+"""Pruned-grid prefill flash attention: schedule pruning proofs, bit-exact
+kernel-vs-oracle parity at block boundaries, dynamic-kv_len no-retrace, and
+model-level dense-vs-pallas prefill parity.
+
+Kernel contract: flash_attention_pallas walks ONLY the (iq, ik) block pairs
+``block_schedule`` emits (causal future blocks and blocks left of a sliding
+window are never visited) and is BIT-EXACT against
+ref.flash_attention_ref with the matching ``(bq, bk)`` blocking in
+interpret mode.  ``kv_len`` is a dynamic input: distinct lengths share one
+compiled kernel, and blocks past the live length ``pl.when``-skip at run
+time (observable via ``debug_visits``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.flash_attention import block_schedule, flash_attention_pallas
+from repro.models.registry import build_model
+
+F32 = np.float32
+
+
+def rnd(*shape, seed=0, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(F32)
+
+
+def _qkv(bh, bkv, sq, skv, d, dv=None, seed=0):
+    q = jnp.asarray(rnd(bh, sq, d, seed=seed))
+    k = jnp.asarray(rnd(bkv, skv, d, seed=seed + 1))
+    v = jnp.asarray(rnd(bkv, skv, dv or d, seed=seed + 2))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# the pruned schedule: provable block-visit savings
+# ---------------------------------------------------------------------------
+def test_schedule_causal_half_the_dense_grid():
+    """Causal sq == skv prefill schedules <= ~55% of the dense grid."""
+    sq = skv = 2048
+    bq = bk = 128
+    qi, ki, ff, lf = block_schedule(sq, skv, bq, bk, causal=True, window=None)
+    dense = (sq // bq) * (skv // bk)
+    assert len(qi) / dense <= 0.55, (len(qi), dense)
+    # exact expectation: query block iq sees key blocks 0..iq
+    assert len(qi) == sum(i + 1 for i in range(sq // bq))
+
+
+def test_schedule_window_constant_blocks_per_query_block():
+    """A window <= 2*bk layer visits O(window) key blocks per query block,
+    independent of sequence length."""
+    bq = bk = 128
+    window = 2 * bk
+    for skv in (1024, 4096):
+        qi, ki, _, _ = block_schedule(skv, skv, bq, bk, causal=True,
+                                      window=window)
+        per_q = np.bincount(qi)
+        # a window of W covers at most W/bk + 1 key blocks (straddle), and
+        # causality cannot add blocks — constant in skv
+        assert per_q.max() <= window // bk + 1
+        assert len(qi) <= (skv // bq) * (window // bk + 1)
+
+
+def test_schedule_covers_every_query_block_exactly_once():
+    for causal, window, off in [(True, None, 0), (True, 64, 128),
+                                (False, None, 0), (True, 100, 0)]:
+        qi, ki, ff, lf = block_schedule(512, 512, 128, 128, causal=causal,
+                                        window=window, q_offset=off)
+        assert sorted(set(qi.tolist())) == [0, 1, 2, 3]
+        assert int(ff.sum()) == 4 and int(lf.sum()) == 4  # one init/store each
+        # within a query block the kv walk is ordered (online softmax)
+        for iq in range(4):
+            ks = ki[qi == iq]
+            assert (np.diff(ks) == 1).all()
+
+
+def test_kernel_debug_visits_counts_kv_len_early_outs():
+    """Blocks scheduled statically but past the dynamic kv_len do no work."""
+    q, k, v = _qkv(1, 1, 512, 512, 64, seed=3)
+    kw = dict(group=1, bq=128, bk=128, scale=0.125, causal=True,
+              src_dtype=jnp.float32, debug_visits=True)
+    qi, ki, _, _ = block_schedule(512, 512, 128, 128, causal=True, window=None)
+    _, vis = flash_attention_pallas(q, k, v, 130, **kw)
+    # only key blocks 0 and 1 intersect kv_len=130
+    want = (np.asarray(ki) * 128 < 130).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(vis)[:, 0], want)
+    assert int(vis.sum()) < len(qi)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity vs the blocked oracle at block boundaries
+# ---------------------------------------------------------------------------
+BOUNDARY_CASES = [
+    # (bh, bkv, sq, skv, d, dv, causal, window, softcap, kvl, bq, bk)
+    (2, 2, 256, 256, 64, 64, True, None, None, None, 128, 128),   # plain causal
+    (2, 1, 256, 256, 64, 64, True, 128, None, None, 128, 128),    # window == bk
+    (2, 2, 256, 384, 64, 64, True, 100, None, None, 128, 128),    # window straddles
+    (2, 2, 256, 256, 64, 64, True, None, 30.0, 200, 128, 128),    # kv_len mid-block
+    (4, 2, 256, 256, 64, 64, True, 64, None, 10, 128, 128),       # fully-masked rows
+    (2, 2, 128, 512, 64, 32, False, None, None, 77, 128, 128),    # Dv != D, non-causal
+    (2, 2, 256, 256, 64, 64, True, 32, 50.0, 129, 128, 128),      # everything at once
+]
+
+
+@pytest.mark.parametrize(
+    "bh,bkv,sq,skv,d,dv,causal,window,softcap,kvl,bq,bk", BOUNDARY_CASES)
+def test_pruned_kernel_bit_exact_vs_blocked_ref(bh, bkv, sq, skv, d, dv,
+                                                causal, window, softcap, kvl,
+                                                bq, bk):
+    group = bh // bkv
+    q, k, v = _qkv(bh, bkv, sq, skv, d, dv, seed=7)
+    kw = dict(group=group, scale=d ** -0.5, causal=causal, window=window,
+              softcap=softcap, src_dtype=jnp.float32, out_dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, kvl, bq=bq, bk=bk, **kw)
+    want = ref.flash_attention_ref(q, k, v, kv_len=kvl, bq=bq, bk=bk, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fully_masked_query_rows_emit_zero():
+    """Rows whose window lies entirely past kv_len see no keys: l == 0 and
+    the store guard emits exact zeros (no NaN from 0/0)."""
+    q, k, v = _qkv(1, 1, 256, 256, 64, seed=9)
+    got = flash_attention_pallas(q, k, v, 10, group=1, bq=128, bk=128,
+                                 scale=0.125, causal=True, window=64,
+                                 src_dtype=jnp.float32)
+    got = np.asarray(got)
+    assert np.isfinite(got).all()
+    # rows >= 10 + 64 - 1 can reach no key < kv_len under the window mask
+    assert (got[:, 80:] == 0.0).all()
+    assert (got[:, :10] != 0.0).any()
+
+
+@pytest.mark.parametrize("fmt", ["fp16", "fp8"])
+def test_emulate_mode_operand_snap_bit_exact(fmt):
+    """Emulate-mode policies: the in-kernel RNE snap (f32 containers on the
+    src grid) matches the oracle's softfloat snap bit-for-bit."""
+    q, k, v = _qkv(2, 2, 256, 256, 64, seed=11)
+    kw = dict(group=1, scale=0.125, causal=True, src_fmt_name=fmt,
+              src_dtype=jnp.float32, out_dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, bq=128, bk=128, **kw)
+    want = ref.flash_attention_ref(q, k, v, bq=128, bk=128, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# dynamic kv_len: one compiled kernel for every prompt length
+# ---------------------------------------------------------------------------
+def test_dynamic_kv_len_no_retrace():
+    q, k, v = _qkv(2, 2, 256, 256, 64, seed=13)
+    traces = []
+
+    @jax.jit
+    def run(q, k, v, kvl):
+        traces.append(None)            # python body runs only while tracing
+        return flash_attention_pallas(q, k, v, kvl, group=1, bq=128, bk=128,
+                                      scale=0.125, causal=True,
+                                      src_dtype=jnp.float32)
+
+    for kvl in (256, 130, 37):
+        got = run(q, k, v, jnp.asarray(kvl, jnp.int32))
+        want = ref.flash_attention_ref(q, k, v, kv_len=kvl, bq=128, bk=128,
+                                       group=1, scale=0.125, causal=True,
+                                       src_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert len(traces) == 1, "distinct kv_len values must not retrace"
+
+
+def test_wrapper_dynamic_kv_len_and_q_offset():
+    """ops.flash_attention: traced kv_len passes through; q_offset shifts
+    the causal/window masks (prefill at a nonzero cache index)."""
+    q = jnp.asarray(rnd(1, 2, 128, 64, seed=15))
+    k = jnp.asarray(rnd(1, 2, 256, 64, seed=16))
+    v = jnp.asarray(rnd(1, 2, 256, 64, seed=17))
+    got = jax.jit(lambda kvl: kops.flash_attention(
+        q, k, v, kv_len=kvl, causal=True, window=96, q_offset=128,
+        bq=128, bk=128, policy="fp32"))(jnp.asarray(200, jnp.int32))
+    want = ref.flash_attention_ref(
+        q.reshape(2, 128, 64), k.reshape(2, 256, 64), v.reshape(2, 256, 64),
+        group=1, scale=64 ** -0.5, causal=True, window=96, q_offset=128,
+        kv_len=200, src_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got.reshape(2, 128, 64)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# model-level: prefill logits parity, dense vs pallas backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,policy", [
+    ("gemma2-9b", "tp_bf16"),        # window + softcap layers
+    ("gemma2-9b", "tp_fp16"),
+    ("gemma2-9b", "tp_bf16_kv8"),    # fp8 KV cache policy
+    ("minicpm3-4b", "tp_bf16"),      # MLA expanded prefill (Dv != Dqk)
+])
+def test_model_prefill_logits_parity(arch, policy):
+    model = build_model(arch, policy=policy, reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 48), 0, model.cfg.vocab)
+    lg_d, _ = jax.jit(
+        lambda p, t: model.prefill(p, t, max_len=64))(params, toks)
+    mp = model.with_cfg(prefill_backend="pallas")
+    lg_p, _ = jax.jit(
+        lambda p, t: mp.prefill(p, t, max_len=64))(params, toks)
+    # same math, different (pruned, online-softmax) reduction schedule:
+    # tolerance comparison on the logits
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d),
+                               rtol=5e-2, atol=1e-1)
+
+
+def test_prefill_backend_auto_resolves_dense_on_cpu():
+    assert jax.default_backend() == "cpu"
+    assert kops.resolve_backend("auto") == "dense"
+    assert kops.resolve_backend("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        kops.resolve_backend("magic")
+    # model-level: "auto" on CPU must produce the dense path's exact logits
+    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 32), 0, model.cfg.vocab)
+    lg_d, _ = jax.jit(
+        lambda p, t: model.prefill(p, t, max_len=40))(params, toks)
+    ma = model.with_cfg(prefill_backend="auto", decode_backend="auto")
+    lg_a, _ = jax.jit(
+        lambda p, t: ma.prefill(p, t, max_len=40))(params, toks)
+    np.testing.assert_array_equal(np.asarray(lg_d), np.asarray(lg_a))
