@@ -18,6 +18,14 @@ Steady-state tok/s for the scan paths is measured by differencing two
 generation lengths (removes prefill + constant dispatch cost); the python
 loop is timed directly over its steps (that IS its steady state).
 
+Ragged A/B (``ragged_prefill_ms`` / ``ragged_decode_tok_s``): the same
+padded batch served with four mixed prompt lengths (1/4, 1/2, 3/4, 4/4 of
+``prompt_len``) through the per-sequence length plumbing, against the
+uniform-padded baseline (``prefill_dense_ms`` / ``scan_tok_s`` — every row
+paying the max length).  On CPU the dense path only saves masked-out FLOPs
+the hardware still executes; the per-row grid pruning shows up on real
+accelerators, where the Pallas kernels skip each row's dead KV blocks.
+
 Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
 tracked PR-over-PR.
 
@@ -105,26 +113,51 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     row["python_tok_s"] = batch * (gen - 1) / _median(ts)
 
     # -- scan paths ---------------------------------------------------------
-    def scan_tok_s(model, params, prompts):
-        long_fn = jax.jit(lambda p, t: model.generate(
-            p, t, gen_len=gen, max_len=max_len)[0])
-        short_fn = jax.jit(lambda p, t: model.generate(
-            p, t, gen_len=short, max_len=max_len)[0])
-        t_long = _time_call(lambda: long_fn(params, prompts), repeats)
-        t_short = _time_call(lambda: short_fn(params, prompts), repeats)
+    def scan_tok_s(model, params, prompts, prompt_lens=None, key=""):
+        long_fn = jax.jit(lambda p, t, l: model.generate(
+            p, t, gen_len=gen, max_len=max_len, prompt_lens=l)[0])
+        short_fn = jax.jit(lambda p, t, l: model.generate(
+            p, t, gen_len=short, max_len=max_len, prompt_lens=l)[0])
+        t_long = _time_call(lambda: long_fn(params, prompts, prompt_lens),
+                            repeats)
+        t_short = _time_call(lambda: short_fn(params, prompts, prompt_lens),
+                             repeats)
         dt = t_long - t_short
         if dt <= 0:
             # timing noise swamped the per-token cost (tiny model / loaded
             # box): report the conservative whole-run rate instead of an
             # astronomical differenced number, and flag it in the row
-            print(f"  [warn] unstable differencing (dt={dt * 1e3:.3f} ms); "
-                  f"falling back to whole-run rate", flush=True)
-            row["steady_state_unstable"] = True
+            print(f"  [warn] unstable {key or 'scan'} differencing "
+                  f"(dt={dt * 1e3:.3f} ms); falling back to whole-run rate",
+                  flush=True)
+            row[f"{key}steady_state_unstable"] = True
             return batch * gen / t_long
         return batch * (gen - short) / dt
 
     row["scan_tok_s"] = scan_tok_s(model, params, prompts)
     row["scan_speedup"] = row["scan_tok_s"] / row["python_tok_s"]
+
+    # -- ragged A/B: 4 mixed prompt lengths vs the uniform-padded batch -----
+    # (attention archs only: Model.prefill refuses prompt_lens for SSM /
+    # hybrid mixers — recurrent state can't mask pad tokens — so those rows
+    # carry null ragged columns, keeping the ci.sh schema gate honest.)
+    from repro.launch.serve import ragged_lengths
+    lens = ragged_lengths(batch, prompt_len)
+    row["ragged_lens"] = lens
+    if any(s.mixer in ("mamba2", "mlstm", "slstm")
+           for s in model.cfg.layer_list()):
+        row["ragged_prefill_ms"] = None
+        row["ragged_decode_tok_s"] = None
+        row["ragged_unsupported"] = "ssm mixers"
+    else:
+        prompt_lens = jnp.asarray(lens, jnp.int32)
+        prefill_rg = jax.jit(lambda p, t, l: model.prefill(
+            p, t, max_len=max_len, prompt_lens=l))
+        row["ragged_prefill_ms"] = _time_call(
+            lambda: prefill_rg(params, prompts, prompt_lens)[0],
+            repeats) * 1e3
+        row["ragged_decode_tok_s"] = scan_tok_s(model, params, prompts,
+                                                prompt_lens, key="ragged_")
 
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
@@ -155,11 +188,14 @@ def main(argv=None):
         row = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
                          gen=args.gen, repeats=args.repeats)
         report["archs"][arch] = row
+        fmt = lambda x, unit: "n/a" if x is None else f"{x:.1f} {unit}"
         print(f"  prefill dense {row['prefill_dense_ms']:.1f} ms "
-              f"/ pallas {row['prefill_pallas_ms']:.1f} ms | "
+              f"/ pallas {row['prefill_pallas_ms']:.1f} ms "
+              f"/ ragged {fmt(row['ragged_prefill_ms'], 'ms')} | "
               f"python {row['python_tok_s']:.1f} tok/s | "
               f"scan {row['scan_tok_s']:.1f} tok/s "
               f"({row['scan_speedup']:.2f}x) | "
+              f"ragged {fmt(row['ragged_decode_tok_s'], 'tok/s')} | "
               f"scan+pallas(kv8) {row['scan_pallas_kv8_tok_s']:.1f} tok/s",
               flush=True)
 

@@ -12,9 +12,28 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
+# includes tests/test_ragged_attention.py — the ragged-batch kernel/model
+# suite runs in Pallas interpret mode on CPU like every other kernel test
 python -m pytest -x -q
 
 echo "== serve decode smoke benchmark =="
 python -m benchmarks.serve_decode --quick
+
+echo "== BENCH_serve.json schema =="
+python - <<'EOF'
+import json, sys
+REQUIRED = [
+    "prefill_dense_ms", "prefill_pallas_ms", "python_tok_s", "scan_tok_s",
+    "scan_speedup", "scan_pallas_kv8_tok_s",
+    "ragged_prefill_ms", "ragged_decode_tok_s", "ragged_lens",
+]
+report = json.load(open("BENCH_serve.json"))
+bad = [(arch, c) for arch, row in report["archs"].items()
+       for c in REQUIRED if c not in row]
+if bad:
+    sys.exit(f"BENCH_serve.json schema drift — missing columns: {bad}")
+print(f"schema OK ({len(report['archs'])} arch rows x "
+      f"{len(REQUIRED)} required columns)")
+EOF
 
 echo "CI OK"

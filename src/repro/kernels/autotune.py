@@ -23,6 +23,16 @@ changes Mosaic/XLA codegen, so pre-upgrade winners silently invalidate and
 (pre-versioning) cache files load fine: their entries are adopted once
 under the running jax version (they were timed on the install that wrote
 them) and re-persisted in the keyed form on the next ``record``.
+
+Ragged workloads: batch/sequence-length dimensions are canonicalized to
+power-of-two buckets in the cache key (``_bucket_shape``) — the feature
+dims (head dim, matmul K/N) that are architecturally fixed stay exact.
+Without bucketing, a ragged serving mix would mint one JSON entry per
+distinct prompt-length combination; with it, every length in (64, 128]
+shares one winner, which kernels/ops.py clamps to the live shape anyway.
+Bucketed keys carry the ``v2|`` version prefix (a key-format bump): v1
+entries (exact shapes) migrate on load by re-bucketing — first entry per
+bucket wins — so existing caches keep resolving.
 """
 from __future__ import annotations
 
@@ -52,11 +62,51 @@ def cache_path() -> str:
                      "autotune.json"))
 
 
+#: per-op axes whose sizes vary with batch/prompt length (bucketed in keys);
+#: the remaining axes are architectural constants and stay exact.
+_BUCKET_AXES = {"matmul": (0,), "attn": (0, 1), "decode_attn": (1,)}
+
+
+def _pow2_bucket(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length() if n > 0 else 0
+
+
+def _bucket_shape(op: str, shape: Sequence[int]) -> Tuple[int, ...]:
+    """Canonicalize length-like dims to their next power of two so ragged
+    workloads (one shape per prompt-length mix) share cache entries."""
+    axes = _BUCKET_AXES.get(op, ())
+    return tuple(_pow2_bucket(int(s)) if i in axes else int(s)
+                 for i, s in enumerate(shape))
+
+
 def _key(op: str, shape: Sequence[int], dtype, backend: Optional[str] = None
          ) -> str:
     backend = backend or jax.default_backend()
-    return f"{op}|{'x'.join(str(int(s)) for s in shape)}|" \
+    shape = _bucket_shape(op, shape)
+    return f"v2|{op}|{'x'.join(str(int(s)) for s in shape)}|" \
            f"{jnp.dtype(dtype).name}|{backend}|jax-{jax.__version__}"
+
+
+def _migrate_key(k: str) -> Optional[str]:
+    """Bring one on-disk key to the current (v2, bucketed) format.
+
+    v2 keys pass through; v1 keys — 4-field pre-jax-versioning and 5-field
+    jax-versioned, both with exact shapes — are re-bucketed (4-field ones
+    additionally adopt the running jax version, as before).  Anything else
+    is skipped, not fatal."""
+    parts = k.split("|")
+    if parts[0] == "v2" and len(parts) == 6:
+        return k
+    if len(parts) == 4:                   # op|shape|dtype|backend
+        parts.append(f"jax-{jax.__version__}")
+    if len(parts) != 5:
+        return None
+    try:
+        shape = _bucket_shape(parts[0], [int(x) for x in parts[1].split("x")])
+    except ValueError:
+        return None
+    parts[1] = "x".join(str(s) for s in shape)
+    return "|".join(["v2"] + parts)
 
 
 def _load_file() -> None:
@@ -75,11 +125,9 @@ def _load_file() -> None:
             block = [int(x) for x in v]
         except (TypeError, ValueError):
             continue                     # unknown entry shape: skip, don't die
-        if k.count("|") == 3:            # legacy op|shape|dtype|backend key:
-            k = f"{k}|jax-{jax.__version__}"   # one-time adoption (docstring)
-        elif k.count("|") != 4:
-            continue
-        _MEM.setdefault(k, block)
+        k = _migrate_key(k)
+        if k is not None:                # first entry per bucket wins
+            _MEM.setdefault(k, block)
 
 
 def reset(clear_env_cache: bool = False) -> None:

@@ -24,9 +24,14 @@ hottest serving loop — decode attention against a long KV cache:
   store           CONV          single cast to ``out_dtype`` on the way out.
 
 Layout: q [BHkv, G, D] (the G = n_heads/n_kv_heads query heads that share
-one KV head), k/v [BHkv, Smax, D] cache buffers, kv_len a *dynamic* scalar
-(SMEM) masking dead cache slots — it changes every decode step, so it must
-not trigger a retrace inside the ``lax.scan`` generation loop.
+one KV head), k/v [BHkv, Smax, D] cache buffers, kv_len a *dynamic* per-row
+[BHkv, 1] vector (SMEM) masking dead cache slots — it changes every decode
+step, so it must not trigger a retrace inside the ``lax.scan`` generation
+loop.  Each row's KV-block loop early-exits at its OWN length (``pl.when``
+on ``j * bk < kv_len[row]``): a ragged serving batch pays per-sequence
+work, not the longest sequence's grid — the work-level analogue of FPnew's
+per-operand precision proportionality.  A uniform batch passes the same
+scalar in every row and behaves exactly as before.
 
 Schedule: grid (BHkv, 2, Smax/bk), kv innermost, two passes over the KV
 blocks.  Pass 0 computes the exact global score max; pass 1 recomputes
@@ -67,13 +72,17 @@ def softcap_scores(s, cap: float):
     return cap * (1.0 - 2.0 / (e + 1.0))
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, acc_ref,
-                   l_ref, *, nk: int, bk: int, scale: float,
-                   window: Optional[int], softcap: Optional[float],
-                   kv_fmt, q_fmt, src_dtype, out_dtype):
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest, nk: int,
+                   bk: int, scale: float, window: Optional[int],
+                   softcap: Optional[float], kv_fmt, q_fmt, src_dtype,
+                   out_dtype, debug_visits: bool):
+    if debug_visits:
+        visits_ref, m_ref, acc_ref, l_ref = rest
+    else:
+        m_ref, acc_ref, l_ref = rest
     ip = pl.program_id(1)          # 0 = max pass, 1 = accumulate pass
     j = pl.program_id(2)           # kv block
-    kvl = len_ref[0, 0]
+    kvl = len_ref[0, 0]            # this row's own live length
 
     @pl.when((ip == 0) & (j == 0))
     def _init_max():
@@ -84,49 +93,60 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = _widen(q_ref[0], q_fmt, src_dtype)          # (G, D)
-    k = _widen(k_ref[0], kv_fmt, src_dtype)         # (bk, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s * scale
-    if softcap is not None:
-        s = softcap_scores(s, softcap)
+    # per-row early-exit: the whole KV block lies past this row's length.
+    # Skipping is exact — a fully-masked block contributes max = NEG_INF
+    # (no-op under jnp.maximum) in pass 0 and p = 0 in pass 1.
+    active = j * bk < kvl
 
-    g = s.shape[0]
-    k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
-    mask = k_idx < kvl
-    if window is not None:
-        mask &= k_idx > kvl - 1 - window
-    s = jnp.where(mask, s, NEG_INF)
+    @pl.when(active)
+    def _work():
+        q = _widen(q_ref[0], q_fmt, src_dtype)          # (G, D)
+        k = _widen(k_ref[0], kv_fmt, src_dtype)         # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = softcap_scores(s, softcap)
 
-    @pl.when(ip == 0)
-    def _max_pass():
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_ref[...] = jnp.maximum(m_ref[...], jnp.broadcast_to(m_cur,
-                                                              m_ref.shape))
+        g = s.shape[0]
+        k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        mask = k_idx < kvl
+        if window is not None:
+            mask &= k_idx > kvl - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
 
-    @pl.when(ip == 1)
-    def _acc_pass():
-        m = m_ref[:, :1]
-        # guard fully-masked rows (m == NEG_INF): keep exp argument finite
-        p = jnp.exp(s - jnp.where(m <= NEG_INF / 2, 0.0, m))
-        p = jnp.where(mask, p, 0.0)
-        l_ref[...] = l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-        v = _widen(v_ref[0], kv_fmt, src_dtype)
-        acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
-            p.astype(src_dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        @pl.when(ip == 0)
+        def _max_pass():
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_ref[...] = jnp.maximum(m_ref[...],
+                                     jnp.broadcast_to(m_cur, m_ref.shape))
 
-        @pl.when(j == nk - 1)
-        def _store():
-            l = l_ref[:, :1]
-            o_ref[0] = (acc_ref[...] /
-                        jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+        @pl.when(ip == 1)
+        def _acc_pass():
+            m = m_ref[:, :1]
+            # guard fully-masked rows (m == NEG_INF): keep exp arg finite
+            p = jnp.exp(s - jnp.where(m <= NEG_INF / 2, 0.0, m))
+            p = jnp.where(mask, p, 0.0)
+            l_ref[...] = l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+            v = _widen(v_ref[0], kv_fmt, src_dtype)
+            acc_ref[...] = acc_ref[...] + jax.lax.dot_general(
+                p.astype(src_dtype), v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    # the store must run even when this row's last blocks were early-outs
+    @pl.when((ip == 1) & (j == nk - 1))
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
+
+    if debug_visits:
+        visits_ref[0, 0] = active.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "bk", "scale", "window", "softcap", "kv_fmt_name", "q_fmt_name",
-    "src_dtype", "out_dtype", "interpret"))
+    "src_dtype", "out_dtype", "interpret", "debug_visits"))
 def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
                             scale: float = 1.0,
                             window: Optional[int] = None,
@@ -135,32 +155,48 @@ def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
                             q_fmt_name: Optional[str] = None,
                             src_dtype=jnp.bfloat16,
                             out_dtype=jnp.float32,
-                            interpret: bool = True):
-    """q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: [1, 1] int32 (live
-    cache length — a traced value, not a static).
+                            interpret: bool = True,
+                            debug_visits: bool = False):
+    """q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: int32 live cache
+    length(s) — a traced value, not a static.  A [1, 1] (or scalar) length
+    is broadcast to every row; a per-row [BHkv, 1] (or [BHkv]) vector gives
+    each row its own length and its KV-block loop early-exits there (ragged
+    serving batches; ops.py expands per-sequence [B] lengths by the KV-head
+    count).
 
     Smax % bk == 0 (the ops.py wrapper pads; padded slots have
     ``k_idx >= kv_len`` and are masked).  ``kv_fmt_name`` / ``q_fmt_name``
     request the in-kernel RNE grid snap for f32-container (emulated narrow)
-    storage; native narrow dtypes are widened exactly without it.
+    storage; native narrow dtypes are widened exactly without it.  With
+    ``debug_visits`` the kernel also returns an int32 [BHkv, Smax/bk] array
+    flagging, per row, which KV blocks did work (early-outs write 0).
     """
     bh, g, d = q.shape
     bkv, smax, dk = k.shape
     assert d == dk and bh == bkv, (q.shape, k.shape)
     assert smax % bk == 0, (k.shape, bk)
     nk = smax // bk
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1, 1))
+    assert kvl.shape[0] in (1, bh), (kvl.shape, bh)
+    kvl = jnp.broadcast_to(kvl, (bh, 1))
 
     kern = functools.partial(
         _decode_kernel, nk=nk, bk=bk, scale=scale, window=window,
         softcap=softcap,
         kv_fmt=get_format(kv_fmt_name) if kv_fmt_name else None,
         q_fmt=get_format(q_fmt_name) if q_fmt_name else None,
-        src_dtype=src_dtype, out_dtype=out_dtype)
-    return pl.pallas_call(
+        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+    out_shape = [jax.ShapeDtypeStruct((bh, g, d), out_dtype)]
+    out_specs = [pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0))]
+    if debug_visits:
+        # both passes write the same (h, j) cell with the same value
+        out_shape.append(jax.ShapeDtypeStruct((bh, nk), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda h, p, j: (h, j)))
+    out = pl.pallas_call(
         kern,
         grid=(bh, 2, nk),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda h, p, j: (0, 0),
+            pl.BlockSpec((1, 1), lambda h, p, j: (h, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0)),
             pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j, 0)),
@@ -170,12 +206,13 @@ def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
             # once, K twice (the cost stated in the module docstring).
             pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j * p, 0)),
         ],
-        out_specs=pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, g, d), out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),   # running max
             pltpu.VMEM((g, d), jnp.float32),     # output accumulator
             pltpu.VMEM((g, 128), jnp.float32),   # softmax denominator
         ],
         interpret=interpret,
-    )(kv_len, q, k, v)
+    )(kvl, q, k, v)
+    return tuple(out) if debug_visits else out[0]

@@ -17,6 +17,15 @@ them.  ``kv_len`` is a *dynamic* kernel input (SMEM scalar-prefetch, like
 the decode kernel): distinct prompt lengths reuse one compiled kernel, and
 blocks entirely past ``kv_len`` early-out via ``pl.when`` at run time.
 
+Ragged batches: ``kv_len`` generalizes to a per-row *vector* — one int32
+SMEM entry per flattened head row (ops.py expands a [B] sequence-length
+vector by the head count).  The early-out and the in-block mask both read
+``kvl_ref[program_id(0)]``, so each sequence's KV walk stops at its OWN
+length: a short row in a ragged batch does work proportional to its own
+``kv_len``, not the batch max (``debug_visits`` is per-row, [BH, n_steps],
+and proves it).  The length vector is a traced value — differing ragged
+batches share one compiled kernel, exactly like the scalar case.
+
 Features: GQA head mapping, causal masking, sliding-window (local) masking,
 attention-logit soft-capping (gemma-2/3), V head dim != QK head dim (MLA
 expanded prefill), optional in-kernel RNE operand snap for emulate-mode
@@ -97,7 +106,7 @@ def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref,
     step = pl.program_id(1)
     iq = qi_ref[step]
     ik = ki_ref[step]
-    kvl = kvl_ref[0]
+    kvl = kvl_ref[pl.program_id(0)]      # this row's own live length
 
     @pl.when(ff_ref[step] == 1)
     def _init():
@@ -174,12 +183,17 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
 
     Sq % bq == 0 and Skv % bk == 0 (ops.py pads).  ``kv_len`` masks keys at
     or past the live length — it is a DYNAMIC input (python int, 0-d array,
-    or traced scalar; None means Skv), so distinct prompt lengths sharing a
-    padded shape reuse one compiled kernel.  ``src_fmt_name`` requests the
-    in-kernel RNE operand snap for emulate-mode policies (f32 containers);
-    native narrow ``src_dtype`` casts need none.  With ``debug_visits`` the
-    kernel also returns an int32 [n_steps, 1] array flagging which scheduled
-    grid steps did QK/PV work (the dynamic ``kv_len`` early-outs write 0).
+    traced scalar, or a per-row [BH] vector; None means Skv), so distinct
+    prompt lengths — and distinct ragged length *vectors* — sharing a padded
+    shape reuse one compiled kernel.  A scalar is broadcast to every row; a
+    vector gives each flattened head row its own live length (ragged
+    batches; ops.py expands per-sequence [B] lengths by the head count).
+    ``src_fmt_name`` requests the in-kernel RNE operand snap for
+    emulate-mode policies (f32 containers); native narrow ``src_dtype``
+    casts need none.  With ``debug_visits`` the kernel also returns an int32
+    [BH, n_steps] array flagging, per row, which scheduled grid steps did
+    QK/PV work (the dynamic per-row ``kv_len`` early-outs write 0 — the
+    per-sequence energy-proportionality proof).
     """
     bh, sq, d = q.shape
     bkv, skv, dk = k.shape
@@ -188,7 +202,9 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
         (q.shape, k.shape, v.shape, group)
     assert sq % bq == 0 and skv % bk == 0, (q.shape, k.shape, bq, bk)
     kvl = jnp.reshape(jnp.asarray(skv if kv_len is None else kv_len,
-                                  jnp.int32), (1,))
+                                  jnp.int32), (-1,))
+    assert kvl.shape[0] in (1, bh), (kvl.shape, bh)
+    kvl = jnp.broadcast_to(kvl, (bh,))
     qi, ki, ff, lf = block_schedule(sq, skv, bq, bk, causal=causal,
                                     window=window, q_offset=q_offset)
     n_steps = len(qi)
@@ -202,9 +218,9 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
     out_specs = [pl.BlockSpec((1, bq, dv),
                               lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0))]
     if debug_visits:
-        out_shape.append(jax.ShapeDtypeStruct((n_steps, 1), jnp.int32))
+        out_shape.append(jax.ShapeDtypeStruct((bh, n_steps), jnp.int32))
         out_specs.append(pl.BlockSpec(
-            (1, 1), lambda h, s, kvl, qi, ki, ff, lf: (s, 0)))
+            (1, 1), lambda h, s, kvl, qi, ki, ff, lf: (h, s)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(bh, n_steps),

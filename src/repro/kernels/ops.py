@@ -96,6 +96,20 @@ def cast_and_pack(a, b, *, fmt, stochastic: bool = False, key=None,
     return r[:rows, :2 * cols]
 
 
+def expand_kv_lens(kv_len, batch: int, heads: int, default):
+    """Normalize a scalar-or-vector sequence length to one int32 entry per
+    flattened head row ([batch * heads]) — the SMEM layout both attention
+    kernels consume.  A scalar (python int, 0-d, or traced) is shared by
+    every row; a [batch] vector is a ragged batch's per-sequence lengths,
+    repeated across that sequence's heads.  ``None`` means ``default``."""
+    kvl = jnp.reshape(jnp.asarray(default if kv_len is None else kv_len,
+                                  jnp.int32), (-1,))
+    if kvl.shape[0] == 1:
+        return jnp.broadcast_to(kvl, (batch * heads,))
+    assert kvl.shape[0] == batch, (kvl.shape, batch)
+    return jnp.repeat(kvl, heads)
+
+
 def resolve_backend(backend: str) -> str:
     """Shared decode/prefill attention-backend resolution.
 
@@ -124,7 +138,10 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
     heads are flattened, ``(bq, bk)`` comes from the autotuner unless pinned,
     and the kernel runs the pruned block schedule — causal future blocks and
     blocks left of a sliding window are never visited.  ``kv_len`` is a
-    dynamic kernel input (padding/ragged masking without retrace);
+    dynamic kernel input (padding/ragged masking without retrace): a scalar
+    shared by the batch, or a per-sequence [B] vector for ragged batches,
+    where each sequence's KV walk then early-outs at its own length inside
+    the kernel (work proportional to the row's length, not the batch max);
     ``q_offset`` shifts query positions (prefill at a nonzero cache write
     index).  V may have a different head dim than Q/K (MLA expanded form).
 
@@ -158,7 +175,7 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
     kf, _ = _pad_to(kf, (bk_,), (1,))
     vf, _ = _pad_to(vf, (bk_,), (1,))
     o = flash_attention_pallas(
-        qf, kf, vf, skv if kv_len is None else kv_len, group=group,
+        qf, kf, vf, expand_kv_lens(kv_len, b, h, skv), group=group,
         bq=bq_, bk=bk_, scale=scale, causal=causal, window=window,
         softcap=softcap, q_offset=q_offset, src_fmt_name=src_fmt_name,
         src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
@@ -175,9 +192,11 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
 
     q [B, H, 1, D]; k/v [B, Hkv, Smax, D] *in their storage dtype* (native
     narrow dtype, or f32 container on the ``policy.kv_fmt`` grid);
-    ``kv_len`` the live cache length (python int or traced scalar — it is a
-    dynamic kernel input, so per-step calls under ``lax.scan`` never
-    retrace).  Returns [B, H, 1, D] f32.
+    ``kv_len`` the live cache length: a python int or traced scalar shared
+    by the batch, or a per-sequence [B] vector (ragged batches — each row's
+    KV-block loop early-exits at its own length in-kernel).  Either way it
+    is a dynamic kernel input, so per-step calls under ``lax.scan`` never
+    retrace.  Returns [B, H, 1, D] f32.
 
     ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
     accelerators — this wrapper sits on the serving hot path (behind
@@ -213,7 +232,7 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     bk = min(bk, max(128, smax))
     kf, _ = _pad_to(kf, (bk,), (1,))
     vf, _ = _pad_to(vf, (bk,), (1,))
-    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (1, 1))
+    kvl = expand_kv_lens(kv_len, b, hkv, smax).reshape(b * hkv, 1)
     o = decode_attention_pallas(
         qf, kf, vf, kvl, bk=bk, scale=scale, window=window, softcap=softcap,
         kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name, src_dtype=src_dt,

@@ -18,6 +18,18 @@ from ..core.formats import get_format
 NEG_INF = -1e30
 
 
+def _per_row_lens(kv_len, bh, default):
+    """Normalize a scalar-or-vector ``kv_len`` to a length-``bh`` numpy int
+    vector (one live length per flattened head row) — the oracle twin of the
+    kernels' SMEM length normalization.  ``None`` means ``default``."""
+    import numpy as np
+    if kv_len is None:
+        kv_len = default
+    lens = np.asarray(kv_len, np.int64).reshape(-1)
+    assert lens.shape[0] in (1, bh), (lens.shape, bh)
+    return np.broadcast_to(lens, (bh,))
+
+
 def tp_matmul_ref(a, b, *, out_dtype=jnp.float32, quant_fmt_name=None,
                   bk=None):
     """Expanding-FMA matmul oracle: optional fp-grid operand snap (FTZ like
@@ -93,10 +105,14 @@ def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
     ``src_fmt_name`` mirrors the kernel's emulate-mode RNE operand snap
     (f32 containers); ``q_offset`` shifts query positions for the causal /
     window masks.  q: [BH, Sq, D]; k: [BKV, Skv, D]; v: [BKV, Skv, Dv].
+
+    ``kv_len`` may be a scalar (every row shares one length) or a per-row
+    length-BH vector (ragged batches — the per-sequence oracle; expand a
+    [B] sequence-length vector by the head count like ops.py does).
     """
     bh, sq, d = q.shape
     bkv, skv, _ = k.shape
-    kv_len = skv if kv_len is None else kv_len
+    kv_len = _per_row_lens(kv_len, bh, skv)
     if bq is not None or bk is not None:
         assert bq is not None and bk is not None, (bq, bk)
         return _flash_blocked_ref(
@@ -116,16 +132,18 @@ def flash_attention_ref(q, k, v, *, group: int = 1, scale: float = 1.0,
         s = softcap * jnp.tanh(s / softcap)
     q_idx = q_offset + jnp.arange(sq)[:, None]
     k_idx = jnp.arange(skv)[None, :]
-    mask = k_idx < kv_len
+    mask = jnp.ones((sq, skv), bool)
     if causal:
         mask &= q_idx >= k_idx
     if window is not None:
         mask &= (q_idx - k_idx) < window
-    s = jnp.where(mask[None], s, NEG_INF)
+    # per-row live length: [BH, 1, Skv] against the static [Sq, Skv] masks
+    mask = mask[None] & (k_idx[None] < jnp.asarray(kv_len)[:, None, None])
+    s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     m = jnp.where(m <= NEG_INF / 2, 0.0, m)
     p = jnp.exp(s - m)
-    p = jnp.where(mask[None], p, 0.0)
+    p = jnp.where(mask, p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("hqk,hkd->hqd", snap(p).astype(jnp.float32),
                    vv.astype(jnp.float32), preferred_element_type=jnp.float32)
@@ -175,7 +193,9 @@ def _flash_blocked_ref(q, k, v, *, group, scale, causal, window, softcap,
                        bq, bk):
     """Blocked online-softmax walk over the kernel's pruned schedule —
     elementary-op-for-op the same updates as ``_attn_kernel``, so the
-    result is bitwise identical in interpret mode."""
+    result is bitwise identical in interpret mode.  ``kv_len`` is the
+    per-row length vector from ``_per_row_lens``: each row early-outs at
+    its OWN length, the oracle twin of the kernel's per-row ``pl.when``."""
     from .flash_attention import block_schedule
 
     bh, sq, d = q.shape
@@ -188,6 +208,7 @@ def _flash_blocked_ref(q, k, v, *, group, scale, causal, window, softcap,
     out = []
     for h in range(bh):
         hk = h // group
+        kvl = int(kv_len[h])
         rows = {}
         for step in range(len(qi)):
             iq, ik = int(qi[step]), int(ki[step])
@@ -195,13 +216,13 @@ def _flash_blocked_ref(q, k, v, *, group, scale, causal, window, softcap,
                 acc = jnp.zeros((bq, dv), jnp.float32)
                 m = jnp.full((bq, 1), NEG_INF, jnp.float32)
                 l = jnp.zeros((bq, 1), jnp.float32)
-            if ik * bk < kv_len:   # the kernel's dynamic pl.when early-out
+            if ik * bk < kvl:   # the kernel's dynamic pl.when early-out
                 acc, m, l = upd(q[h, iq * bq:(iq + 1) * bq],
                                 k[hk, ik * bk:(ik + 1) * bk],
                                 v[hk, ik * bk:(ik + 1) * bk],
                                 acc, m, l,
                                 jnp.int32(q_offset + iq * bq),
-                                jnp.int32(ik * bk), jnp.int32(kv_len))
+                                jnp.int32(ik * bk), jnp.int32(kvl))
             if lf[step]:
                 rows[iq] = (acc /
                             jnp.where(l == 0.0, 1.0, l)).astype(out_dtype)
@@ -227,12 +248,16 @@ def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
     decode_attention_pallas in interpret mode; with ``bk=None`` it is the
     plain dense path (one block).
 
-    q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: int (or 0-d array).
+    q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: int (or 0-d array)
+    shared by every row, or a per-row length-BHkv vector (ragged batches —
+    each row's KV blocks past its own length are skipped, mirroring the
+    kernel's per-row early-exit).
     """
     bh, g, d = q.shape
     _, smax, _ = k.shape
     bk = smax if bk is None else bk
     assert smax % bk == 0, (smax, bk)
+    kv_len = _per_row_lens(kv_len, bh, smax)
 
     snap = lambda x, fmt_name: _snap(
         x, get_format(fmt_name) if fmt_name else None, src_dtype)
@@ -246,27 +271,32 @@ def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
 
     out = []
     for h in range(bh):
+        kvl = int(kv_len[h])
+        if kvl <= 0:           # empty row: the kernel's l == 0 store guard
+            out.append(jnp.zeros((g, d), out_dtype))
+            continue
         blocks = []
         for kk in range(0, smax, bk):
+            if kk >= kvl:      # the kernel's per-row early-exit (exact)
+                continue
             s = dot_qk(qs[h], ks[h, kk:kk + bk]) * scale
             if softcap is not None:
                 from .decode_attention import softcap_scores
                 s = softcap_scores(s, softcap)
             k_idx = kk + jnp.arange(bk)[None, :]
-            mask = k_idx < kv_len
+            mask = k_idx < kvl
             if window is not None:
-                mask = mask & (k_idx > kv_len - 1 - window)
-            blocks.append((jnp.where(mask, s, NEG_INF), mask))
-        m = jnp.max(jnp.concatenate([s for s, _ in blocks], axis=-1),
+                mask = mask & (k_idx > kvl - 1 - window)
+            blocks.append((kk, jnp.where(mask, s, NEG_INF), mask))
+        m = jnp.max(jnp.concatenate([s for _, s, _ in blocks], axis=-1),
                     axis=-1, keepdims=True)
         m = jnp.where(m <= NEG_INF / 2, 0.0, m)
         acc = jnp.zeros((g, d), jnp.float32)
         l = jnp.zeros((g, 1), jnp.float32)
-        for bi, (s, mask) in enumerate(blocks):
+        for kk, s, mask in blocks:
             p = jnp.where(mask, jnp.exp(s - m), 0.0)
             l = l + jnp.sum(p, axis=-1, keepdims=True)
-            acc = acc + dot_pv(p.astype(src_dtype),
-                               vs[h, bi * bk:(bi + 1) * bk])
+            acc = acc + dot_pv(p.astype(src_dtype), vs[h, kk:kk + bk])
         out.append((acc / jnp.where(l == 0.0, 1.0, l)).astype(out_dtype))
     return jnp.stack(out)
 

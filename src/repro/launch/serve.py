@@ -5,12 +5,31 @@ one XLA dispatch for the whole generation.  ``--loop python`` keeps the
 seed per-step loop (one dispatch per token) for A/B comparison; the
 benchmark in benchmarks/serve_decode.py tracks the two paths over time.
 
+``--ragged`` packs MIXED-length prompts into one right-padded batch (row
+``b`` gets a length cycling over 1/4, 1/2, 3/4 and 4/4 of ``--prompt-len``)
+and serves it with per-sequence lengths: each row prefills, masks and
+decodes at its OWN length, and the Pallas kernels prune each row's KV walk
+there instead of paying the longest prompt's grid for every row.
+``--stop-token`` enables per-row EOS early-exit: a row that emits the stop
+token freezes (its outputs stay the stop token, its live cache stops
+growing) while the rest of the batch keeps decoding.
+
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
+``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def ragged_lengths(batch: int, prompt_len: int):
+    """The mixed-length pack of ``--ragged``: rows cycle over 1/4, 1/2,
+    3/4, 4/4 of ``prompt_len`` (clamped to >= 1), longest rows last so the
+    printout reads like the padded batch."""
+    fracs = (0.25, 0.5, 0.75, 1.0)
+    return [max(1, int(prompt_len * fracs[i % len(fracs)]))
+            for i in range(batch)]
 
 
 def main(argv=None):
@@ -34,9 +53,19 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--top-p", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
+    ap.add_argument("--ragged", action="store_true",
+                    help="pack mixed-length prompts (1/4..4/4 of "
+                         "--prompt-len) into one padded batch and serve "
+                         "each row at its own length (scan loop only)")
+    ap.add_argument("--stop-token", type=int, default=None,
+                    help="per-row EOS early-exit: rows freeze after "
+                         "emitting this token id (scan loop only)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args(argv)
+    if (args.ragged or args.stop_token is not None) and args.loop != "scan":
+        ap.error("--ragged / --stop-token require --loop scan (the "
+                 "per-step python loop is the uniform-batch seed path)")
 
     import jax
     import jax.numpy as jnp
@@ -50,18 +79,32 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  model.cfg.vocab)
+    prompt_lens = None
+    if args.ragged:
+        lens = ragged_lengths(args.batch, args.prompt_len)
+        prompt_lens = jnp.asarray(lens, jnp.int32)
+        # zero the pad tail so the printed pack is honest about what's live
+        live = jnp.arange(args.prompt_len)[None, :] < prompt_lens[:, None]
+        prompts = jnp.where(live, prompts, 0)
+        print(f"ragged pack: lengths {lens} padded to {args.prompt_len}")
 
     if args.loop == "scan":
         key = jax.random.key(args.seed)
-        gen_fn = jax.jit(lambda p, t: model.generate(
+        gen_fn = jax.jit(lambda p, t, pl_: model.generate(
             p, t, gen_len=args.gen, max_len=max_len,
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, key=key)[0])
-        gen = jax.block_until_ready(gen_fn(params, prompts))  # compile
+            top_p=args.top_p, key=key, prompt_lens=pl_,
+            stop_token=args.stop_token)[0])
+        gen = jax.block_until_ready(gen_fn(params, prompts, prompt_lens))
         t0 = time.time()
-        gen = jax.block_until_ready(gen_fn(params, prompts))
+        gen = jax.block_until_ready(gen_fn(params, prompts, prompt_lens))
         dt = time.time() - t0
         n_tok = args.batch * args.gen
+        if args.stop_token is not None:
+            live_tok = int(jnp.sum(gen != args.stop_token)
+                           + jnp.sum(jnp.any(gen == args.stop_token, 1)))
+            print(f"stop-token {args.stop_token}: {live_tok}/{n_tok} "
+                  f"tokens live (rest frozen post-EOS)")
     else:
         # same sampling rule as the scan path so the A/B stays
         # apples-to-apples when sampling flags are set

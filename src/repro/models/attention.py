@@ -36,6 +36,39 @@ def kv_store_dtype(policy):
     return tp.storage_dtype(policy.param_fmt, policy.mode)
 
 
+def _is_vec(x) -> bool:
+    """True for a per-sequence [B] vector (ragged batch), False for the
+    scalar (python int / 0-d array) every row shares."""
+    return getattr(x, "ndim", 0) >= 1 and not isinstance(x, (int, float))
+
+
+def _len_rows(kv_len):
+    """Normalize scalar-or-vector ``kv_len`` to a [1]-or-[B] int32 array —
+    one broadcastable shape for every dense masking site below (a [1]
+    array broadcasts over the batch exactly like the old scalar did)."""
+    return jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
+
+
+def update_cache_rows(buf, new, pos, *, axis: int):
+    """Write ``new`` into the cache ``buf`` at slot ``pos`` along ``axis``
+    (both batch-leading).  A scalar ``pos`` writes one shared index (the
+    uniform-batch fast path — identical to the old dynamic_update_slice);
+    a per-row [B] vector writes each sequence at its OWN index (ragged
+    decode: every row's cache grows at its own length)."""
+    new = new.astype(buf.dtype)
+    if not _is_vec(pos):
+        start = [0] * buf.ndim
+        start[axis] = pos
+        return jax.lax.dynamic_update_slice(buf, new, tuple(start))
+
+    def one(bb, nn, pp):
+        start = [0] * bb.ndim
+        start[axis - 1] = pp
+        return jax.lax.dynamic_update_slice(bb, nn, tuple(start))
+
+    return jax.vmap(one)(buf, new, pos)
+
+
 # ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------
@@ -64,14 +97,17 @@ def _use_pallas_prefill(backend: str, q_offset=0) -> bool:
     return resolve_backend(backend) == "pallas" and isinstance(q_offset, int)
 
 
-def _flash_attend(q, k, v, policy, *, causal, window, cap, q_offset=0):
+def _flash_attend(q, k, v, policy, *, causal, window, cap, q_offset=0,
+                  kv_len=None):
     """q [B,H,S,Dh] vs k/v [B,Hkv,T,Dk/Dv] -> [B,H,S,Dv] via the pruned-grid
     Pallas flash-attention kernel (kernels/flash_attention.py): causal future
     blocks and blocks left of the sliding window are never visited, so the
     windowed-slice trick of ``_masked_softmax_attend`` is subsumed by the
-    block schedule itself."""
+    block schedule itself.  ``kv_len`` (scalar or per-sequence [B] vector)
+    additionally prunes each row's KV walk at its own live length in-kernel
+    (ragged prefill batches)."""
     from ..kernels import ops as kops
-    return kops.flash_attention(q, k, v, policy=policy,
+    return kops.flash_attention(q, k, v, kv_len=kv_len, policy=policy,
                                 scale=q.shape[-1] ** -0.5, causal=causal,
                                 window=window, softcap=cap, q_offset=q_offset)
 
@@ -85,12 +121,15 @@ def _masked_softmax_attend(q, k, v, policy, *, causal, window, cap,
     each query chunk attends only to the KV slice its window can reach —
     compute drops from O(S*T) to O(S*(window+chunk)).  The baseline
     computes full dense scores and masks (what the paper-faithful chunked
-    schedule does)."""
+    schedule does).
+
+    ``kv_len``: scalar (one live length for the batch) or a per-sequence
+    [B] vector (ragged batch — each row masks keys past its OWN length)."""
     b, h, s, dh = q.shape
     _, hkv, t, _ = k.shape
     group = h // hkv
     scale = dh ** -0.5
-    kv_len = t if kv_len is None else kv_len
+    kv_len = _len_rows(t if kv_len is None else kv_len)    # [1] or [B]
     qg = q.reshape(b, hkv, group, s, dh)
     chunk = min(chunk, s)
     n_chunks = -(-s // chunk)
@@ -129,13 +168,21 @@ def _masked_softmax_attend(q, k, v, policy, *, causal, window, cap,
                                   out_fmt="fp32") * scale
         scores = softcap(scores, cap)
         q_idx = q_offset + ci * chunk + jnp.arange(chunk)
-        mask = (k_idx[None, :] < kv_len)
+        mask = jnp.ones((chunk, k_idx.shape[0]), bool)
         if causal:
             mask = mask & (q_idx[:, None] >= k_idx[None, :])
         if window is not None:
             mask = mask & ((q_idx[:, None] - k_idx[None, :]) < window)
-        mask_b = mask[None, None] if use_slice else mask[None, None, None]
-        scores = jnp.where(mask_b, scores, NEG_INF)
+        # per-row live length ([1] broadcasts = the uniform case): combined
+        # with the static masks at [B?, 1, (1,) chunk, t] rank
+        lmask = k_idx[None, :] < kv_len[:, None]            # [1 or B, t]
+        if use_slice:
+            scores = jnp.where(mask[None, None]
+                               & lmask[:, None, None, :], scores, NEG_INF)
+        else:
+            scores = jnp.where(mask[None, None, None]
+                               & lmask[:, None, None, None, :],
+                               scores, NEG_INF)
         m = jnp.max(scores, axis=-1, keepdims=True)
         p = jnp.exp(scores - jnp.where(m <= NEG_INF / 2, 0.0, m))
         p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
@@ -170,12 +217,19 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   kv_states=None, use_rope=True, chunk: int = 512,
                   windowed_slice: bool = False,
                   decode_backend: str = "dense",
-                  prefill_backend: str = "dense"):
+                  prefill_backend: str = "dense",
+                  kv_len=None):
     """Returns (out [B,S,D], new_cache).
 
     Train/prefill: cache None.  Decode: x is [B,1,D], cache holds Smax slots,
     cache_pos is the write index.  Cross-attention: kv_states provides
     encoder states (no cache update, no rope).
+
+    Ragged batches: ``kv_len`` (scalar or per-sequence [B] vector) masks
+    keys past each row's live length — in prefill it is the per-row prompt
+    length; in decode it overrides the default ``cache_pos + s`` (EOS-frozen
+    rows keep a fixed live length).  ``cache_pos`` may likewise be a [B]
+    vector: each row's K/V is then written at its OWN cache index.
     """
     b, s, d = x.shape
     q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
@@ -214,37 +268,36 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                                      window=None, cap=attn_softcap,
                                      q_offset=0, chunk=chunk)
     elif cache is not None:
-        cdt = cache.k.dtype
-        ck = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cdt), (0, 0, cache_pos, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cdt), (0, 0, cache_pos, 0))
+        ck = update_cache_rows(cache.k, k, cache_pos, axis=2)
+        cv = update_cache_rows(cache.v, v, cache_pos, axis=2)
         new_cache = KVCache(ck, cv)
         if s > 1:
             # prefill: the prompt itself is the entire live cache content —
-            # attend over the *current* k/v, not the cache buffer.
+            # attend over the *current* k/v, not the cache buffer (kv_len
+            # carries the per-row prompt lengths of a ragged batch).
             if _use_pallas_prefill(prefill_backend, cache_pos):
                 out = _flash_attend(q, k, v, policy, causal=causal,
                                     window=window, cap=attn_softcap,
-                                    q_offset=cache_pos)
+                                    q_offset=cache_pos, kv_len=kv_len)
             else:
                 out = _masked_softmax_attend(
                     q, k, v, policy, causal=causal, window=window,
                     cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
-                    windowed_slice=windowed_slice)
+                    kv_len=kv_len, windowed_slice=windowed_slice)
         else:
-            kv_len = cache_pos + s
+            if kv_len is None:
+                kv_len = cache_pos + s     # [B] vector when cache_pos is one
             out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
                                  window=window, cap=attn_softcap,
                                  backend=decode_backend)
     elif _use_pallas_prefill(prefill_backend):
         out = _flash_attend(q, k, v, policy, causal=causal, window=window,
-                            cap=attn_softcap, q_offset=0)
+                            cap=attn_softcap, q_offset=0, kv_len=kv_len)
     else:
         out = _masked_softmax_attend(
             q, k, v, policy, causal=causal,
             window=window, cap=attn_softcap, q_offset=0, chunk=chunk,
-            windowed_slice=windowed_slice)
+            kv_len=kv_len, windowed_slice=windowed_slice)
 
     out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
     proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
@@ -259,8 +312,11 @@ def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,
     (kernels/decode_attention.py): the cache stays in its narrow storage
     format until the in-kernel CONV->ADDMUL widening, and ``kv_len`` is a
     dynamic kernel input so scan-based generation never retraces.
-    ``backend="auto"`` resolves via ``kernels.ops.resolve_backend`` (pallas
-    off-CPU only — shared with the prefill path)."""
+    ``kv_len`` may be a per-sequence [B] vector (ragged batch): the kernel
+    early-exits each row's KV loop at its own length; the dense path masks
+    per row.  ``backend="auto"`` resolves via
+    ``kernels.ops.resolve_backend`` (pallas off-CPU only — shared with the
+    prefill path)."""
     if backend != "dense":
         from ..kernels import ops as kops
         if kops.resolve_backend(backend) == "pallas":
@@ -275,11 +331,16 @@ def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,
                           out_fmt="fp32") * (dh ** -0.5)
     scores = softcap(scores, cap)
     idx = jnp.arange(smax)
-    mask = idx[None, :] < kv_len
+    kvl = _len_rows(kv_len)[:, None]                    # [1 or B, 1]
+    mask = idx[None, :] < kvl
     if window is not None:
-        mask = mask & (idx[None, :] > kv_len - 1 - window)
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+        mask = mask & (idx[None, :] > kvl - 1 - window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    # fully-masked rows (kv_len == 0, an empty ragged-batch slot): emit
+    # zeros like the kernel's l == 0 store guard, not a uniform softmax
+    # over dead cache slots
+    p = p * jnp.any(mask, axis=-1).astype(p.dtype)[:, None, None, None]
     out = tp.tp_einsum("bhqt,bhtd->bhqd", p, cv, policy, out_fmt="fp32")
     return out.reshape(b, h, s, dh)
 
@@ -336,9 +397,12 @@ def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
                   v_head_dim, positions, rope_theta=1e4, norm_eps=1e-6,
                   cache: Optional[MLACache] = None,
                   cache_pos: Optional[jnp.ndarray] = None, chunk: int = 512,
-                  prefill_backend: str = "dense"):
+                  prefill_backend: str = "dense", kv_len=None):
     """MLA with decoupled rope.  Prefill expands k/v; decode runs the
-    absorbed form directly against the latent cache."""
+    absorbed form directly against the latent cache.  ``kv_len`` /
+    ``cache_pos`` follow the gqa_attention ragged contract: scalar, or a
+    per-sequence [B] vector (per-row length masking and per-row latent
+    cache write indices)."""
     b, s, d = x.shape
     qd = nope_dim + rope_dim
 
@@ -361,14 +425,12 @@ def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
 
     new_cache = None
     if cache is not None:
-        cdt = cache.c_kv.dtype
-        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cdt),
-                                          (0, cache_pos, 0))
-        cp = jax.lax.dynamic_update_slice(cache.k_pe, k_pe.astype(cdt),
-                                          (0, cache_pos, 0))
+        cc = update_cache_rows(cache.c_kv, c_kv, cache_pos, axis=1)
+        cp = update_cache_rows(cache.k_pe, k_pe, cache_pos, axis=1)
         new_cache = MLACache(cc, cp)
     if cache is not None and s == 1:
-        kv_len = cache_pos + s
+        if kv_len is None:
+            kv_len = cache_pos + s
         # absorbed decode: q_nope -> latent space via W_uk
         cc, cp = new_cache
         kv_lora = cc.shape[-1]
@@ -379,9 +441,11 @@ def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
                                out_fmt="fp32")
                   + tp.tp_einsum("bshr,btr->bhst", q_pe, cp, policy,
                                  out_fmt="fp32")) * scale
-        mask = jnp.arange(smax)[None, :] < kv_len
-        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        mask = jnp.arange(smax)[None, :] < _len_rows(kv_len)[:, None]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
         p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        # kv_len == 0 rows: zeros, not uniform weights over dead slots
+        p = p * jnp.any(mask, axis=-1).astype(p.dtype)[:, None, None, None]
         o_lat = tp.tp_einsum("bhst,btr->bshr", p, cc, policy, out_fmt="fp32")
         w_uv = params["w_uv"].reshape(kv_lora, n_heads, v_head_dim)
         out = tp.tp_einsum("bshr,rhv->bshv", o_lat, w_uv, policy)
@@ -401,12 +465,12 @@ def mla_attention(x, params, policy, *, n_heads, nope_dim, rope_dim,
         if _use_pallas_prefill(prefill_backend):
             # the kernel supports Dv != Dqk directly (expanded MLA prefill)
             out = _flash_attend(qq, kk, vv, policy, causal=True, window=None,
-                                cap=None, q_offset=0)
+                                cap=None, q_offset=0, kv_len=kv_len)
         else:
             # _masked_softmax_attend scales by qd**-0.5 internally == MLA
             out = _masked_softmax_attend(qq, kk, vv, policy, causal=True,
                                          window=None, cap=None, q_offset=0,
-                                         chunk=chunk)
+                                         chunk=chunk, kv_len=kv_len)
         out = out.swapaxes(1, 2)
 
     out = out.reshape(b, s, n_heads * v_head_dim)

@@ -200,8 +200,10 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
                 policy: PrecisionPolicy, *, positions, mesh=None,
                 cache=None, cache_pos=None, enc_states=None,
-                shared_params=None, decode: bool = False):
-    """Returns (x, new_cache, aux_loss)."""
+                shared_params=None, decode: bool = False, kv_len=None):
+    """Returns (x, new_cache, aux_loss).  ``kv_len``/``cache_pos`` may be
+    per-sequence [B] vectors (ragged batches) — attention mixers mask and
+    write per row; SSM mixers have no length axis and ignore them."""
     aux = jnp.zeros((), F32)
     new_cache: dict = {}
     rs = cfg.residual_scale
@@ -220,14 +222,15 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
             chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
             decode_backend=cfg.decode_backend,
-            prefill_backend=cfg.prefill_backend)
+            prefill_backend=cfg.prefill_backend, kv_len=kv_len)
     elif spec.mixer == "mla":
         mix, nc = attn.mla_attention(
             h, ap["attn"], policy, n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
             rope_dim=cfg.rope_dim, v_head_dim=cfg.v_head_dim,
             positions=positions, rope_theta=cfg.rope_theta,
             norm_eps=cfg.norm_eps, cache=kv_cache, cache_pos=cache_pos,
-            chunk=cfg.attn_chunk, prefill_backend=cfg.prefill_backend)
+            chunk=cfg.attn_chunk, prefill_backend=cfg.prefill_backend,
+            kv_len=kv_len)
     elif spec.mixer == "mamba2":
         mix, nc = ssm.mamba2_mix(h, ap["attn"], cfg.mamba, policy,
                                  cache=kv_cache)
@@ -396,8 +399,12 @@ class Model:
                 x, frontend_embeds.astype(x.dtype), (0, 0, 0))
         if cfg.max_seq:
             s = tokens.shape[1]
-            pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"],
-                                              pos_offset, s, 0)
+            if getattr(pos_offset, "ndim", 0) >= 1:
+                # ragged decode: each row reads its own learned position
+                pe = params["pos_embed"][pos_offset][:, None]   # [B, 1, d]
+            else:
+                pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                                  pos_offset, s, 0)
             x = x + pe.astype(x.dtype)
         return shard(x, residual_spec() if tokens.shape[1] > 1
                      else bspec(None, None))
@@ -423,7 +430,7 @@ class Model:
     # -- stacks ------------------------------------------------------------
     def _run_stack(self, params, x, *, positions, mesh=None, caches=None,
                    cache_pos=None, enc_states=None, remat: bool = False,
-                   decode: bool = False):
+                   decode: bool = False, kv_len=None):
         cfg = self.cfg
         shared = params.get("shared")
         aux_total = jnp.zeros((), F32)
@@ -433,7 +440,8 @@ class Model:
             return apply_layer(x, p, spec, cfg, self.policy,
                                positions=positions, mesh=mesh, cache=c,
                                cache_pos=cache_pos, enc_states=enc_states,
-                               shared_params=shared, decode=decode)
+                               shared_params=shared, decode=decode,
+                               kv_len=kv_len)
 
         for i, spec in enumerate(cfg.prefix):
             c = caches.prefix[i] if caches else None
@@ -525,9 +533,30 @@ class Model:
         return tot / jnp.maximum(cnt, 1)
 
     def prefill(self, params, tokens, *, max_len: int, frontend_embeds=None,
-                mesh=None):
-        """Consume a prompt, build caches sized ``max_len``."""
+                mesh=None, prompt_lens=None):
+        """Consume a prompt, build caches sized ``max_len``.
+
+        ``prompt_lens`` ([B] int32) serves a RAGGED batch: ``tokens`` is
+        right-padded to a shared width, each row's live prompt is its first
+        ``prompt_lens[b]`` tokens.  Attention masks keys past each row's
+        own length (the Pallas prefill kernel early-outs there — work
+        proportional to the row's length), pad-slot K/V lands in cache
+        slots the per-row decode ``kv_len`` keeps dead, and the returned
+        logits are each row's LAST LIVE position's (not the pad tail's).
+        """
         cfg = self.cfg
+        if prompt_lens is not None:
+            # recurrent mixers have no length axis to mask: pad embeddings
+            # would enter the state scan and silently corrupt every later
+            # decode step — refuse rather than return padding-dependent
+            # output (attention archs only, until SSM prefill masks inputs)
+            ssm = sorted({s.mixer for s in cfg.layer_list()
+                          if s.mixer in ("mamba2", "mlstm", "slstm")})
+            if ssm:
+                raise ValueError(
+                    f"prompt_lens (ragged serving) is unsupported for "
+                    f"{cfg.name}: {'/'.join(ssm)} mixers cannot mask pad "
+                    f"tokens out of their recurrent state")
         enc_states = None
         if cfg.encoder is not None:
             enc_states = encode(frontend_embeds, params["encoder"], cfg,
@@ -538,16 +567,23 @@ class Model:
         positions = jnp.arange(tokens.shape[1])
         x, caches, _ = self._run_stack(params, x, positions=positions,
                                        mesh=mesh, caches=caches, cache_pos=0,
-                                       enc_states=enc_states)
+                                       enc_states=enc_states,
+                                       kv_len=prompt_lens)
         x = _norm(x, params["norm_f"], cfg)
-        lg = self.logits(params, x[:, -1:]).astype(F32)
+        if prompt_lens is None:
+            xl = x[:, -1:]
+        else:
+            last = (jnp.asarray(prompt_lens, jnp.int32) - 1)[:, None, None]
+            xl = jnp.take_along_axis(x, last, axis=1)     # [B, 1, d]
+        lg = self.logits(params, xl).astype(F32)
         return lg, caches
 
     def generate(self, params, tokens, *, gen_len: int,
                  max_len: Optional[int] = None, frontend_embeds=None,
                  mesh=None, return_logits: bool = False,
                  temperature: float = 0.0, top_k: Optional[int] = None,
-                 top_p: Optional[float] = None, key=None):
+                 top_p: Optional[float] = None, key=None,
+                 prompt_lens=None, stop_token: Optional[int] = None):
         """Prefill + decode of ``gen_len`` tokens as ONE compiled program:
         the decode loop is a ``lax.scan`` over ``decode_step``, so the whole
         generation costs a single dispatch instead of one per token (the
@@ -565,6 +601,22 @@ class Model:
         sampling knobs are static, so the greedy graph carries no PRNG
         state at all.
 
+        Ragged serving: ``prompt_lens`` ([B] int32) says row ``b``'s live
+        prompt is ``tokens[b, :prompt_lens[b]]`` (right-padded batch).  The
+        write index becomes a per-row vector — each row decodes from its
+        own length, and the Pallas kernels prune each row's KV walk there.
+        Differing length vectors reuse one compiled program (they are
+        traced values).
+
+        EOS early-exit: with ``stop_token`` set, a per-row ``done`` mask
+        rides the scan carry.  A finished row's outputs are frozen to
+        ``stop_token``, and its live attention length is frozen at the
+        step it finished — subsequent steps' K/V writes land in cache slots
+        past that length, which every attention mask treats as dead, so the
+        live cache is effectively frozen too (SSM-mixer layers in hybrid
+        archs keep updating their recurrent state; their outputs are
+        discarded the same way).
+
         Returns ``(gen_tokens [B, gen_len], logits)`` where ``logits`` is
         ``[B, gen_len, V]`` (prefill last-token logits followed by each
         step's) when ``return_logits`` else None.
@@ -572,10 +624,12 @@ class Model:
         b, prompt_len = tokens.shape
         max_len = max_len if max_len is not None else prompt_len + gen_len
         do_sample = temperature is not None and temperature > 0.0
+        use_stop = stop_token is not None
         pick = functools.partial(sample_token, temperature=temperature,
                                  top_k=top_k, top_p=top_p)
         lg0, caches = self.prefill(params, tokens, max_len=max_len,
-                                   frontend_embeds=frontend_embeds, mesh=mesh)
+                                   frontend_embeds=frontend_embeds,
+                                   mesh=mesh, prompt_lens=prompt_lens)
         if do_sample:
             key = jax.random.key(0) if key is None else key
             key, k0 = jax.random.split(key)
@@ -583,37 +637,71 @@ class Model:
         else:
             tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
 
+        # per-row write index when ragged, the shared scalar otherwise —
+        # it ALWAYS advances (done rows write into dead slots, see above)
+        pos0 = (jnp.asarray(prompt_lens, jnp.int32) if prompt_lens is not None
+                else jnp.asarray(prompt_len, jnp.int32))
+        if use_stop:
+            done0 = tok0[:, 0] == stop_token
+            tok0 = jnp.where(done0[:, None], stop_token, tok0)
+
         def body(carry, _):
+            tok, c, pos = carry[:3]
+            rest = list(carry[3:])
+            lens = done = ky = None
+            if use_stop:
+                lens, done = rest.pop(0), rest.pop(0)
             if do_sample:
-                tok, c, pos, ky = carry
-                ky, step_key = jax.random.split(ky)
-            else:
-                tok, c, pos = carry
-            lg, c = self.decode_step(params, tok, c, pos, mesh=mesh)
+                ky, step_key = jax.random.split(rest.pop(0))
+            # a done row's live window stays at the length it finished with
+            attend = jnp.where(done, lens, pos + 1) if use_stop else None
+            lg, c = self.decode_step(params, tok, c, pos, mesh=mesh,
+                                     kv_len=attend)
             if do_sample:
                 nxt = pick(lg[:, -1], step_key)[:, None]
             else:
                 nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            nc = [None, c, pos + 1]
+            if use_stop:
+                nxt = jnp.where(done[:, None], stop_token, nxt)
+                nc += [jnp.where(done, lens, pos + 1), done
+                       | (nxt[:, 0] == stop_token)]
+            nc[0] = nxt
+            if do_sample:
+                nc.append(ky)
             ys = (nxt[:, 0], lg[:, 0]) if return_logits else (nxt[:, 0],)
-            nc = (nxt, c, pos + 1, ky) if do_sample else (nxt, c, pos + 1)
-            return nc, ys
+            return tuple(nc), ys
 
-        init = (tok0, caches, jnp.asarray(prompt_len, jnp.int32))
+        init = [tok0, caches, pos0]
+        if use_stop:
+            # live length entering the first step: the prompt only (tok0's
+            # K/V is written by that step); broadcast for uniform batches
+            init += [jnp.broadcast_to(pos0, (b,)), done0]
         if do_sample:
-            init = init + (key,)
-        _, ys = jax.lax.scan(body, init, None, length=gen_len - 1)
+            init.append(key)
+        _, ys = jax.lax.scan(body, tuple(init), None, length=gen_len - 1)
         gen = jnp.concatenate([tok0, ys[0].swapaxes(0, 1)], axis=1)
         if not return_logits:
             return gen, None
         return gen, jnp.concatenate([lg0, jnp.moveaxis(ys[1], 0, 1)], axis=1)
 
-    def decode_step(self, params, token, caches: Caches, pos, *, mesh=None):
-        """One decode step: token [B,1], pos scalar -> (logits [B,1,V], caches)."""
+    def decode_step(self, params, token, caches: Caches, pos, *, mesh=None,
+                    kv_len=None):
+        """One decode step: token [B,1], pos scalar -> (logits [B,1,V],
+        caches).  ``pos`` may be a per-sequence [B] vector (ragged batch):
+        each row writes its K/V at — and takes its rope position from — its
+        OWN index.  ``kv_len`` overrides the attended live length
+        (scalar-or-vector; default ``pos + 1``) so EOS-frozen rows keep
+        writing into dead cache slots without growing their live window."""
         cfg = self.cfg
         x = self.embed(params, token, pos_offset=pos if cfg.max_seq else 0)
-        positions = pos + jnp.arange(1)
+        if getattr(pos, "ndim", 0) >= 1:
+            positions = pos[:, None, None]     # broadcastable to [B, H, 1]
+        else:
+            positions = pos + jnp.arange(1)
         x, caches, _ = self._run_stack(params, x, positions=positions,
                                        mesh=mesh, caches=caches,
-                                       cache_pos=pos, decode=True)
+                                       cache_pos=pos, decode=True,
+                                       kv_len=kv_len)
         x = _norm(x, params["norm_f"], cfg)
         return self.logits(params, x).astype(F32), caches

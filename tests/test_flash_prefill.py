@@ -83,9 +83,11 @@ def test_kernel_debug_visits_counts_kv_len_early_outs():
               src_dtype=jnp.float32, debug_visits=True)
     qi, ki, _, _ = block_schedule(512, 512, 128, 128, causal=True, window=None)
     _, vis = flash_attention_pallas(q, k, v, 130, **kw)
-    # only key blocks 0 and 1 intersect kv_len=130
+    # per-row instrumentation [BH, n_steps]; one row here — only key
+    # blocks 0 and 1 intersect kv_len=130
     want = (np.asarray(ki) * 128 < 130).astype(np.int32)
-    np.testing.assert_array_equal(np.asarray(vis)[:, 0], want)
+    assert vis.shape == (1, len(qi))
+    np.testing.assert_array_equal(np.asarray(vis)[0], want)
     assert int(vis.sum()) < len(qi)
 
 

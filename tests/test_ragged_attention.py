@@ -1,0 +1,375 @@
+"""Ragged-batch serving: per-sequence length-aware attention, end to end.
+
+Contract under test (the per-sequence generalization of the scalar
+``kv_len``):
+
+  * kernels — ``flash_attention_pallas`` / ``decode_attention_pallas``
+    accept a per-row length vector, are BIT-EXACT per row against the
+    per-sequence blocked oracles in ref.py, and their ``debug_visits``
+    instrumentation proves each row does work proportional to its OWN
+    length, not the batch max (the work-level energy-proportionality claim
+    of the FPnew reproduction).
+  * no-retrace — differing length *vectors* share one compiled kernel,
+    exactly like the scalar case (the serving-loop contract).
+  * model — ragged prefill/decode of a padded batch is row-independent
+    (each row equals itself served alone at the same padded width), and
+    pallas-vs-dense logits agree per row across bf16/fp16/fp8-kv policies.
+  * EOS — ``generate(stop_token=...)`` freezes finished rows' tokens and
+    live cache length without perturbing unfinished rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import block_schedule, flash_attention_pallas
+from repro.models.registry import build_model
+
+F32 = np.float32
+
+
+def rnd(*shape, seed=0, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(F32)
+
+
+def _qkv(bh, bkv, sq, skv, d, seed=0):
+    q = jnp.asarray(rnd(bh, sq, d, seed=seed))
+    k = jnp.asarray(rnd(bkv, skv, d, seed=seed + 1))
+    v = jnp.asarray(rnd(bkv, skv, d, seed=seed + 2))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: per-row bit-exactness vs the per-sequence blocked oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [None, "fp16", "fp8"])
+def test_ragged_flash_bit_exact_vs_per_row_oracle(fmt):
+    """Two sequences x two heads, lengths 100 and 256 in one padded batch:
+    the kernel with the per-row vector equals the blocked oracle walking
+    each row at its own length — bitwise, across storage-format snaps."""
+    lens = [100, 256]
+    group = 2                      # 2 q heads per kv head; B = len(lens)
+    q, k, v = _qkv(4, 2, 256, 256, 64, seed=3)
+    kvl = jnp.asarray(np.repeat(lens, group), jnp.int32)   # per flat head
+    kw = dict(group=group, scale=0.125, causal=True, src_fmt_name=fmt,
+              src_dtype=jnp.float32, out_dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, kvl, bq=128, bk=128, **kw)
+    want = ref.flash_attention_ref(q, k, v, kv_len=np.repeat(lens, group),
+                                   bq=128, bk=128, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and each row equals the SAME row under a uniform batch of its length
+    for b, L in enumerate(lens):
+        uni = flash_attention_pallas(q, k, v, L, bq=128, bk=128, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(got[b * group:(b + 1) * group]),
+            np.asarray(uni[b * group:(b + 1) * group]))
+
+
+@pytest.mark.parametrize("fmt", [None, "fp16alt", "fp16", "fp8"])
+def test_ragged_decode_bit_exact_vs_per_row_oracle(fmt):
+    """Per-row decode lengths across every supported KV storage grid."""
+    lens = [1, 77, 129, 256]
+    q = jnp.asarray(rnd(4, 8, 64, seed=5))
+    k = jnp.asarray(rnd(4, 256, 64, seed=6))
+    v = jnp.asarray(rnd(4, 256, 64, seed=7))
+    kvl = jnp.asarray(lens, jnp.int32)
+    kw = dict(bk=128, scale=0.125, kv_fmt_name=fmt, src_dtype=jnp.float32,
+              out_dtype=jnp.float32)
+    got = decode_attention_pallas(q, k, v, kvl, **kw)
+    want = ref.decode_attention_ref(q, k, v, kv_len=np.asarray(lens), **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ragged_decode_zero_length_row_emits_zeros():
+    """A kv_len == 0 row (continuous-batching edge: an empty slot in the
+    pack) yields exact zeros from kernel AND oracle — the l == 0 store
+    guard, not NaN from 0/0, and no oracle crash on the empty block list."""
+    q = jnp.asarray(rnd(2, 8, 64, seed=25))
+    k = jnp.asarray(rnd(2, 256, 64, seed=26))
+    v = jnp.asarray(rnd(2, 256, 64, seed=27))
+    kw = dict(bk=128, scale=0.125, src_dtype=jnp.float32)
+    lens = np.asarray([0, 128])
+    got = decode_attention_pallas(q, k, v, jnp.asarray(lens, jnp.int32), **kw)
+    want = ref.decode_attention_ref(q, k, v, kv_len=lens, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert (np.asarray(got[0]) == 0.0).all()
+    assert np.isfinite(np.asarray(got)).all()
+    # the dense model path agrees (zeros, not uniform weights over garbage)
+    from repro.core.policy import PRESETS
+    from repro.models.attention import _decode_attend
+    qd = jnp.asarray(rnd(2, 4, 1, 64, seed=28))
+    kd = jnp.asarray(rnd(2, 2, 128, 64, seed=29))
+    vd = jnp.asarray(rnd(2, 2, 128, 64, seed=30))
+    out = _decode_attend(qd, kd, vd, PRESETS["tp_bf16"],
+                         kv_len=jnp.asarray([0, 64]), window=None, cap=None,
+                         backend="dense")
+    assert (np.asarray(out[0]) == 0.0).all()
+    assert (np.asarray(out[1]) != 0.0).any()
+
+
+def test_ragged_decode_dead_rows_ignore_garbage():
+    """Slots past each ROW's length must not affect that row (ragged caches
+    have per-row garbage tails of different sizes)."""
+    lens = [50, 200]
+    q = jnp.asarray(rnd(2, 4, 64, seed=9))
+    k = jnp.asarray(rnd(2, 256, 64, seed=10))
+    v = jnp.asarray(rnd(2, 256, 64, seed=11))
+    kvl = jnp.asarray(lens, jnp.int32)
+    kw = dict(bk=128, scale=0.125, src_dtype=jnp.float32)
+    got = decode_attention_pallas(q, k, v, kvl, **kw)
+    k2 = jnp.stack([k[0].at[lens[0]:].set(1e9), k[1].at[lens[1]:].set(1e9)])
+    v2 = jnp.stack([v[0].at[lens[0]:].set(-1e9), v[1].at[lens[1]:].set(-1e9)])
+    got2 = decode_attention_pallas(q, k2, v2, kvl, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+# ---------------------------------------------------------------------------
+# debug_visits: per-row work proportional to per-row length
+# ---------------------------------------------------------------------------
+def test_flash_debug_visits_per_row_pruning():
+    """A ragged batch with rows at 1/4 and 4/4 of max length visits strictly
+    fewer blocks than the uniform max-length batch, and each row's count is
+    exactly the blocks intersecting its own causal run up to its length."""
+    sq = skv = 512
+    bq = bk = 128
+    lens = [128, 512]              # 1/4 and 4/4 of the padded length
+    q, k, v = _qkv(2, 2, sq, skv, 64, seed=13)
+    kw = dict(group=1, bq=bq, bk=bk, scale=0.125, causal=True,
+              src_dtype=jnp.float32, debug_visits=True)
+    qi, ki, _, _ = block_schedule(sq, skv, bq, bk, causal=True, window=None)
+
+    _, vis_ragged = flash_attention_pallas(
+        q, k, v, jnp.asarray(lens, jnp.int32), **kw)
+    _, vis_uniform = flash_attention_pallas(q, k, v, skv, **kw)
+    vis_ragged, vis_uniform = np.asarray(vis_ragged), np.asarray(vis_uniform)
+    assert vis_ragged.shape == vis_uniform.shape == (2, len(qi))
+
+    # exact per-row expectation: scheduled steps whose KV block starts
+    # before the row's own length do work, the rest early-out
+    for b, L in enumerate(lens):
+        want = (np.asarray(ki) * bk < L).astype(np.int32)
+        np.testing.assert_array_equal(vis_ragged[b], want)
+    # the full-length row is untouched by pruning; the short row visits
+    # ~1/4 of its causal schedule; the batch total strictly shrinks
+    np.testing.assert_array_equal(vis_ragged[1], vis_uniform[1])
+    assert vis_ragged[0].sum() < vis_uniform[0].sum()
+    assert vis_ragged.sum() < vis_uniform.sum()
+    # proportionality: per-row visit counts ordered like per-row lengths
+    assert vis_ragged[0].sum() == (np.asarray(ki) * bk < lens[0]).sum()
+
+
+def test_decode_debug_visits_per_row_pruning():
+    """Decode: each row's KV-block loop early-exits at its own length —
+    rows at 1/4 and 4/4 of the cache visit 1/4 and 4/4 of the blocks."""
+    lens = [128, 512]
+    bk = 128
+    q = jnp.asarray(rnd(2, 8, 64, seed=15))
+    k = jnp.asarray(rnd(2, 512, 64, seed=16))
+    v = jnp.asarray(rnd(2, 512, 64, seed=17))
+    kw = dict(bk=bk, scale=0.125, src_dtype=jnp.float32, debug_visits=True)
+    _, vis = decode_attention_pallas(q, k, v, jnp.asarray(lens, jnp.int32),
+                                     **kw)
+    _, vis_uni = decode_attention_pallas(q, k, v,
+                                         jnp.array([[512]], jnp.int32), **kw)
+    vis, vis_uni = np.asarray(vis), np.asarray(vis_uni)
+    np.testing.assert_array_equal(vis[0], [1, 0, 0, 0])   # 128/512 -> 1 block
+    np.testing.assert_array_equal(vis[1], [1, 1, 1, 1])   # full row
+    np.testing.assert_array_equal(vis_uni, np.ones((2, 4), np.int32))
+    assert vis.sum() < vis_uni.sum()
+
+
+# ---------------------------------------------------------------------------
+# no-retrace: differing length vectors share one compiled kernel
+# ---------------------------------------------------------------------------
+def test_ragged_no_retrace_across_length_vectors():
+    q, k, v = _qkv(2, 2, 256, 256, 64, seed=19)
+    traces = []
+
+    @jax.jit
+    def run_flash(kvl):
+        traces.append(None)
+        return flash_attention_pallas(q, k, v, kvl, group=1, bq=128, bk=128,
+                                      scale=0.125, causal=True,
+                                      src_dtype=jnp.float32)
+
+    for lens in ([256, 256], [100, 200], [1, 37]):
+        got = run_flash(jnp.asarray(lens, jnp.int32))
+        want = ref.flash_attention_ref(
+            q, k, v, kv_len=np.asarray(lens), bq=128, bk=128, group=1,
+            scale=0.125, causal=True, src_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert len(traces) == 1, "length vectors must not retrace"
+
+    qd = jnp.asarray(rnd(2, 8, 64, seed=20))
+    fn = jax.jit(lambda kvl: decode_attention_pallas(
+        qd, k, v, kvl, bk=128, scale=0.125, src_dtype=jnp.float32))
+    for lens in ([256, 256], [5, 129], [77, 1]):
+        got = fn(jnp.asarray(lens, jnp.int32))
+        want = ref.decode_attention_ref(qd, k, v, kv_len=np.asarray(lens),
+                                        bk=128, scale=0.125,
+                                        src_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert fn._cache_size() == 1
+
+
+def test_ops_wrappers_expand_per_sequence_lengths():
+    """kops.flash_attention / decode_attention take [B] per-SEQUENCE vectors
+    and expand them across heads (the model-facing contract)."""
+    b, h, hkv, s, d = 2, 4, 2, 128, 64
+    lens = np.asarray([40, 128])
+    q = jnp.asarray(rnd(b, h, s, d, seed=21))
+    k = jnp.asarray(rnd(b, hkv, s, d, seed=22))
+    v = jnp.asarray(rnd(b, hkv, s, d, seed=23))
+    got = kops.flash_attention(q, k, v, kv_len=jnp.asarray(lens, jnp.int32),
+                               causal=True, bq=128, bk=128, policy="fp32")
+    want = ref.flash_attention_ref(
+        q.reshape(b * h, s, d), k.reshape(b * hkv, s, d),
+        v.reshape(b * hkv, s, d), group=h // hkv, scale=d ** -0.5,
+        causal=True, kv_len=np.repeat(lens, h), bq=128, bk=128,
+        src_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got.reshape(b * h, s, d)),
+                                  np.asarray(want))
+
+    qd = jnp.asarray(rnd(b, h, 1, d, seed=24))
+    got = kops.decode_attention(qd, k, v,
+                                kv_len=jnp.asarray(lens, jnp.int32),
+                                policy="fp32", bk=128)
+    qr = jnp.pad(qd.reshape(b, hkv, h // hkv, d).reshape(b * hkv,
+                                                         h // hkv, d),
+                 ((0, 0), (0, 8 - h // hkv), (0, 0)))
+    want = ref.decode_attention_ref(qr, k.reshape(b * hkv, s, d),
+                                    v.reshape(b * hkv, s, d),
+                                    kv_len=np.repeat(lens, hkv), bk=128,
+                                    scale=d ** -0.5, src_dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(got.reshape(b * hkv, h // hkv, d)),
+        np.asarray(want[:, :h // hkv]))
+
+
+# ---------------------------------------------------------------------------
+# model-level: ragged row-independence + pallas-vs-dense per-row parity
+# ---------------------------------------------------------------------------
+LENS = [8, 20, 32]
+
+
+def _ragged_setup(arch, policy):
+    model = build_model(arch, policy=policy, reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (len(LENS), 32), 0,
+                              model.cfg.vocab)
+    return model, params, toks, jnp.asarray(LENS, jnp.int32)
+
+
+def test_model_ragged_prefill_row_independent():
+    """Each row of a ragged padded batch produces the logits it would
+    produce served ALONE (same padded width) — padding rows never leak."""
+    model, params, toks, lens = _ragged_setup("gemma2-9b", "tp_bf16")
+    fn = jax.jit(lambda p, t, l: model.prefill(p, t, max_len=40,
+                                               prompt_lens=l))
+    lg, _ = fn(params, toks, lens)
+    for i, L in enumerate(LENS):
+        lg_i, _ = fn(params, toks[i:i + 1], jnp.asarray([L], jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg[i]), np.asarray(lg_i[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch,policy", [
+    ("gemma2-9b", "tp_bf16"),        # window + softcap layers
+    ("gemma2-9b", "tp_fp16"),
+    ("gemma2-9b", "tp_bf16_kv8"),    # fp8 KV cache policy
+    ("minicpm3-4b", "tp_bf16"),      # MLA (latent cache) ragged
+])
+def test_model_ragged_pallas_vs_dense_per_row(arch, policy):
+    """Ragged prefill logits: pruned-grid Pallas vs dense chunked softmax,
+    per row, across precision policies (same math, different reduction
+    schedule -> tolerance comparison, like the uniform-batch test)."""
+    model, params, toks, lens = _ragged_setup(arch, policy)
+    lg_d, _ = jax.jit(lambda p, t, l: model.prefill(
+        p, t, max_len=40, prompt_lens=l))(params, toks, lens)
+    mp = model.with_cfg(prefill_backend="pallas")
+    lg_p, _ = jax.jit(lambda p, t, l: mp.prefill(
+        p, t, max_len=40, prompt_lens=l))(params, toks, lens)
+    for i in range(len(LENS)):
+        np.testing.assert_allclose(np.asarray(lg_p[i]), np.asarray(lg_d[i]),
+                                   rtol=5e-2, atol=1e-1)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_model_ragged_generate_matches_solo_rows(backend):
+    """Greedy ragged generation (dense and fused-kernel decode) equals each
+    row generated alone — the per-row write-index / kv_len plumbing."""
+    model, params, toks, lens = _ragged_setup("gemma2-9b", "tp_bf16")
+    model = model.with_cfg(decode_backend=backend)
+    fn = jax.jit(lambda p, t, l: model.generate(
+        p, t, gen_len=4, max_len=40, prompt_lens=l)[0])
+    gen = fn(params, toks, lens)
+    for i, L in enumerate(LENS):
+        g_i = fn(params, toks[i:i + 1], jnp.asarray([L], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(gen[i]), np.asarray(g_i[0]))
+
+
+# ---------------------------------------------------------------------------
+# EOS stop-token early-exit
+# ---------------------------------------------------------------------------
+def test_generate_eos_freezes_rows_without_perturbing_others():
+    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (3, 32), 0, model.cfg.vocab)
+    base = jax.jit(lambda p, t: model.generate(p, t, gen_len=5,
+                                               max_len=40)[0])
+    g0 = np.asarray(base(params, toks))
+    # choose a stop token that actually interrupts some row mid-generation
+    stop = int(g0[1, 2]) if g0[1, 2] != g0[1, 0] else int(g0[0, 0])
+    gs = np.asarray(jax.jit(lambda p, t: model.generate(
+        p, t, gen_len=5, max_len=40, stop_token=stop)[0])(params, toks))
+    for b in range(3):
+        hit = np.where(g0[b] == stop)[0]
+        cut = int(hit[0]) if len(hit) else 5
+        # identical up to and including the stop; frozen to stop after
+        np.testing.assert_array_equal(gs[b, :cut + 1], g0[b, :cut + 1])
+        assert (gs[b, cut:] == stop).all()
+
+
+def test_generate_eos_composes_with_ragged_and_sampling():
+    """stop_token + prompt_lens + sampling share one scan carry; frozen
+    rows stay frozen and runs are key-deterministic."""
+    model, params, toks, lens = _ragged_setup("gemma2-9b", "tp_bf16")
+    fn = jax.jit(lambda p, t, l, k: model.generate(
+        p, t, gen_len=6, max_len=48, prompt_lens=l, stop_token=3,
+        temperature=0.9, top_k=50, key=k)[0])
+    s1 = np.asarray(fn(params, toks, lens, jax.random.key(7)))
+    s2 = np.asarray(fn(params, toks, lens, jax.random.key(7)))
+    np.testing.assert_array_equal(s1, s2)
+    for b in range(s1.shape[0]):
+        hit = np.where(s1[b] == 3)[0]
+        if len(hit):
+            assert (s1[b, hit[0]:] == 3).all()
+
+
+def test_ragged_rejected_for_ssm_mixers():
+    """Recurrent mixers cannot mask pad tokens out of their state scan:
+    prompt_lens must refuse, not silently return padding-dependent rows."""
+    model = build_model("zamba2-1.2b", policy="tp_bf16", reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, model.cfg.vocab)
+    with pytest.raises(ValueError, match="ragged"):
+        model.prefill(params, toks, max_len=24,
+                      prompt_lens=jnp.asarray([8, 16], jnp.int32))
+    with pytest.raises(ValueError, match="ragged"):
+        model.generate(params, toks, gen_len=2, max_len=24,
+                       prompt_lens=jnp.asarray([8, 16], jnp.int32))
+
+
+def test_generate_no_stop_token_path_unchanged():
+    """stop_token=None must leave the greedy scan graph untouched —
+    bit-identical tokens to a run that never heard of EOS."""
+    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, model.cfg.vocab)
+    g0, _ = jax.jit(lambda p, t: model.generate(p, t, gen_len=4))(params, toks)
+    g1, _ = jax.jit(lambda p, t: model.generate(
+        p, t, gen_len=4, stop_token=None))(params, toks)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
