@@ -26,6 +26,15 @@ paying the max length).  On CPU the dense path only saves masked-out FLOPs
 the hardware still executes; the per-row grid pruning shows up on real
 accelerators, where the Pallas kernels skip each row's dead KV blocks.
 
+Paged A/B (``paged_decode_tok_s`` / ``paged_page_size``): the same scan
+generation served from the paged KV cache (shared page pool + block-table
+indirection, identity tables) against the contiguous baseline
+(``scan_tok_s``).  On CPU the dense decode path pays a per-step gather to
+rebuild the contiguous view — the column tracks that overhead honestly;
+on TPU the Pallas kernel dereferences the table in its index maps and the
+gather disappears.  Archs whose mixers cannot page (SSM/MLA/cross-attn)
+carry null paged columns, like the ragged ones.
+
 Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
 tracked PR-over-PR.
 
@@ -159,6 +168,18 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
         row["ragged_decode_tok_s"] = scan_tok_s(model, params, prompts,
                                                 prompt_lens, key="ragged_")
 
+    # -- paged KV A/B: block-table pool vs the contiguous cache -------------
+    page = max(8, prompt_len // 2)
+    row["paged_page_size"] = page
+    paged_why = model.cfg.paged_unsupported_reason()
+    if paged_why is not None:
+        row["paged_decode_tok_s"] = None
+        row["paged_unsupported"] = paged_why
+    else:
+        model_pg = model.with_cfg(paged_kv=True, page_size=page)
+        row["paged_decode_tok_s"] = scan_tok_s(model_pg, params, prompts,
+                                               key="paged_")
+
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
     return row
@@ -196,6 +217,8 @@ def main(argv=None):
               f"scan {row['scan_tok_s']:.1f} tok/s "
               f"({row['scan_speedup']:.2f}x) | "
               f"ragged {fmt(row['ragged_decode_tok_s'], 'tok/s')} | "
+              f"paged {fmt(row['paged_decode_tok_s'], 'tok/s')} "
+              f"(page={row['paged_page_size']}) | "
               f"scan+pallas(kv8) {row['scan_pallas_kv8_tok_s']:.1f} tok/s",
               flush=True)
 

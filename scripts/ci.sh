@@ -1,20 +1,60 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 tests + a smoke serving-decode benchmark.
+# CI entrypoint: tier-1 tests + docs checks + a smoke serving benchmark.
 #
 # Mirrors the tier-1 verify line in ROADMAP.md; the benchmark smoke run
 # exercises the scan-based generation path, the fused Pallas decode kernel,
-# and the dense-vs-pallas pruned-grid prefill A/B end-to-end without
-# writing BENCH_serve.json (use `python -m benchmarks.serve_decode` for the
-# full tracked run).
+# the dense-vs-pallas pruned-grid prefill A/B, and the paged-KV A/B
+# end-to-end without writing BENCH_serve.json (use
+# `python -m benchmarks.serve_decode` for the full tracked run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-# includes tests/test_ragged_attention.py — the ragged-batch kernel/model
-# suite runs in Pallas interpret mode on CPU like every other kernel test
+# includes tests/test_ragged_attention.py (per-row length plumbing) and
+# tests/test_paged_attention.py (block-table indirection: paged kernels
+# vs the paged oracles, allocator reuse-after-free, prefix sharing) —
+# all kernel tests run in Pallas interpret mode on CPU
 python -m pytest -x -q
+
+echo "== docs: link + module-coverage check =="
+# every public kernels/ and models/ module must be mentioned in the docs
+# surface (README.md + docs/), and every relative markdown link must
+# resolve — documentation that names dead files or skips live ones rots.
+python - <<'EOF'
+import os, re, sys
+
+DOCS = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir("docs") if f.endswith(".md"))
+text = {p: open(p).read() for p in DOCS}
+errs = []
+
+# relative links resolve (skip URLs and intra-page anchors)
+for p, t in text.items():
+    for m in re.finditer(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)", t):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(p), target))
+        if not os.path.exists(resolved):
+            errs.append(f"{p}: dead link -> {target}")
+
+# module coverage: public modules under kernels/ and models/ are named
+blob = "\n".join(text.values())
+for pkg in ("src/repro/kernels", "src/repro/models"):
+    for f in sorted(os.listdir(pkg)):
+        if not f.endswith(".py") or f.startswith("_"):
+            continue
+        mod = f"{os.path.basename(pkg)}/{f}"
+        if mod not in blob:
+            errs.append(f"docs never mention {mod}")
+
+if errs:
+    sys.exit("docs check FAILED:\n  " + "\n  ".join(errs))
+print(f"docs OK ({len(DOCS)} files, links + kernels/ + models/ coverage)")
+EOF
 
 echo "== serve decode smoke benchmark =="
 python -m benchmarks.serve_decode --quick
@@ -26,14 +66,24 @@ REQUIRED = [
     "prefill_dense_ms", "prefill_pallas_ms", "python_tok_s", "scan_tok_s",
     "scan_speedup", "scan_pallas_kv8_tok_s",
     "ragged_prefill_ms", "ragged_decode_tok_s", "ragged_lens",
+    "paged_decode_tok_s", "paged_page_size",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
        for c in REQUIRED if c not in row]
 if bad:
     sys.exit(f"BENCH_serve.json schema drift — missing columns: {bad}")
+for arch, row in report["archs"].items():
+    ps = row["paged_page_size"]
+    if not (isinstance(ps, int) and ps > 0):
+        sys.exit(f"BENCH_serve.json: {arch} paged_page_size must be a "
+                 f"positive int, got {ps!r}")
+    ts = row["paged_decode_tok_s"]
+    if ts is not None and not (isinstance(ts, (int, float)) and ts > 0):
+        sys.exit(f"BENCH_serve.json: {arch} paged_decode_tok_s must be "
+                 f"null or a positive number, got {ts!r}")
 print(f"schema OK ({len(report['archs'])} arch rows x "
-      f"{len(REQUIRED)} required columns)")
+      f"{len(REQUIRED)} required columns, paged fields validated)")
 EOF
 
 echo "CI OK"

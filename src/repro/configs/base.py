@@ -91,6 +91,11 @@ class ModelConfig:
     #                                "auto": pallas off-CPU, dense on CPU
     prefill_backend: str = "dense"  # "pallas": pruned-grid flash-attention
     #                                 kernel on prefill/train; "auto" as above
+    paged_kv: bool = False  # paged KV cache: shared page pool + per-row
+    #                         block table (attention-mixer archs only)
+    page_size: int = 64     # tokens per KV page (= the decode kernel's KV
+    #                         block when paged). 64 suits the CPU/interpret
+    #                         demos; set >= 128 on real TPUs (lane alignment)
     ce_dtype: str = "fp32"        # "fp16alt": bf16 CE logits (half HBM)
     embed_sharding: str = "vocab"  # "replicated": no embed collectives
     remat_policy: str = "full"    # full | dots (save matmul outputs) | none
@@ -111,6 +116,20 @@ class ModelConfig:
 
     def layer_list(self) -> Tuple[LayerSpec, ...]:
         return self.prefix + self.pattern * self.repeats + self.suffix
+
+    def paged_unsupported_reason(self) -> Optional[str]:
+        """Why ``paged_kv`` cannot serve this arch (None = it can).  The
+        single source of truth for the paged-support gate: Model.prefill
+        raises on it and benchmarks skip on it.  Recurrent mixers and the
+        MLA latent cache have no page axis yet, and the whisper
+        cross-attention cache stays contiguous by design."""
+        bad = sorted({s.mixer for s in self.layer_list()
+                      if s.mixer not in ("gqa", "shared_attn", "none")})
+        if bad:
+            return "/".join(bad)
+        if self.encoder is not None:
+            return "cross-attention caches"
+        return None
 
     def validate(self):
         assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name

@@ -44,6 +44,18 @@ tp_matmul's K-blocking.  The cost is streaming K twice (V's block index is
 pinned during the max pass, so V streams once) — for single-query decode
 the score pass is a thin [G, bk] strip, so the extra traffic is the K
 reload, not a 2x compute or bandwidth bill.
+
+Paged KV (``block_table``): instead of each row owning a contiguous
+``[Smax, D]`` cache strip, K/V live in a shared page pool ``[n_pages, bk,
+D]`` and a per-row table maps the row's logical block ``j`` to a physical
+page.  Only the BlockSpec index maps change — ``(h, j, 0)`` becomes
+``(bt[h, j], 0, 0)`` — dereferenced at DMA-issue time from the
+scalar-prefetch table, so the kernel body (and therefore the numerics) is
+IDENTICAL to the contiguous layout: paged output is bit-exact against the
+contiguous kernel and the ``bk``-blocked oracle whenever the gathered
+pages hold the same values.  Rows may alias pages (prefix sharing) and the
+table is a traced value (page churn never retraces).  ``kv_len`` keeps
+masking exactly as before, so partial tail pages need no special casing.
 """
 from __future__ import annotations
 
@@ -72,17 +84,20 @@ def softcap_scores(s, cap: float):
     return cap * (1.0 - 2.0 / (e + 1.0))
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest, nk: int,
-                   bk: int, scale: float, window: Optional[int],
+def _decode_kernel(len_ref, *args, nk: int, bk: int, paged: bool,
+                   scale: float, window: Optional[int],
                    softcap: Optional[float], kv_fmt, q_fmt, src_dtype,
                    out_dtype, debug_visits: bool):
+    if paged:
+        args = args[1:]            # bt_ref: consumed by the index maps only
+    q_ref, k_ref, v_ref, o_ref, *rest = args
     if debug_visits:
         visits_ref, m_ref, acc_ref, l_ref = rest
     else:
         m_ref, acc_ref, l_ref = rest
     ip = pl.program_id(1)          # 0 = max pass, 1 = accumulate pass
     j = pl.program_id(2)           # kv block
-    kvl = len_ref[0, 0]            # this row's own live length
+    kvl = len_ref[pl.program_id(0)]   # this row's own live length
 
     @pl.when((ip == 0) & (j == 0))
     def _init_max():
@@ -147,7 +162,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *rest, nk: int,
 @functools.partial(jax.jit, static_argnames=(
     "bk", "scale", "window", "softcap", "kv_fmt_name", "q_fmt_name",
     "src_dtype", "out_dtype", "interpret", "debug_visits"))
-def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
+def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
+                            bk: int = 128,
                             scale: float = 1.0,
                             window: Optional[int] = None,
                             softcap: Optional[float] = None,
@@ -164,6 +180,14 @@ def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
     serving batches; ops.py expands per-sequence [B] lengths by the KV-head
     count).
 
+    Paged layout (``block_table`` [BHkv, nk] int32, also traced): k/v are
+    instead shared page POOLS [n_pages, bk, D] and row ``h``'s logical
+    block ``j`` lives in physical page ``block_table[h, j]`` — only the
+    BlockSpec index maps change, the kernel body (hence the numerics) is
+    identical, and the logical cache capacity is ``nk * bk``.  ops.py
+    expands a per-sequence [B, max_pages] table to these flat per-head
+    page ids.
+
     Smax % bk == 0 (the ops.py wrapper pads; padded slots have
     ``k_idx >= kv_len`` and are masked).  ``kv_fmt_name`` / ``q_fmt_name``
     request the in-kernel RNE grid snap for f32-container (emulated narrow)
@@ -172,47 +196,68 @@ def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 128,
     flagging, per row, which KV blocks did work (early-outs write 0).
     """
     bh, g, d = q.shape
-    bkv, smax, dk = k.shape
-    assert d == dk and bh == bkv, (q.shape, k.shape)
-    assert smax % bk == 0, (k.shape, bk)
-    nk = smax // bk
-    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1, 1))
+    paged = block_table is not None
+    if paged:
+        n_pages, page, dk = k.shape
+        assert page == bk, (k.shape, bk)
+        assert block_table.shape[0] == bh, (block_table.shape, bh)
+        nk = block_table.shape[1]
+    else:
+        bkv, smax, dk = k.shape
+        assert bh == bkv, (q.shape, k.shape)
+        assert smax % bk == 0, (k.shape, bk)
+        nk = smax // bk
+    assert d == dk, (q.shape, k.shape)
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
     assert kvl.shape[0] in (1, bh), (kvl.shape, bh)
-    kvl = jnp.broadcast_to(kvl, (bh, 1))
+    kvl = jnp.broadcast_to(kvl, (bh,))
 
     kern = functools.partial(
-        _decode_kernel, nk=nk, bk=bk, scale=scale, window=window,
-        softcap=softcap,
+        _decode_kernel, nk=nk, bk=bk, paged=paged, scale=scale,
+        window=window, softcap=softcap,
         kv_fmt=get_format(kv_fmt_name) if kv_fmt_name else None,
         q_fmt=get_format(q_fmt_name) if q_fmt_name else None,
         src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+    # scalar-prefetch args (kvl, and the page table when paged) are SMEM
+    # tables the index maps may read at DMA-issue time; index maps take
+    # (grid ids..., *scalar refs).
+    if paged:
+        scalars = (kvl, jnp.asarray(block_table, jnp.int32))
+        k_map = lambda h, p, j, kvl, bt: (bt[h, j], 0, 0)
+        # V is only read in the accumulate pass (p == 1): pin its page to
+        # the row's first during the max pass so consecutive grid steps hit
+        # the same tile and Mosaic skips the copy — V streams from HBM
+        # once, K twice (the cost stated in the module docstring).
+        v_map = lambda h, p, j, kvl, bt: (bt[h, j * p], 0, 0)
+        fixed = lambda h, p, j, kvl, bt: (h, 0, 0)
+        vis = lambda h, p, j, kvl, bt: (h, j)
+    else:
+        scalars = (kvl,)
+        k_map = lambda h, p, j, kvl: (h, j, 0)
+        v_map = lambda h, p, j, kvl: (h, j * p, 0)   # pinned as above
+        fixed = lambda h, p, j, kvl: (h, 0, 0)
+        vis = lambda h, p, j, kvl: (h, j)
     out_shape = [jax.ShapeDtypeStruct((bh, g, d), out_dtype)]
-    out_specs = [pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0))]
+    out_specs = [pl.BlockSpec((1, g, d), fixed)]
     if debug_visits:
         # both passes write the same (h, j) cell with the same value
         out_shape.append(jax.ShapeDtypeStruct((bh, nk), jnp.int32))
-        out_specs.append(pl.BlockSpec((1, 1), lambda h, p, j: (h, j)))
-    out = pl.pallas_call(
-        kern,
+        out_specs.append(pl.BlockSpec((1, 1), vis))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
         grid=(bh, 2, nk),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda h, p, j: (h, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, g, d), lambda h, p, j: (h, 0, 0)),
-            pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j, 0)),
-            # V is only read in the accumulate pass (p == 1): pin its block
-            # index to 0 during the max pass so consecutive grid steps hit
-            # the same tile and Mosaic skips the copy — V streams from HBM
-            # once, K twice (the cost stated in the module docstring).
-            pl.BlockSpec((1, bk, d), lambda h, p, j: (h, j * p, 0)),
+            pl.BlockSpec((1, g, d), fixed),
+            pl.BlockSpec((1, bk, d), k_map),
+            pl.BlockSpec((1, bk, d), v_map),
         ],
         out_specs=out_specs,
-        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((g, 128), jnp.float32),   # running max
             pltpu.VMEM((g, d), jnp.float32),     # output accumulator
             pltpu.VMEM((g, 128), jnp.float32),   # softmax denominator
-        ],
-        interpret=interpret,
-    )(kvl, q, k, v)
+        ])
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(*scalars, q, k, v)
     return tuple(out) if debug_visits else out[0]

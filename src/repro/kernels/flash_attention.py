@@ -26,6 +26,15 @@ length: a short row in a ragged batch does work proportional to its own
 and proves it).  The length vector is a traced value — differing ragged
 batches share one compiled kernel, exactly like the scalar case.
 
+Paged KV (``block_table``): K/V may arrive as shared page pools instead of
+per-row contiguous strips — a per-row table in the scalar-prefetch set maps
+each logical KV block to a physical page, and ONLY the K/V BlockSpec index
+maps change (``(h // g, ki[s], 0)`` becomes ``(bt[h // g, ki[s]], 0, 0)``).
+The kernel body is untouched, so paged output is bit-exact against the
+contiguous kernel on the same values; tables are traced (page churn and
+prefix re-sharing never retrace).  This is the continued-prefill read path
+against a paged cache (decoding's twin lives in decode_attention.py).
+
 Features: GQA head mapping, causal masking, sliding-window (local) masking,
 attention-logit soft-capping (gemma-2/3), V head dim != QK head dim (MLA
 expanded prefill), optional in-kernel RNE operand snap for emulate-mode
@@ -94,11 +103,14 @@ def block_schedule(sq: int, skv: int, bq: int, bk: int, *, causal: bool,
     return mk(qi), mk(ki), mk(first), mk(last)
 
 
-def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref,
-                 q_ref, k_ref, v_ref, o_ref, *rest, bq: int, bk: int,
-                 scale: float, causal: bool, window: Optional[int],
-                 softcap: Optional[float], q_offset: int, src_fmt,
-                 src_dtype, out_dtype, debug_visits: bool):
+def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref, *args, bq: int,
+                 bk: int, paged: bool, scale: float, causal: bool,
+                 window: Optional[int], softcap: Optional[float],
+                 q_offset: int, src_fmt, src_dtype, out_dtype,
+                 debug_visits: bool):
+    if paged:
+        args = args[1:]            # bt_ref: consumed by the index maps only
+    q_ref, k_ref, v_ref, o_ref, *rest = args
     if debug_visits:
         visits_ref, acc_ref, m_ref, l_ref = rest
     else:
@@ -168,7 +180,8 @@ def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref,
 @functools.partial(jax.jit, static_argnames=(
     "group", "bq", "bk", "scale", "causal", "window", "softcap", "q_offset",
     "src_fmt_name", "src_dtype", "out_dtype", "interpret", "debug_visits"))
-def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
+def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
+                           group: int = 1,
                            bq: int = 128, bk: int = 128, scale: float = 1.0,
                            causal: bool = True,
                            window: Optional[int] = None,
@@ -180,6 +193,15 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
                            interpret: bool = True,
                            debug_visits: bool = False):
     """q: [BH, Sq, D]; k: [BKV, Skv, D]; v: [BKV, Skv, Dv]; BH = BKV * group.
+
+    Paged layout (``block_table`` [BKV, nk] int32, a traced value): k/v are
+    instead shared page POOLS ([n_pages, bk, D] / [n_pages, bk, Dv]) and kv
+    row ``hk``'s logical KV block ``ik`` is physical page
+    ``block_table[hk, ik]``.  Only the K/V BlockSpec index maps change
+    (``(h // g, ki[s], 0)`` -> ``(bt[h // g, ki[s]], 0, 0)``), so numerics
+    are identical to the contiguous layout; the logical KV length is
+    ``nk * bk`` (chunked / continued prefill against an already-paged
+    cache, e.g. extending a shared prompt prefix).
 
     Sq % bq == 0 and Skv % bk == 0 (ops.py pads).  ``kv_len`` masks keys at
     or past the live length — it is a DYNAMIC input (python int, 0-d array,
@@ -196,10 +218,21 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
     per-sequence energy-proportionality proof).
     """
     bh, sq, d = q.shape
-    bkv, skv, dk = k.shape
-    _, skv_v, dv = v.shape
-    assert d == dk and skv == skv_v and bh == bkv * group, \
-        (q.shape, k.shape, v.shape, group)
+    paged = block_table is not None
+    if paged:
+        n_pages, page, dk = k.shape
+        assert page == bk and v.shape[:2] == (n_pages, page), \
+            (k.shape, v.shape, bk)
+        assert block_table.shape[0] * group == bh, (block_table.shape, bh,
+                                                    group)
+        skv = block_table.shape[1] * bk       # logical KV length
+        dv = v.shape[-1]
+    else:
+        bkv, skv, dk = k.shape
+        _, skv_v, dv = v.shape
+        assert skv == skv_v and bh == bkv * group, \
+            (q.shape, k.shape, v.shape, group)
+    assert d == dk, (q.shape, k.shape)
     assert sq % bq == 0 and skv % bk == 0, (q.shape, k.shape, bq, bk)
     kvl = jnp.reshape(jnp.asarray(skv if kv_len is None else kv_len,
                                   jnp.int32), (-1,))
@@ -210,29 +243,38 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
     n_steps = len(qi)
 
     kern = functools.partial(
-        _attn_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+        _attn_kernel, bq=bq, bk=bk, paged=paged, scale=scale, causal=causal,
         window=window, softcap=softcap, q_offset=q_offset,
         src_fmt=get_format(src_fmt_name) if src_fmt_name else None,
         src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+    # index maps see (grid ids..., *scalar-prefetch refs); the paged form
+    # appends the page table and dereferences it for the K/V block index
+    if paged:
+        scalars = (kvl, jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(ff),
+                   jnp.asarray(lf), jnp.asarray(block_table, jnp.int32))
+        q_map = lambda h, s, kvl, qi, ki, ff, lf, bt: (h, qi[s], 0)
+        kv_map = lambda h, s, kvl, qi, ki, ff, lf, bt, g=group: \
+            (bt[h // g, ki[s]], 0, 0)
+        vis_map = lambda h, s, kvl, qi, ki, ff, lf, bt: (h, s)
+    else:
+        scalars = (kvl, jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(ff),
+                   jnp.asarray(lf))
+        q_map = lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0)
+        kv_map = lambda h, s, kvl, qi, ki, ff, lf, g=group: \
+            (h // g, ki[s], 0)
+        vis_map = lambda h, s, kvl, qi, ki, ff, lf: (h, s)
     out_shape = [jax.ShapeDtypeStruct((bh, sq, dv), out_dtype)]
-    out_specs = [pl.BlockSpec((1, bq, dv),
-                              lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0))]
+    out_specs = [pl.BlockSpec((1, bq, dv), q_map)]
     if debug_visits:
         out_shape.append(jax.ShapeDtypeStruct((bh, n_steps), jnp.int32))
-        out_specs.append(pl.BlockSpec(
-            (1, 1), lambda h, s, kvl, qi, ki, ff, lf: (h, s)))
+        out_specs.append(pl.BlockSpec((1, 1), vis_map))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
+        num_scalar_prefetch=len(scalars),
         grid=(bh, n_steps),
         in_specs=[
-            pl.BlockSpec((1, bq, d),
-                         lambda h, s, kvl, qi, ki, ff, lf: (h, qi[s], 0)),
-            pl.BlockSpec((1, bk, d),
-                         lambda h, s, kvl, qi, ki, ff, lf, g=group:
-                         (h // g, ki[s], 0)),
-            pl.BlockSpec((1, bk, dv),
-                         lambda h, s, kvl, qi, ki, ff, lf, g=group:
-                         (h // g, ki[s], 0)),
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, dv), kv_map),
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -242,6 +284,5 @@ def flash_attention_pallas(q, k, v, kv_len=None, *, group: int = 1,
         ])
     out = pl.pallas_call(
         kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
-    )(kvl, jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(ff),
-      jnp.asarray(lf), q, k, v)
+    )(*scalars, q, k, v)
     return tuple(out) if debug_visits else out[0]

@@ -110,6 +110,18 @@ def expand_kv_lens(kv_len, batch: int, heads: int, default):
     return jnp.repeat(kvl, heads)
 
 
+def expand_block_table(table, heads: int):
+    """Expand a per-sequence page table [B, max_pages] to flat per-head
+    page ids [B * heads, max_pages] — the table twin of ``expand_kv_lens``.
+    The model-level pool [n_pages, Hkv, page, D] reshapes (zero-copy) to
+    the kernels' flat pool [n_pages * Hkv, page, D], where page ``p`` of
+    head ``hk`` sits at flat slot ``p * Hkv + hk``."""
+    b, mp = table.shape
+    flat = (jnp.asarray(table, jnp.int32)[:, None, :] * heads
+            + jnp.arange(heads, dtype=jnp.int32)[None, :, None])
+    return flat.reshape(b * heads, mp)
+
+
 def resolve_backend(backend: str) -> str:
     """Shared decode/prefill attention-backend resolution.
 
@@ -127,6 +139,7 @@ def resolve_backend(backend: str) -> str:
 
 
 def flash_attention(q, k, v, *, kv_len=None, policy=None,
+                    block_table=None,
                     scale: Optional[float] = None,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None, q_offset: int = 0,
@@ -145,6 +158,14 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
     ``q_offset`` shifts query positions (prefill at a nonzero cache write
     index).  V may have a different head dim than Q/K (MLA expanded form).
 
+    Paged cache (``block_table`` [B, max_pages] int32, traced): k/v are
+    the shared page pools [n_pages, Hkv, page, D(v)] of
+    ``models.paged.PagedKVCache`` — continued/chunked prefill attending
+    against an already-paged cache.  As in ``decode_attention`` the pool
+    reshapes zero-copy to the kernels' flat layout, the table expands per
+    head, and ``bk`` is pinned to the page size (autotuned ``bq`` still
+    applies).
+
     ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
     accelerators — same hot-path contract as ``decode_attention``.
     """
@@ -159,19 +180,34 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
         src_dt = jnp.float32
         src_fmt_name = mp.src_fmt.name if mp.src_fmt.name != "fp32" else None
     b, h, sq, d = q.shape
-    _, hkv, skv, _ = k.shape
-    dv = v.shape[-1]
+    if block_table is not None:
+        n_pages, hkv, page, _ = k.shape
+        skv = block_table.shape[1] * page
+        dv = v.shape[-1]
+    else:
+        _, hkv, skv, _ = k.shape
+        dv = v.shape[-1]
     group = h // hkv
     scale = scale if scale is not None else d ** -0.5
     if bq is None or bk is None:
         tq, tk = autotune.best_block("attn", (sq, skv, d), q.dtype)
         bq, bk = (bq or tq), (bk or tk)
     qf = q.reshape(b * h, sq, d)
+    bq_ = min(bq, max(8, sq))
+    qf, _ = _pad_to(qf, (bq_,), (1,))
+    if block_table is not None:
+        o = flash_attention_pallas(
+            qf, k.reshape(n_pages * hkv, page, d),
+            v.reshape(n_pages * hkv, page, dv),
+            expand_kv_lens(kv_len, b, h, skv),
+            expand_block_table(block_table, hkv), group=group,
+            bq=bq_, bk=page, scale=scale, causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset, src_fmt_name=src_fmt_name,
+            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+        return o[:, :sq].reshape(b, h, sq, dv)
     kf = k.reshape(b * hkv, skv, d)
     vf = v.reshape(b * hkv, skv, dv)
-    bq_ = min(bq, max(8, sq))
     bk_ = min(bk, max(128, skv))
-    qf, _ = _pad_to(qf, (bq_,), (1,))
     kf, _ = _pad_to(kf, (bk_,), (1,))
     vf, _ = _pad_to(vf, (bk_,), (1,))
     o = flash_attention_pallas(
@@ -183,6 +219,7 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
 
 
 def decode_attention(q, k, v, *, kv_len, policy=None,
+                     block_table=None,
                      scale: Optional[float] = None,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
@@ -197,6 +234,16 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     KV-block loop early-exits at its own length in-kernel).  Either way it
     is a dynamic kernel input, so per-step calls under ``lax.scan`` never
     retrace.  Returns [B, H, 1, D] f32.
+
+    Paged cache (``block_table`` [B, max_pages] int32, traced): k/v are
+    instead the shared page pools [n_pages, Hkv, page, D] of
+    ``models.paged.PagedKVCache``.  The pool reshapes zero-copy to the
+    kernel's flat [n_pages * Hkv, page, D] layout, the table expands to
+    flat per-head page ids (``expand_block_table``), and the kernel's
+    BlockSpec index maps dereference them — no gather ever materializes
+    the contiguous view.  The kernel block size is pinned to the page size
+    (the page IS the block), so the autotuned ``bk`` is bypassed; choose
+    ``cfg.page_size`` accordingly (>= 128 for TPU lane alignment).
 
     ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
     accelerators — this wrapper sits on the serving hot path (behind
@@ -216,7 +263,11 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
         kv_fmt_name = policy.kv_fmt.name if policy.kv_fmt is not None else None
         q_fmt_name = mp.src_fmt.name if mp.src_fmt.name != "fp32" else None
     b, h, sq, d = q.shape
-    _, hkv, smax, _ = k.shape
+    if block_table is not None:
+        n_pages, hkv, page, _ = k.shape
+        smax = block_table.shape[1] * page
+    else:
+        _, hkv, smax, _ = k.shape
     assert sq == 1, q.shape
     group = h // hkv
     scale = scale if scale is not None else d ** -0.5
@@ -225,6 +276,16 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     g_pad = max(8, group)                    # sublane-align the query strip
     if g_pad != group:
         qf = jnp.pad(qf, ((0, 0), (0, g_pad - group), (0, 0)))
+    kvl = expand_kv_lens(kv_len, b, hkv, smax).reshape(b * hkv, 1)
+    if block_table is not None:
+        kf = k.reshape(n_pages * hkv, page, d)
+        vf = v.reshape(n_pages * hkv, page, d)
+        btf = expand_block_table(block_table, hkv)
+        o = decode_attention_pallas(
+            qf, kf, vf, kvl, btf, bk=page, scale=scale, window=window,
+            softcap=softcap, kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name,
+            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+        return o[:, :group].reshape(b, hkv, group, d).reshape(b, h, 1, d)
     kf = k.reshape(b * hkv, smax, d)
     vf = v.reshape(b * hkv, smax, d)
     if bk is None:
@@ -232,7 +293,6 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     bk = min(bk, max(128, smax))
     kf, _ = _pad_to(kf, (bk,), (1,))
     vf, _ = _pad_to(vf, (bk,), (1,))
-    kvl = expand_kv_lens(kv_len, b, hkv, smax).reshape(b * hkv, 1)
     o = decode_attention_pallas(
         qf, kf, vf, kvl, bk=bk, scale=scale, window=window, softcap=softcap,
         kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name, src_dtype=src_dt,

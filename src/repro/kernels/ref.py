@@ -301,6 +301,51 @@ def decode_attention_ref(q, k, v, *, kv_len, scale: float = 1.0,
     return jnp.stack(out)
 
 
+def paged_gather(pool, table):
+    """Materialize a paged KV layout back into per-row contiguous strips:
+    ``pool`` [n_pages, page, D] gathered through ``table`` [rows, nk] ->
+    [rows, nk * page, D].  Pure data movement (no arithmetic), so oracles
+    built on it are exact references for the paged kernels: the kernel
+    dereferences the table at DMA time, the oracle dereferences it up
+    front, and both then run the identical blocked walk."""
+    rows, nk = table.shape
+    n_pages, page, d = pool.shape
+    g = jnp.take(pool, jnp.asarray(table).reshape(-1), axis=0)
+    return g.reshape(rows, nk * page, d)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, block_table, *, kv_len,
+                               **kw):
+    """Paged decode-attention oracle: gather pages to the contiguous view,
+    then run ``decode_attention_ref`` with ``bk`` pinned to the page size
+    (the paged kernel's block IS the page, so the blocked accumulation
+    schedule — part of the numerical contract — matches and the result is
+    bit-exact against ``decode_attention_pallas(..., block_table=)``,
+    partial tail pages included via the usual ``kv_len`` masking).
+
+    q: [BHkv, G, D]; k_pool/v_pool: [n_pages, page, D];
+    block_table: [BHkv, nk] flat per-head page ids."""
+    page = k_pool.shape[1]
+    return decode_attention_ref(q, paged_gather(k_pool, block_table),
+                                paged_gather(v_pool, block_table),
+                                kv_len=kv_len, bk=page, **kw)
+
+
+def flash_attention_paged_ref(q, k_pool, v_pool, block_table, *, bq,
+                              kv_len=None, **kw):
+    """Paged flash-attention oracle: gather, then the blocked online-softmax
+    walk with ``bk`` pinned to the page size — bit-exact against
+    ``flash_attention_pallas(..., block_table=)`` (same pruned schedule,
+    same per-block update ops, same operand values).
+
+    q: [BH, Sq, D]; k_pool: [n_pages, page, D]; v_pool: [n_pages, page,
+    Dv]; block_table: [BKV, nk] per-KV-row page ids (BH = BKV * group)."""
+    page = k_pool.shape[1]
+    return flash_attention_ref(q, paged_gather(k_pool, block_table),
+                               paged_gather(v_pool, block_table),
+                               kv_len=kv_len, bq=bq, bk=page, **kw)
+
+
 def dotp_ex_ref(a, b, *, src_dtype=jnp.float16):
     """Expanding dot product oracle (f32 accumulate of exact products)."""
     prod = (a.astype(src_dtype).astype(jnp.float32)

@@ -14,8 +14,19 @@ there instead of paying the longest prompt's grid for every row.
 token freezes (its outputs stay the stop token, its live cache stops
 growing) while the rest of the batch keeps decoding.
 
+``--paged`` serves from a paged KV cache (``--page-size`` tokens per page):
+a shared page pool + per-row block tables instead of contiguous per-row
+buffers.  When the batch is uniform, the launcher also runs the
+PREFIX-SHARING demo: every row's prompt shares a common first half, the
+common pages are allocated ONCE and aliased into every row's table
+(``models.paged.build_tables``), and the launcher verifies that prefill
+logits and generated tokens are bit-identical to the unshared identity
+layout while the pool holds fewer live pages.  With ``--ragged`` the
+identity table is used (per-row lengths + paged pool, no sharing demo).
+
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 ``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
+``python -m repro.launch.serve --arch gemma2-9b --paged --page-size 16``
 """
 from __future__ import annotations
 
@@ -60,12 +71,20 @@ def main(argv=None):
     ap.add_argument("--stop-token", type=int, default=None,
                     help="per-row EOS early-exit: rows freeze after "
                          "emitting this token id (scan loop only)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: shared page pool + per-row block "
+                         "tables; uniform batches also run the "
+                         "prefix-sharing parity demo (scan loop only)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (the paged decode kernel's KV "
+                         "block; use >= 128 on real TPUs)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args(argv)
-    if (args.ragged or args.stop_token is not None) and args.loop != "scan":
-        ap.error("--ragged / --stop-token require --loop scan (the "
-                 "per-step python loop is the uniform-batch seed path)")
+    if ((args.ragged or args.paged or args.stop_token is not None)
+            and args.loop != "scan"):
+        ap.error("--ragged / --paged / --stop-token require --loop scan "
+                 "(the per-step python loop is the uniform-batch seed path)")
 
     import jax
     import jax.numpy as jnp
@@ -74,6 +93,8 @@ def main(argv=None):
     model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
     model = model.with_cfg(decode_backend=args.decode_backend,
                            prefill_backend=args.prefill_backend)
+    if args.paged:
+        model = model.with_cfg(paged_kv=True, page_size=args.page_size)
     params = model.init(jax.random.key(0))
     max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(jax.random.key(1),
@@ -88,16 +109,56 @@ def main(argv=None):
         prompts = jnp.where(live, prompts, 0)
         print(f"ragged pack: lengths {lens} padded to {args.prompt_len}")
 
+    page_table, n_pages = None, None
+    if args.paged and not args.ragged:
+        # prefix-sharing demo: all rows share the first half of the prompt
+        # (causal attention => identical K/V at shared positions), so every
+        # page FULLY covered by the common prefix is stored once
+        from ..models.paged import (PageAllocator, build_tables,
+                                    identity_block_table, num_pages)
+        common = args.prompt_len // 2
+        prompts = jnp.concatenate(
+            [jnp.broadcast_to(prompts[:1, :common],
+                              (args.batch, common)), prompts[:, common:]], 1)
+        mp = num_pages(max_len, args.page_size)
+        n_pages = args.batch * mp
+        alloc = PageAllocator(n_pages)
+        shared = build_tables(alloc, args.batch, mp,
+                              shared_pages=common // args.page_size)
+        page_table = jnp.asarray(shared)
+        print(f"paged pool: page={args.page_size}, "
+              f"{alloc.n_live}/{n_pages} pages live with the shared "
+              f"prefix ({common} common prompt tokens) vs {n_pages} "
+              f"unshared")
+        # parity gate: shared-prefix serving must be BIT-identical to the
+        # unshared identity layout (prefill logits + generated tokens)
+        par = jax.jit(lambda p, t, tb: model.generate(
+            p, t, gen_len=args.gen, max_len=max_len, page_table=tb,
+            n_pages=n_pages, return_logits=True))
+        g_s, lg_s = par(params, prompts, page_table)
+        g_u, lg_u = par(params, prompts,
+                        jnp.asarray(identity_block_table(args.batch, mp)))
+        d_tok = int(jnp.sum(g_s != g_u))
+        d_lg = float(jnp.max(jnp.abs(lg_s - lg_u)))
+        print(f"prefix-sharing parity: max |dlogits| = {d_lg:.1e}, "
+              f"token mismatches = {d_tok} (both must be 0)")
+        assert d_tok == 0 and d_lg == 0.0, "prefix sharing changed outputs"
+    elif args.paged:
+        print(f"paged pool: page={args.page_size}, identity table "
+              f"(ragged rows keep private page runs)")
+
     if args.loop == "scan":
         key = jax.random.key(args.seed)
-        gen_fn = jax.jit(lambda p, t, pl_: model.generate(
+        gen_fn = jax.jit(lambda p, t, pl_, tb: model.generate(
             p, t, gen_len=args.gen, max_len=max_len,
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, key=key, prompt_lens=pl_,
-            stop_token=args.stop_token)[0])
-        gen = jax.block_until_ready(gen_fn(params, prompts, prompt_lens))
+            stop_token=args.stop_token, page_table=tb, n_pages=n_pages)[0])
+        gen = jax.block_until_ready(
+            gen_fn(params, prompts, prompt_lens, page_table))
         t0 = time.time()
-        gen = jax.block_until_ready(gen_fn(params, prompts, prompt_lens))
+        gen = jax.block_until_ready(
+            gen_fn(params, prompts, prompt_lens, page_table))
         dt = time.time() - t0
         n_tok = args.batch * args.gen
         if args.stop_token is not None:
@@ -126,7 +187,9 @@ def main(argv=None):
         jax.block_until_ready(tok)
         dt = time.time() - t0
         n_tok = args.batch * (args.gen - 1)
-    print(f"{args.arch} [{args.loop}/{args.decode_backend}]: "
+    tag = f"{args.loop}/{args.decode_backend}" + \
+        (f"/paged{args.page_size}" if args.paged else "")
+    print(f"{args.arch} [{tag}]: "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
 
 

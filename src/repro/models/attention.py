@@ -26,6 +26,7 @@ from ..core import ops as tp
 from ..core.formats import get_format
 from .layers import (batch_axes, bspec, apply_rope, dense_init,
                      residual_spec, rmsnorm, shard, softcap)
+from .paged import PagedKVCache, gather_paged_kv, paged_update_rows
 
 NEG_INF = -1e30
 
@@ -230,6 +231,13 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     length; in decode it overrides the default ``cache_pos + s`` (EOS-frozen
     rows keep a fixed live length).  ``cache_pos`` may likewise be a [B]
     vector: each row's K/V is then written at its OWN cache index.
+
+    Paged cache: ``cache`` may be a ``paged.PagedKVCache`` (shared page
+    pools + per-row block table) instead of a contiguous ``KVCache``.
+    Writes scatter through the table (``paged_update_rows``); decode reads
+    dereference it in the Pallas kernel's index maps (or gather, on the
+    dense fallback).  Prefill attention itself is unchanged — it attends
+    over the freshly computed k/v, so only the write path goes paged.
     """
     b, s, d = x.shape
     q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
@@ -268,9 +276,20 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                                      window=None, cap=attn_softcap,
                                      q_offset=0, chunk=chunk)
     elif cache is not None:
-        ck = update_cache_rows(cache.k, k, cache_pos, axis=2)
-        cv = update_cache_rows(cache.v, v, cache_pos, axis=2)
-        new_cache = KVCache(ck, cv)
+        paged = isinstance(cache, PagedKVCache)
+        if paged:
+            # paged cache: K/V scatter through the block table into the
+            # shared page pool instead of a per-row contiguous strip
+            new_cache = PagedKVCache(
+                paged_update_rows(cache.k_pool, cache.block_table, k,
+                                  cache_pos),
+                paged_update_rows(cache.v_pool, cache.block_table, v,
+                                  cache_pos),
+                cache.block_table)
+        else:
+            ck = update_cache_rows(cache.k, k, cache_pos, axis=2)
+            cv = update_cache_rows(cache.v, v, cache_pos, axis=2)
+            new_cache = KVCache(ck, cv)
         if s > 1:
             # prefill: the prompt itself is the entire live cache content —
             # attend over the *current* k/v, not the cache buffer (kv_len
@@ -287,9 +306,15 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
         else:
             if kv_len is None:
                 kv_len = cache_pos + s     # [B] vector when cache_pos is one
-            out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
-                                 window=window, cap=attn_softcap,
-                                 backend=decode_backend)
+            if paged:
+                out = _decode_attend_paged(q, new_cache, policy,
+                                           kv_len=kv_len, window=window,
+                                           cap=attn_softcap,
+                                           backend=decode_backend)
+            else:
+                out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
+                                     window=window, cap=attn_softcap,
+                                     backend=decode_backend)
     elif _use_pallas_prefill(prefill_backend):
         out = _flash_attend(q, k, v, policy, causal=causal, window=window,
                             cap=attn_softcap, q_offset=0, kv_len=kv_len)
@@ -343,6 +368,31 @@ def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,
     p = p * jnp.any(mask, axis=-1).astype(p.dtype)[:, None, None, None]
     out = tp.tp_einsum("bhqt,bhtd->bhqd", p, cv, policy, out_fmt="fp32")
     return out.reshape(b, h, s, dh)
+
+
+def _decode_attend_paged(q, cache: PagedKVCache, policy, *, kv_len, window,
+                         cap, backend: str = "dense"):
+    """Paged decode attention: q [B,H,1,Dh] against the page pools of
+    ``cache`` through its block table.
+
+    ``backend="pallas"`` keeps the indirection all the way down — the
+    fused decode kernel's BlockSpec index maps dereference the table at
+    DMA time, and no contiguous view is ever materialized (THE paged win:
+    HBM traffic per row is its own page run).  The dense fallback gathers
+    pages back into the contiguous layout first (pure data movement, so it
+    is bit-identical to contiguous dense attention on the same values) —
+    the CPU correctness path, not a serving path."""
+    if backend != "dense":
+        from ..kernels import ops as kops
+        if kops.resolve_backend(backend) == "pallas":
+            return kops.decode_attention(
+                q, cache.k_pool, cache.v_pool, kv_len=kv_len,
+                block_table=cache.block_table, policy=policy, window=window,
+                softcap=cap)
+    return _decode_attend(q, gather_paged_kv(cache.k_pool, cache.block_table),
+                          gather_paged_kv(cache.v_pool, cache.block_table),
+                          policy, kv_len=kv_len, window=window, cap=cap,
+                          backend="dense")
 
 
 def init_kv_cache(batch, n_kv_heads, max_len, head_dim, dtype):

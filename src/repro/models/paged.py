@@ -1,0 +1,186 @@
+"""Paged KV cache: a shared block pool + per-sequence block tables.
+
+The memory-side analogue of the repo's compute-proportionality story: the
+ragged-serving PRs made attention *work* scale with each sequence's own
+length, but every sequence still OWNED a contiguous ``[Smax]`` KV buffer —
+HBM paid at batch-max.  This module replaces the contiguous buffer with
+indirection:
+
+  * ``k_pool`` / ``v_pool`` — one shared pool of fixed-size pages,
+    ``[n_pages, Hkv, page, Dh]`` (a page holds ``page`` tokens of K or V
+    for every KV head; the trailing ``[page, Dh]`` tile per head is what
+    the Pallas kernels' BlockSpecs load).
+  * ``block_table`` — ``[B, max_pages]`` int32: row ``b``'s logical token
+    block ``j`` lives in physical page ``block_table[b, j]``.  Tables are
+    *traced* values: differing tables (new admissions, shared prefixes)
+    reuse one compiled program, exactly like the per-row ``kv_lens``.
+
+Rows that share a prompt prefix can point table entries at the SAME page
+(prefix sharing — the pool stores the prefix once); a finished row's pages
+return to the allocator for the next admission (continuous batching).  The
+allocator is deliberately host-side Python: page churn happens at the
+serving-loop boundary, between compiled steps, never inside them.
+
+Layout note: pages are head-major (``[n_pages, Hkv, page, Dh]``) so a
+zero-copy reshape to ``[n_pages * Hkv, page, Dh]`` gives each (page, head)
+pair its own flat pool slot — kernels/ops.py expands a ``[B, max_pages]``
+table to flat per-head page ids (``table * Hkv + head``) the same way it
+expands ``kv_len`` vectors, and the kernels' scalar-prefetch index maps
+dereference those flat ids directly.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVCache(NamedTuple):
+    """One attention layer's paged cache (drop-in for ``KVCache``)."""
+    k_pool: jnp.ndarray       # [n_pages, Hkv, page, Dh]
+    v_pool: jnp.ndarray       # [n_pages, Hkv, page, Dh]
+    block_table: jnp.ndarray  # [B, max_pages] int32 (physical page ids)
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pool.shape[2]
+
+
+def num_pages(max_len: int, page: int) -> int:
+    """Pages needed to hold ``max_len`` tokens (the table width)."""
+    return -(-max_len // page)
+
+
+def identity_block_table(batch: int, max_pages: int) -> np.ndarray:
+    """The unshared layout as a table: row ``b`` owns pages
+    ``[b * max_pages, (b + 1) * max_pages)`` — contiguous-by-another-name,
+    through the same indirection every other table uses."""
+    return np.arange(batch * max_pages, dtype=np.int32).reshape(
+        batch, max_pages)
+
+
+def init_paged_kv_cache(batch: int, n_kv_heads: int, max_len: int, page: int,
+                        head_dim: int, dtype, *, block_table=None,
+                        n_pages: Optional[int] = None) -> PagedKVCache:
+    """Zero pools + a block table.  ``block_table=None`` builds the identity
+    (unshared) table; a caller-supplied table (allocator output, shared
+    prefixes) is adopted as-is.  ``n_pages`` sizes the pool — default
+    ``batch * max_pages``, the unshared worst case, so a shared table simply
+    leaves pool tail pages unused (pool size is static under jit; the
+    allocator's live-page count is the host-side memory story)."""
+    mp = num_pages(max_len, page)
+    if block_table is None:
+        block_table = identity_block_table(batch, mp)
+    block_table = jnp.asarray(block_table, jnp.int32)
+    assert block_table.shape == (batch, mp), (block_table.shape, batch, mp)
+    n_pages = batch * mp if n_pages is None else n_pages
+    shape = (n_pages, n_kv_heads, page, head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        block_table)
+
+
+def paged_update_rows(pool, table, new, pos):
+    """Write ``new`` [B, Hkv, S, Dh] into ``pool`` [n_pages, Hkv, page, Dh]
+    at token positions ``pos .. pos + S`` per row, dereferenced through
+    ``table`` [B, max_pages] — the paged twin of
+    ``attention.update_cache_rows``.  ``pos`` is a scalar (uniform batch)
+    or a per-row [B] vector (ragged decode), exactly like the contiguous
+    writer.  Rows aliasing the same page (shared prefixes) must write
+    identical values there (prefill over a common prompt does); decode
+    writes land past the shared run, in private pages."""
+    n, hkv, page, dh = pool.shape
+    b, _, s, _ = new.shape
+    pos = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+    t_idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+    blk = jnp.take_along_axis(table, t_idx // page, axis=1)         # [B, S]
+    off = t_idx % page
+    vals = new.swapaxes(1, 2).reshape(b * s, hkv, dh).astype(pool.dtype)
+    return pool.at[blk.reshape(-1), :, off.reshape(-1)].set(vals)
+
+
+def gather_paged_kv(pool, table):
+    """Materialize the contiguous view: [n_pages, Hkv, page, Dh] gathered
+    through [B, max_pages] -> [B, Hkv, max_pages * page, Dh].  The dense
+    (non-Pallas) attention fallback — pure data movement, so paged dense
+    attention is bit-identical to the contiguous path; the Pallas kernels
+    skip this gather entirely and dereference the table in their BlockSpec
+    index maps."""
+    b, mp = table.shape
+    n, hkv, page, dh = pool.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)    # [B*mp, Hkv, page, Dh]
+    g = g.reshape(b, mp, hkv, page, dh).transpose(0, 2, 1, 3, 4)
+    return g.reshape(b, hkv, mp * page, dh)
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator (serving-loop boundary; never traced)
+# ---------------------------------------------------------------------------
+class PageAllocator:
+    """Refcounted free-list over ``n_pages`` physical pages.
+
+    ``alloc(n)`` hands out ``n`` pages (refcount 1); ``share(ids)`` adds a
+    reference per page (prefix sharing: several rows' tables point at one
+    page); ``free(ids)`` drops one reference per page and returns pages to
+    the free list when their last reference dies (a finished row leaving a
+    continuous batch).  Freed pages are handed out again LIFO — warm reuse.
+    Raises ``MemoryError`` when the pool is exhausted (admission control's
+    signal to stop packing rows)."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages > 0, n_pages
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._refs: dict = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"of {self.n_pages} free")
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._refs[i] = 1
+        return ids
+
+    def share(self, ids: Sequence[int]) -> List[int]:
+        for i in ids:
+            assert self._refs.get(i, 0) > 0, f"share of dead page {i}"
+            self._refs[i] += 1
+        return list(ids)
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            assert self._refs.get(i, 0) > 0, f"double free of page {i}"
+            self._refs[i] -= 1
+            if self._refs[i] == 0:
+                del self._refs[i]
+                self._free.append(i)
+
+
+def build_tables(alloc: PageAllocator, batch: int, max_pages: int,
+                 *, shared_pages: int = 0) -> np.ndarray:
+    """Allocate one ``[batch, max_pages]`` table.  The first
+    ``shared_pages`` entries of every row alias ONE page run (allocated
+    once, then ``share``d into rows 1..B-1) — the common-prompt prefix;
+    the rest are private per row.  Only pages FULLY covered by the common
+    prefix may be shared: the first partial block is written differently
+    per row once decoding diverges, so callers pass
+    ``shared_pages = common_prefix_len // page_size``."""
+    table = np.zeros((batch, max_pages), np.int32)
+    prefix = alloc.alloc(shared_pages) if shared_pages else []
+    for b in range(batch):
+        run = list(prefix) if b == 0 else alloc.share(prefix)
+        run += alloc.alloc(max_pages - shared_pages)
+        table[b] = run
+    return table

@@ -30,6 +30,7 @@ from ..core import ops as tp
 from ..core.policy import PrecisionPolicy, get_policy
 from . import attention as attn
 from . import moe as moe_mod
+from . import paged
 from . import ssm
 from .layers import (batch_axes, bspec, dense_init, embed_init, gelu_mlp,
                      layernorm, mlp_params, param_dtype, residual_spec,
@@ -154,12 +155,18 @@ def init_shared_block(key, cfg: ModelConfig, dtype):
 # caches
 # ---------------------------------------------------------------------------
 def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
-                     max_len: int, policy: PrecisionPolicy):
+                     max_len: int, policy: PrecisionPolicy,
+                     page_table=None, n_pages: Optional[int] = None):
     kv_dtype = attn.kv_store_dtype(policy)
     c: dict = {}
     if spec.mixer in ("gqa", "shared_attn"):
-        c["kv"] = attn.init_kv_cache(batch, cfg.n_kv_heads, max_len,
-                                     cfg.head_dim, kv_dtype)
+        if cfg.paged_kv:
+            c["kv"] = paged.init_paged_kv_cache(
+                batch, cfg.n_kv_heads, max_len, cfg.page_size, cfg.head_dim,
+                kv_dtype, block_table=page_table, n_pages=n_pages)
+        else:
+            c["kv"] = attn.init_kv_cache(batch, cfg.n_kv_heads, max_len,
+                                         cfg.head_dim, kv_dtype)
     elif spec.mixer == "mla":
         c["kv"] = attn.init_mla_cache(batch, max_len, cfg.kv_lora,
                                       cfg.rope_dim, kv_dtype)
@@ -183,8 +190,16 @@ class Caches(NamedTuple):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                policy: PrecisionPolicy) -> Caches:
-    mk = lambda spec: init_layer_cache(spec, cfg, batch, max_len, policy)
+                policy: PrecisionPolicy, page_table=None,
+                n_pages: Optional[int] = None) -> Caches:
+    """``page_table`` / ``n_pages`` (paged mode): every attention layer's
+    ``PagedKVCache`` adopts the SAME [B, max_pages] table (allocation is
+    symmetric across layers — each layer's pool grows identically), each
+    with its own page pool.  ``None`` builds the identity (unshared)
+    table."""
+    mk = lambda spec: init_layer_cache(spec, cfg, batch, max_len, policy,
+                                       page_table=page_table,
+                                       n_pages=n_pages)
     pattern_one = tuple(mk(s) for s in cfg.pattern)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.repeats,) + x.shape),
@@ -533,7 +548,8 @@ class Model:
         return tot / jnp.maximum(cnt, 1)
 
     def prefill(self, params, tokens, *, max_len: int, frontend_embeds=None,
-                mesh=None, prompt_lens=None):
+                mesh=None, prompt_lens=None, page_table=None,
+                n_pages: Optional[int] = None):
         """Consume a prompt, build caches sized ``max_len``.
 
         ``prompt_lens`` ([B] int32) serves a RAGGED batch: ``tokens`` is
@@ -543,8 +559,26 @@ class Model:
         proportional to the row's length), pad-slot K/V lands in cache
         slots the per-row decode ``kv_len`` keeps dead, and the returned
         logits are each row's LAST LIVE position's (not the pad tail's).
+
+        Paged KV (``cfg.paged_kv``): caches become page pools + block
+        tables (``models.paged``).  ``page_table`` ([B, max_pages] int32,
+        a traced value — default: the identity/unshared table) lets rows
+        alias pages, e.g. a shared prompt prefix stored once; aliasing
+        rows must write identical values into shared pages, which a common
+        prefix does by construction.  ``n_pages`` sizes the pools (static;
+        default ``B * max_pages``, the unshared worst case).  Attention-
+        mixer archs only: recurrent state has no page axis, and the
+        whisper cross-attention cache stays contiguous by design.
         """
         cfg = self.cfg
+        if cfg.paged_kv:
+            why = cfg.paged_unsupported_reason()
+            if why is not None:
+                raise ValueError(
+                    f"paged_kv is unsupported for {cfg.name}: {why} cannot "
+                    f"page a contiguous-state cache (attention archs only)")
+        elif page_table is not None:
+            raise ValueError("page_table given but cfg.paged_kv is off")
         if prompt_lens is not None:
             # recurrent mixers have no length axis to mask: pad embeddings
             # would enter the state scan and silently corrupt every later
@@ -561,7 +595,8 @@ class Model:
         if cfg.encoder is not None:
             enc_states = encode(frontend_embeds, params["encoder"], cfg,
                                 self.policy)
-        caches = init_caches(cfg, tokens.shape[0], max_len, self.policy)
+        caches = init_caches(cfg, tokens.shape[0], max_len, self.policy,
+                             page_table=page_table, n_pages=n_pages)
         x = self.embed(params, tokens,
                        frontend_embeds if cfg.frontend == "patch" else None)
         positions = jnp.arange(tokens.shape[1])
@@ -583,7 +618,8 @@ class Model:
                  mesh=None, return_logits: bool = False,
                  temperature: float = 0.0, top_k: Optional[int] = None,
                  top_p: Optional[float] = None, key=None,
-                 prompt_lens=None, stop_token: Optional[int] = None):
+                 prompt_lens=None, stop_token: Optional[int] = None,
+                 page_table=None, n_pages: Optional[int] = None):
         """Prefill + decode of ``gen_len`` tokens as ONE compiled program:
         the decode loop is a ``lax.scan`` over ``decode_step``, so the whole
         generation costs a single dispatch instead of one per token (the
@@ -608,6 +644,13 @@ class Model:
         Differing length vectors reuse one compiled program (they are
         traced values).
 
+        Paged KV: under ``cfg.paged_kv`` the caches riding the scan carry
+        are page pools + block tables (see ``prefill``; ``page_table`` /
+        ``n_pages`` pass through).  Decode-step writes scatter through the
+        table and decode attention dereferences it — the write index /
+        ``kv_len`` plumbing below is IDENTICAL either way, and since
+        tables are traced, page churn between calls never retraces.
+
         EOS early-exit: with ``stop_token`` set, a per-row ``done`` mask
         rides the scan carry.  A finished row's outputs are frozen to
         ``stop_token``, and its live attention length is frozen at the
@@ -629,7 +672,8 @@ class Model:
                                  top_k=top_k, top_p=top_p)
         lg0, caches = self.prefill(params, tokens, max_len=max_len,
                                    frontend_embeds=frontend_embeds,
-                                   mesh=mesh, prompt_lens=prompt_lens)
+                                   mesh=mesh, prompt_lens=prompt_lens,
+                                   page_table=page_table, n_pages=n_pages)
         if do_sample:
             key = jax.random.key(0) if key is None else key
             key, k0 = jax.random.split(key)

@@ -1,0 +1,389 @@
+"""Paged KV cache: block-table indirection, end to end.
+
+Contract under test (the memory-side analogue of the ragged-batch PR):
+
+  * kernels — ``decode_attention_pallas`` / ``flash_attention_pallas``
+    accept a page pool + per-row block table and are BIT-EXACT against the
+    paged oracles in ref.py (gather + blocked walk) across KV storage
+    grids, scrambled tables, and partial tail pages; only the BlockSpec
+    index maps changed, so paged output equals the contiguous kernel on
+    the same values.
+  * no-retrace — differing block tables share one compiled kernel (tables
+    are traced, like the per-row ``kv_lens``).
+  * allocator — refcounted free-list: alloc/free, reuse-after-free (LIFO),
+    shared pages survive until their last reference dies, exhaustion
+    raises.
+  * model — paged prefill/generate (identity table) is bit-identical to
+    the contiguous cache on the dense path and matches the fused-kernel
+    path per row; prefix-sharing tables (rows aliasing common-prompt
+    pages) produce logits identical to the unshared layout; non-attention
+    mixers refuse.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.paged import (PageAllocator, PagedKVCache, build_tables,
+                                gather_paged_kv, identity_block_table,
+                                init_paged_kv_cache, num_pages,
+                                paged_update_rows)
+from repro.models.registry import build_model
+
+F32 = np.float32
+
+
+def rnd(*shape, seed=0, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(F32)
+
+
+def _scatter_pages(x, table, page):
+    """Host-side truth: spread contiguous [rows, S, D] rows into a pool
+    [n_pages, page, D] laid out by ``table`` [rows, nk]."""
+    rows, s, d = x.shape
+    nk = table.shape[1]
+    assert s == nk * page, (x.shape, table.shape, page)
+    pool = np.zeros((int(table.max()) + 1, page, d), F32)
+    for h in range(rows):
+        for j in range(nk):
+            pool[table[h, j]] = x[h, j * page:(j + 1) * page]
+    return jnp.asarray(pool)
+
+
+def _scrambled_table(rows, nk, n_pages, seed=0):
+    perm = np.random.RandomState(seed).permutation(n_pages)[:rows * nk]
+    return perm.reshape(rows, nk).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: bit-exactness vs the paged oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [None, "fp16alt", "fp16", "fp8"])
+def test_paged_decode_bit_exact_vs_paged_oracle(fmt):
+    """Scrambled physical pages, per-row lengths with partial tail pages,
+    every supported KV storage grid: kernel == paged oracle, bitwise."""
+    lens = [1, 77, 129, 256]           # 77 and 129: partial tail pages
+    page = 128
+    q = jnp.asarray(rnd(4, 8, 64, seed=5))
+    k = rnd(4, 256, 64, seed=6)
+    v = rnd(4, 256, 64, seed=7)
+    bt = _scrambled_table(4, 256 // page, 16, seed=1)
+    kp, vp = _scatter_pages(k, bt, page), _scatter_pages(v, bt, page)
+    kvl = jnp.asarray(lens, jnp.int32)
+    kw = dict(scale=0.125, kv_fmt_name=fmt, src_dtype=jnp.float32,
+              out_dtype=jnp.float32)
+    got = decode_attention_pallas(q, kp, vp, kvl, jnp.asarray(bt),
+                                  bk=page, **kw)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt,
+                                          kv_len=np.asarray(lens), **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ... and equals the contiguous kernel on the same values (the paged
+    # kernel changed only the index maps, never the math)
+    base = decode_attention_pallas(q, jnp.asarray(k), jnp.asarray(v), kvl,
+                                   bk=page, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@pytest.mark.parametrize("fmt", [None, "fp16", "fp8"])
+def test_paged_flash_bit_exact_vs_paged_oracle(fmt):
+    """Paged prefill reads (continued prefill against a paged cache):
+    kernel == gather + blocked oracle, bitwise, with GQA head mapping."""
+    lens = [100, 256]
+    group, page = 2, 128
+    q = jnp.asarray(rnd(4, 256, 64, seed=3))
+    k = rnd(2, 256, 64, seed=4)
+    v = rnd(2, 256, 64, seed=5)
+    bt = _scrambled_table(2, 256 // page, 8, seed=2)
+    kp, vp = _scatter_pages(k, bt, page), _scatter_pages(v, bt, page)
+    kvl = jnp.asarray(np.repeat(lens, group), jnp.int32)
+    kw = dict(group=group, scale=0.125, causal=True, src_fmt_name=fmt,
+              src_dtype=jnp.float32, out_dtype=jnp.float32)
+    got = flash_attention_pallas(q, kp, vp, kvl, jnp.asarray(bt),
+                                 bq=128, bk=page, **kw)
+    want = ref.flash_attention_paged_ref(q, kp, vp, bt, bq=128,
+                                         kv_len=np.repeat(lens, group), **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    base = flash_attention_pallas(q, jnp.asarray(k), jnp.asarray(v), kvl,
+                                  bq=128, bk=page, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_paged_decode_prefix_sharing_aliases_pages():
+    """Two rows whose tables alias the SAME first page (a shared prompt
+    prefix stored once in the pool) produce per-row outputs identical to
+    the unshared layout with that page duplicated."""
+    page = 128
+    q = jnp.asarray(rnd(2, 8, 64, seed=11))
+    k = rnd(2, 256, 64, seed=12)
+    v = rnd(2, 256, 64, seed=13)
+    k[1, :page] = k[0, :page]          # common prefix in the values
+    v[1, :page] = v[0, :page]
+    bt_unshared = identity_block_table(2, 2)              # [[0,1],[2,3]]
+    bt_shared = np.asarray([[0, 1], [0, 3]], np.int32)    # page 0 aliased
+    kpu, vpu = _scatter_pages(k, bt_unshared, page), \
+        _scatter_pages(v, bt_unshared, page)
+    kps, vps = _scatter_pages(k, bt_shared, page), \
+        _scatter_pages(v, bt_shared, page)
+    kvl = jnp.asarray([200, 256], jnp.int32)
+    kw = dict(bk=page, scale=0.125, src_dtype=jnp.float32)
+    out_u = decode_attention_pallas(q, kpu, vpu, kvl,
+                                    jnp.asarray(bt_unshared), **kw)
+    out_s = decode_attention_pallas(q, kps, vps, kvl,
+                                    jnp.asarray(bt_shared), **kw)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_u))
+
+
+def test_paged_decode_dead_pages_ignore_garbage():
+    """Pool pages not reachable through any table entry below kv_len must
+    not affect any row (freed pages hold stale garbage by design)."""
+    page = 128
+    lens = [130, 256]
+    q = jnp.asarray(rnd(2, 8, 64, seed=15))
+    k = rnd(2, 256, 64, seed=16)
+    v = rnd(2, 256, 64, seed=17)
+    bt = _scrambled_table(2, 2, 8, seed=3)
+    kp, vp = _scatter_pages(k, bt, page), _scatter_pages(v, bt, page)
+    kvl = jnp.asarray(lens, jnp.int32)
+    kw = dict(bk=page, scale=0.125, src_dtype=jnp.float32)
+    got = decode_attention_pallas(q, kp, vp, kvl, jnp.asarray(bt), **kw)
+    # poison every page NOT referenced by the tables + the tail of row 0's
+    # partial last page (tokens at k_idx >= 130 are masked by kv_len)
+    live = set(bt.reshape(-1).tolist())
+    dead = [i for i in range(8) if i not in live]
+    kp2 = kp.at[jnp.asarray(dead)].set(1e9)
+    vp2 = vp.at[jnp.asarray(dead)].set(-1e9)
+    kp2 = kp2.at[bt[0, 1], (lens[0] % page):].set(1e9)
+    vp2 = vp2.at[bt[0, 1], (lens[0] % page):].set(-1e9)
+    got2 = decode_attention_pallas(q, kp2, vp2, kvl, jnp.asarray(bt), **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+def test_paged_no_retrace_across_tables():
+    """Differing block tables (page churn, re-sharing) must share one
+    compiled kernel — tables are traced values like the length vectors."""
+    page = 128
+    q = jnp.asarray(rnd(2, 8, 64, seed=19))
+    k = rnd(2, 256, 64, seed=20)
+    v = rnd(2, 256, 64, seed=21)
+    kvl = jnp.asarray([256, 256], jnp.int32)
+
+    fn = jax.jit(lambda kp, vp, bt: decode_attention_pallas(
+        q, kp, vp, kvl, bt, bk=page, scale=0.125, src_dtype=jnp.float32))
+    for seed in (1, 2, 3):
+        bt = _scrambled_table(2, 2, 8, seed=seed)
+        kp, vp = _scatter_pages(k, bt, page), _scatter_pages(v, bt, page)
+        # pad pools to a fixed page count so shapes match across tables
+        kp = jnp.pad(kp, ((0, 8 - kp.shape[0]), (0, 0), (0, 0)))
+        vp = jnp.pad(vp, ((0, 8 - vp.shape[0]), (0, 0), (0, 0)))
+        got = fn(kp, vp, jnp.asarray(bt))
+        want = ref.decode_attention_paged_ref(
+            q, kp, vp, bt, kv_len=np.asarray([256, 256]), scale=0.125,
+            src_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert fn._cache_size() == 1, "block tables must not retrace"
+
+
+def test_ops_wrappers_expand_block_tables():
+    """kops.decode_attention takes the MODEL layout — [n_pages, Hkv, page,
+    D] pools + a per-SEQUENCE [B, max_pages] table — and matches the
+    contiguous wrapper on the gathered values (same page-size blocking)."""
+    b, h, hkv, smax, d, page = 2, 4, 2, 256, 64, 128
+    lens = np.asarray([130, 256])
+    qd = jnp.asarray(rnd(b, h, 1, d, seed=24))
+    k = jnp.asarray(rnd(b, hkv, smax, d, seed=22))
+    v = jnp.asarray(rnd(b, hkv, smax, d, seed=23))
+    mp = smax // page
+    table = jnp.asarray(_scrambled_table(b, mp, b * mp, seed=5))
+    pool_shape = (b * mp, hkv, page, d)
+    kp = jnp.zeros(pool_shape, jnp.float32)
+    vp = jnp.zeros(pool_shape, jnp.float32)
+    for row in range(b):
+        for j in range(mp):
+            kp = kp.at[table[row, j], :, :, :].set(
+                k[row, :, j * page:(j + 1) * page])
+            vp = vp.at[table[row, j], :, :, :].set(
+                v[row, :, j * page:(j + 1) * page])
+    # the gather helper reconstructs the contiguous layout exactly
+    np.testing.assert_array_equal(np.asarray(gather_paged_kv(kp, table)),
+                                  np.asarray(k))
+    got = kops.decode_attention(qd, kp, vp, block_table=table,
+                                kv_len=jnp.asarray(lens, jnp.int32),
+                                policy="fp32")
+    want = kops.decode_attention(qd, k, v, kv_len=jnp.asarray(lens,
+                                                             jnp.int32),
+                                 policy="fp32", bk=page)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# paged writes
+# ---------------------------------------------------------------------------
+def test_paged_update_rows_matches_contiguous_writes():
+    """Prefill-style (S tokens at pos 0) and ragged decode-style (1 token
+    at per-row pos) writes through the table reconstruct exactly what the
+    contiguous writer would hold."""
+    from repro.models.attention import update_cache_rows
+    b, hkv, page, dh, mp = 2, 2, 16, 8, 3
+    smax = mp * page
+    table = jnp.asarray(_scrambled_table(b, mp, b * mp, seed=7))
+    pool = jnp.zeros((b * mp, hkv, page, dh), jnp.float32)
+    buf = jnp.zeros((b, hkv, smax, dh), jnp.float32)
+
+    new = jnp.asarray(rnd(b, hkv, 20, dh, seed=8))      # partial tail page
+    pool = paged_update_rows(pool, table, new, 0)
+    buf = update_cache_rows(buf, new, 0, axis=2)
+    np.testing.assert_array_equal(np.asarray(gather_paged_kv(pool, table)),
+                                  np.asarray(buf))
+
+    tok = jnp.asarray(rnd(b, hkv, 1, dh, seed=9))
+    pos = jnp.asarray([20, 33], jnp.int32)              # crosses a page
+    pool = paged_update_rows(pool, table, tok, pos)
+    buf = update_cache_rows(buf, tok, pos, axis=2)
+    np.testing.assert_array_equal(np.asarray(gather_paged_kv(pool, table)),
+                                  np.asarray(buf))
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+def test_allocator_reuse_after_free():
+    a = PageAllocator(4)
+    first = a.alloc(3)
+    assert first == [0, 1, 2] and a.n_live == 3 and a.n_free == 1
+    a.free([1])
+    assert a.n_free == 2
+    # LIFO warm reuse: the freed page comes back before the never-used one
+    again = a.alloc(2)
+    assert again[0] == 1 and set(first[:1] + first[2:] + again) == {0, 1, 2, 3}
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    with pytest.raises(AssertionError):
+        a.free([1, 1, 1])              # more frees than references
+
+
+def test_allocator_shared_pages_survive_partial_free():
+    a = PageAllocator(6)
+    prefix = a.alloc(2)
+    a.share(prefix)                    # two rows reference the prefix
+    a.free(prefix)                     # row 0 leaves
+    assert a.n_live == 2               # row 1 still holds them
+    a.free(prefix)                     # row 1 leaves
+    assert a.n_live == 0 and a.n_free == 6
+
+
+def test_build_tables_shared_prefix_layout():
+    page_budget = 10
+    a = PageAllocator(page_budget)
+    t = build_tables(a, batch=3, max_pages=3, shared_pages=2)
+    # rows agree on the first 2 pages, diverge after
+    assert (t[:, :2] == t[0, :2]).all()
+    assert len(set(t[:, 2].tolist())) == 3
+    # 2 shared + 3 private = 5 live pages, not 9
+    assert a.n_live == 5
+    # freeing every row returns the pool to empty (refcounts balance)
+    for b in range(3):
+        a.free(t[b].tolist())
+    assert a.n_free == page_budget
+
+
+# ---------------------------------------------------------------------------
+# model-level
+# ---------------------------------------------------------------------------
+LENS = [8, 20, 32]
+
+
+def _setup(arch="gemma2-9b", policy="tp_bf16", **cfg):
+    model = build_model(arch, policy=policy, reduced=True)
+    if cfg:
+        model = model.with_cfg(**cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (len(LENS), 32), 0,
+                              model.cfg.vocab)
+    return model, params, toks, jnp.asarray(LENS, jnp.int32)
+
+
+def test_model_paged_generate_bit_identical_dense():
+    """Identity-table paged serving == contiguous serving, bitwise, on the
+    dense path (the gather is pure data movement), ragged lens included."""
+    model, params, toks, lens = _setup()
+    fn = jax.jit(lambda p, t, l: model.generate(
+        p, t, gen_len=4, max_len=40, prompt_lens=l, return_logits=True))
+    mp = model.with_cfg(paged_kv=True, page_size=16)
+    fn_p = jax.jit(lambda p, t, l: mp.generate(
+        p, t, gen_len=4, max_len=40, prompt_lens=l, return_logits=True))
+    g0, lg0 = fn(params, toks, lens)
+    g1, lg1 = fn_p(params, toks, lens)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    np.testing.assert_array_equal(np.asarray(lg0), np.asarray(lg1))
+
+
+@pytest.mark.parametrize("policy", ["tp_bf16", "tp_bf16_kv8"])
+def test_model_paged_pallas_decode_matches_solo_rows(policy):
+    """Fused-kernel paged decode (incl. the fp8 quantized-KV pool): each
+    ragged row generates the tokens it would generate served alone —
+    the paged write/read plumbing is row-independent."""
+    model, params, toks, lens = _setup(
+        policy=policy, paged_kv=True, page_size=16, decode_backend="pallas")
+    fn = jax.jit(lambda p, t, l: model.generate(
+        p, t, gen_len=4, max_len=40, prompt_lens=l)[0])
+    gen = fn(params, toks, lens)
+    for i, L in enumerate(LENS):
+        g_i = fn(params, toks[i:i + 1], jnp.asarray([L], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(gen[i]), np.asarray(g_i[0]))
+
+
+def test_model_prefix_sharing_identical_to_unshared():
+    """Rows aliasing their common-prompt pages (the pool stores the prefix
+    once) produce logits and generations identical to the unshared identity
+    layout — decode writes land in private pages past the shared run."""
+    model, params, toks, _ = _setup(paged_kv=True, page_size=16)
+    toks = jnp.broadcast_to(toks[0:1], (3, 32))         # identical prompts
+    mp = num_pages(40, 16)
+    alloc = PageAllocator(3 * mp)
+    shared = jnp.asarray(build_tables(alloc, 3, mp,
+                                      shared_pages=32 // 16))
+    assert alloc.n_live < 3 * mp                        # pool actually shrank
+    fn = jax.jit(lambda p, t, tb: model.generate(
+        p, t, gen_len=4, max_len=40, page_table=tb, n_pages=3 * mp,
+        return_logits=True))
+    g_s, lg_s = fn(params, toks, shared)
+    g_u, lg_u = fn(params, toks,
+                   jnp.asarray(identity_block_table(3, mp)))
+    np.testing.assert_array_equal(np.asarray(g_s), np.asarray(g_u))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_u))
+
+
+def test_model_paged_composes_with_eos_and_sampling():
+    """paged_kv + stop_token + sampling share one scan carry and stay
+    key-deterministic (the full serving feature set in one program)."""
+    model, params, toks, lens = _setup(paged_kv=True, page_size=16)
+    fn = jax.jit(lambda p, t, l, k: model.generate(
+        p, t, gen_len=6, max_len=48, prompt_lens=l, stop_token=3,
+        temperature=0.9, top_k=50, key=k)[0])
+    s1 = np.asarray(fn(params, toks, lens, jax.random.key(7)))
+    s2 = np.asarray(fn(params, toks, lens, jax.random.key(7)))
+    np.testing.assert_array_equal(s1, s2)
+
+
+def test_paged_rejected_for_stateful_mixers():
+    """Recurrent state and cross-attention caches have no page axis:
+    cfg.paged_kv must refuse, not silently keep a contiguous cache."""
+    for arch in ("zamba2-1.2b", "minicpm3-4b"):
+        model = build_model(arch, policy="tp_bf16", reduced=True)
+        model = model.with_cfg(paged_kv=True)
+        params = model.init(jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                  model.cfg.vocab)
+        with pytest.raises(ValueError, match="paged_kv"):
+            model.prefill(params, toks, max_len=24)
+
+
+def test_page_table_requires_paged_cfg():
+    model, params, toks, _ = _setup()
+    with pytest.raises(ValueError, match="paged_kv"):
+        model.prefill(params, toks, max_len=40,
+                      page_table=jnp.zeros((3, 3), jnp.int32))
