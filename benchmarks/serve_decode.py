@@ -35,6 +35,20 @@ on TPU the Pallas kernel dereferences the table in its index maps and the
 gather disappears.  Archs whose mixers cannot page (SSM/MLA/cross-attn)
 carry null paged columns, like the ragged ones.
 
+Continuous A/B (``continuous_decode_tok_s`` / ``fixed_batch_tok_s`` /
+``continuous_speedup`` / ``continuous_batch_occupancy`` /
+``peak_live_pages``): the PR-5 continuous-batching engine
+(launch/engine.py — while_loop decode bursts, page-recycling admission,
+chunked prefill) against fixed FIFO batches on ONE deterministic
+heavy-tail arrival trace (``engine.synthetic_trace``).  Both sides serve
+the same requests on the same slot count; useful tokens = the sum of
+per-request budgets.  Fixed batching runs every batch to its max budget
+(padding short rows — the pre-engine loop's cost model) while the engine
+frees a finished row's pages the round it finishes and admits from the
+queue mid-generation; ``peak_live_pages`` tracks the pool high-water mark
+against the ``slots x max_pages`` a fixed paged batch pins for the whole
+run.  Archs that cannot page carry null continuous columns.
+
 Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
 tracked PR-over-PR.
 
@@ -70,7 +84,7 @@ def _time_call(fn, repeats=3):
 
 
 def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
-               repeats: int = 3) -> dict:
+               repeats: int = 3, quick: bool = False) -> dict:
     import jax
     import jax.numpy as jnp
     from repro.models.registry import build_model
@@ -180,9 +194,119 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
         row["paged_decode_tok_s"] = scan_tok_s(model_pg, params, prompts,
                                                key="paged_")
 
+    # -- continuous-vs-fixed A/B on a deterministic arrival trace -----------
+    # (the PR-5 serving engine: while_loop decode bursts, page-recycling
+    # admission, chunked prefill.  BOTH sides serve the SAME heavy-tail
+    # trace on the same slot count: fixed batching runs each batch to its
+    # max budget via the scan path — the pre-engine serving loop — while
+    # the engine pays each row only its own budget and backfills freed
+    # slots.  Archs that cannot page carry null columns.)
+    cont = continuous_ab(arch, prompt_len=prompt_len, quick=quick)
+    row.update(cont)
+
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
     return row
+
+
+def continuous_ab(arch: str, *, prompt_len: int, quick: bool = False,
+                  slots: int = 8, gen_long: int = 192,
+                  n_req: int = 48) -> dict:
+    """Continuous-batching engine vs fixed batches on one arrival trace.
+
+    Useful tokens = the sum of per-request budgets (identical on both
+    sides; the fixed batches' padding tokens past a row's budget are waste,
+    which is exactly the point).  Also records mean batch-slot occupancy
+    and the page pool's high-water mark against the ``slots x max_pages``
+    a fixed paged batch would pin."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch.engine import ContinuousEngine, synthetic_trace
+    from repro.models.registry import build_model
+
+    if quick:
+        slots, gen_long, n_req = 4, 32, 10
+    model = build_model(arch, policy="tp_bf16", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    if why is not None:
+        return {"continuous_decode_tok_s": None, "fixed_batch_tok_s": None,
+                "continuous_speedup": None, "continuous_batch_occupancy":
+                None, "peak_live_pages": None, "continuous_unsupported": why}
+    page = 16
+    model_pg = model.with_cfg(paged_kv=True, page_size=page)
+    params = model_pg.init(jax.random.key(0))
+    max_len = prompt_len + gen_long
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen_long,
+                           model.cfg.vocab)
+    useful = sum(r.max_new for r in reqs)
+
+    eng = ContinuousEngine(model_pg, params, slots=slots, max_len=max_len,
+                           chunk=16, burst_cap=256)
+    eng.run(reqs)                                  # compile + warm
+    ts = []
+    for _ in range(1 if quick else 3):
+        t0 = time.perf_counter()
+        fin, st = eng.run(reqs)
+        ts.append(time.perf_counter() - t0)
+    dt_c = _median(ts)
+    assert all(len(f.tokens) == r.max_new for f, r in zip(fin, reqs))
+
+    # fixed baseline: FIFO batches of up to `slots` arrived requests, each
+    # run to its max budget through the scan path (the pre-engine loop)
+    def fixed_plan():
+        q = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        plan, clock, i = [], 0, 0
+        while i < len(q):
+            clock = max(clock, q[i].arrival)
+            batch = [r for r in q[i:i + slots] if r.arrival <= clock]
+            i += len(batch)
+            g = max(r.max_new for r in batch)
+            plan.append((batch, g))
+            clock += g
+        return plan
+
+    plan = fixed_plan()
+    fns = {}
+
+    def fx(bsz, g):
+        if (bsz, g) not in fns:
+            fns[(bsz, g)] = jax.jit(lambda p, t, l: model_pg.generate(
+                p, t, gen_len=g, max_len=max_len, prompt_lens=l)[0])
+        return fns[(bsz, g)]
+
+    def batch_args(batch):
+        toks = np.zeros((len(batch), prompt_len), np.int32)
+        lens = np.asarray([r.prompt_len for r in batch], np.int32)
+        for j, r in enumerate(batch):
+            toks[j, :r.prompt_len] = r.tokens
+        return jnp.asarray(toks), jnp.asarray(lens)
+
+    for batch, g in plan:                          # compile + warm
+        t, l = batch_args(batch)
+        jax.block_until_ready(fx(len(batch), g)(params, t, l))
+    ts = []
+    for _ in range(1 if quick else 3):
+        t0 = time.perf_counter()
+        for batch, g in plan:
+            t, l = batch_args(batch)
+            jax.block_until_ready(fx(len(batch), g)(params, t, l))
+        ts.append(time.perf_counter() - t0)
+    dt_f = _median(ts)
+
+    return {
+        "continuous_decode_tok_s": useful / dt_c,
+        "fixed_batch_tok_s": useful / dt_f,
+        "continuous_speedup": dt_f / dt_c,
+        "continuous_batch_occupancy": st["occupancy"],
+        "peak_live_pages": st["peak_live_pages"],
+        "continuous_fixed_equiv_pages": st["fixed_equiv_pages"],
+        "continuous_slots": slots,
+        "continuous_n_requests": n_req,
+        "continuous_useful_tokens": useful,
+        "continuous_rounds": st["rounds"],
+        "continuous_bursts": st["bursts"],
+    }
 
 
 def main(argv=None):
@@ -207,7 +331,8 @@ def main(argv=None):
     for arch in args.archs:
         print(f"[serve_decode] {arch} ...", flush=True)
         row = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
-                         gen=args.gen, repeats=args.repeats)
+                         gen=args.gen, repeats=args.repeats,
+                         quick=args.quick)
         report["archs"][arch] = row
         fmt = lambda x, unit: "n/a" if x is None else f"{x:.1f} {unit}"
         print(f"  prefill dense {row['prefill_dense_ms']:.1f} ms "
@@ -221,6 +346,16 @@ def main(argv=None):
               f"(page={row['paged_page_size']}) | "
               f"scan+pallas(kv8) {row['scan_pallas_kv8_tok_s']:.1f} tok/s",
               flush=True)
+        if row.get("continuous_decode_tok_s") is not None:
+            print(f"  continuous {row['continuous_decode_tok_s']:.1f} tok/s "
+                  f"vs fixed {row['fixed_batch_tok_s']:.1f} tok/s "
+                  f"({row['continuous_speedup']:.2f}x) | occupancy "
+                  f"{row['continuous_batch_occupancy']:.2f} | peak pages "
+                  f"{row['peak_live_pages']}/"
+                  f"{row['continuous_fixed_equiv_pages']}", flush=True)
+        else:
+            print(f"  continuous n/a "
+                  f"({row.get('continuous_unsupported')})", flush=True)
 
     if not args.quick:
         with open(args.out, "w") as f:

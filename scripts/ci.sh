@@ -11,12 +11,18 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
+echo "== tier-1 tests (engine module gated separately below) =="
 # includes tests/test_ragged_attention.py (per-row length plumbing) and
 # tests/test_paged_attention.py (block-table indirection: paged kernels
 # vs the paged oracles, allocator reuse-after-free, prefix sharing) —
 # all kernel tests run in Pallas interpret mode on CPU
-python -m pytest -x -q
+python -m pytest -x -q --ignore=tests/test_engine.py
+
+echo "== continuous-batching engine tests =="
+# the PR-5 serving engine gate, run once as its own named step so a
+# failure is unmissable: while_loop==scan bit-parity, early exit,
+# admission determinism, page accounting, no-retrace
+python -m pytest -q tests/test_engine.py
 
 echo "== docs: link + module-coverage check =="
 # every public kernels/ and models/ module must be mentioned in the docs
@@ -41,9 +47,11 @@ for p, t in text.items():
         if not os.path.exists(resolved):
             errs.append(f"{p}: dead link -> {target}")
 
-# module coverage: public modules under kernels/ and models/ are named
+# module coverage: public modules under kernels/, models/ and launch/
+# (launch/engine.py — the continuous-batching scheduler — must stay on
+# the documented surface) are named somewhere in the docs
 blob = "\n".join(text.values())
-for pkg in ("src/repro/kernels", "src/repro/models"):
+for pkg in ("src/repro/kernels", "src/repro/models", "src/repro/launch"):
     for f in sorted(os.listdir(pkg)):
         if not f.endswith(".py") or f.startswith("_"):
             continue
@@ -53,7 +61,8 @@ for pkg in ("src/repro/kernels", "src/repro/models"):
 
 if errs:
     sys.exit("docs check FAILED:\n  " + "\n  ".join(errs))
-print(f"docs OK ({len(DOCS)} files, links + kernels/ + models/ coverage)")
+print(f"docs OK ({len(DOCS)} files, links + kernels/ + models/ + launch/ "
+      f"coverage)")
 EOF
 
 echo "== serve decode smoke benchmark =="
@@ -67,6 +76,8 @@ REQUIRED = [
     "scan_speedup", "scan_pallas_kv8_tok_s",
     "ragged_prefill_ms", "ragged_decode_tok_s", "ragged_lens",
     "paged_decode_tok_s", "paged_page_size",
+    "continuous_decode_tok_s", "fixed_batch_tok_s", "continuous_speedup",
+    "continuous_batch_occupancy", "peak_live_pages",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -78,12 +89,30 @@ for arch, row in report["archs"].items():
     if not (isinstance(ps, int) and ps > 0):
         sys.exit(f"BENCH_serve.json: {arch} paged_page_size must be a "
                  f"positive int, got {ps!r}")
-    ts = row["paged_decode_tok_s"]
-    if ts is not None and not (isinstance(ts, (int, float)) and ts > 0):
-        sys.exit(f"BENCH_serve.json: {arch} paged_decode_tok_s must be "
-                 f"null or a positive number, got {ts!r}")
+    for col in ("paged_decode_tok_s", "continuous_decode_tok_s",
+                "fixed_batch_tok_s"):
+        ts = row[col]
+        if ts is not None and not (isinstance(ts, (int, float)) and ts > 0):
+            sys.exit(f"BENCH_serve.json: {arch} {col} must be "
+                     f"null or a positive number, got {ts!r}")
+    occ = row["continuous_batch_occupancy"]
+    if occ is not None and not (isinstance(occ, (int, float))
+                                and 0.0 < occ <= 1.0):
+        sys.exit(f"BENCH_serve.json: {arch} continuous_batch_occupancy "
+                 f"must be null or in (0, 1], got {occ!r}")
+    peak = row["peak_live_pages"]
+    if peak is not None:
+        fixed_eq = row.get("continuous_fixed_equiv_pages")
+        if not (isinstance(peak, int) and 0 < peak):
+            sys.exit(f"BENCH_serve.json: {arch} peak_live_pages must be "
+                     f"null or a positive int, got {peak!r}")
+        if isinstance(fixed_eq, int) and peak > fixed_eq:
+            sys.exit(f"BENCH_serve.json: {arch} steady-state live pages "
+                     f"({peak}) exceed the fixed-batch equivalent "
+                     f"({fixed_eq}) — page recycling is not working")
 print(f"schema OK ({len(report['archs'])} arch rows x "
-      f"{len(REQUIRED)} required columns, paged fields validated)")
+      f"{len(REQUIRED)} required columns, paged + continuous fields "
+      f"validated)")
 EOF
 
 echo "CI OK"

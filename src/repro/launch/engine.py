@@ -1,0 +1,448 @@
+"""Continuous-batching serving engine: admission, chunked prefill, bursts.
+
+The serving-loop half of the repo's energy-proportionality story.  PR 1-4
+made every LAYER of the stack length-proportional — per-row ``kv_len``
+vectors prune each sequence's attention walk, the paged pool makes HBM
+scale with live tokens, EOS freezing stops a finished row's outputs — but
+the LOOP still paid batch-max cost everywhere: generation was a fixed-trip
+scan that kept stepping EOS-frozen rows to ``max_new_tokens``, a finished
+row's pages stayed live until the whole batch exited, and new requests
+waited for a full batch teardown.  This module closes that gap:
+
+  * **Admission** — a host-side loop over a request queue.  A finished
+    row's pages go back to the ``PageAllocator`` the round it finishes
+    (``decode_burst`` exits the compiled loop that round), and the freed
+    slot is refilled from the queue mid-generation.  Admission reuses the
+    traced per-row write-index/``kv_len``/block-table plumbing, so slot
+    churn never retraces: ONE compiled burst program serves the whole run.
+  * **Chunked prefill** — an admitted prompt is consumed in fixed-width
+    chunks through the paged flash read path
+    (``Model.prefill_chunk``/``flash_attention(block_table=)``), one chunk
+    per round, interleaved with single-round decode bursts so ongoing
+    streams are never stalled behind a long new prompt.
+  * **Page accounting** — pages are allocated LAZILY (prompt pages at
+    admission, one page per row as its length crosses a page boundary), so
+    the allocator's ``peak_live`` high-water mark tracks the sum of live
+    sequence lengths, not ``slots x max_len``.  Admission reserves each
+    request's worst case (``num_pages(prompt + budget)``) against the pool
+    so mid-generation allocation can never fail.
+
+Dead-slot discipline (why idle/prefilling/finished slots are safe): every
+row writes decode K/V only through its OWN table row, and a cache slot
+becomes live for attention only AFTER the real token write to it — so
+garbage writes (idle slots parked at ``max_len - 1``, frozen rows, pad
+tails of prefill chunks) land either on the reserved scratch page or on
+dead slots that real writes overwrite before any mask lets them be read.
+
+The driver is deliberately host-side Python: admission and page churn
+happen at burst boundaries, between compiled steps, never inside them —
+the same boundary the ``PageAllocator`` already lives at.
+
+``python -m repro.launch.serve --continuous`` drives this end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One queued generation request.
+
+    ``arrival`` is in DECODE ROUNDS (the engine's logical clock): the
+    request becomes visible to admission once that many rounds have run —
+    a deterministic stand-in for wall-clock arrival traces."""
+    rid: int
+    tokens: Sequence[int]          # prompt token ids (>= 1)
+    max_new: int                   # generation budget incl. the first token
+    arrival: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class Finished:
+    """A served request: ``tokens`` holds the generated ids (first token
+    included; a ``stop_token`` hit keeps the stop as the last element)."""
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    admit_round: int
+    finish_round: int
+    slot: int
+
+
+def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
+                    vocab: int, seed: int = 2) -> List[Request]:
+    """The deterministic mixed-length / mixed-budget / mixed-arrival
+    workload of the continuous-vs-fixed A/B (benchmarks/serve_decode.py,
+    ``launch/serve.py --continuous``).
+
+    Shape (a chat-like heavy tail): every 8th request in the first 3/4 of
+    the queue is LONG (budget ``gen``); the rest cycle short budgets
+    (``gen/16``, ``gen/8``, ``gen/4``).  Prompt lengths cycle 1/4..4/4 of
+    ``prompt_len``.  Arrivals: the first ``slots`` requests at round 0,
+    then clumps of four every ``gen/16`` rounds — bursty traffic that
+    keeps the admission queue fed.  Fixed batching pays ``gen`` rounds for
+    every batch containing one long request; continuous pays each row only
+    its own budget and backfills freed slots mid-generation."""
+    rng = np.random.RandomState(seed)
+    fr_len = (0.25, 0.5, 0.75, 1.0)
+    shorts = (gen // 16, gen // 8, gen // 4)
+    reqs = []
+    for i in range(n_req):
+        is_long = (i % 8 == 0) and i < (3 * n_req) // 4
+        budget = gen if is_long else max(2, shorts[i % 3])
+        plen = max(1, int(prompt_len * fr_len[i % 4]))
+        arrival = (0 if i < slots
+                   else ((i - slots) // 4 + 1) * max(2, gen // 16))
+        reqs.append(Request(
+            rid=i, tokens=rng.randint(0, vocab, size=plen).tolist(),
+            max_new=budget, arrival=arrival))
+    return reqs
+
+
+class ContinuousEngine:
+    """Continuous-batching scheduler over ``slots`` paged batch rows.
+
+    The model must be paged (``cfg.paged_kv``; attention-mixer archs
+    only).  Requests must satisfy ``prompt_len + max_new <= max_len`` and
+    ``max_new >= 1``.  Greedy by default; ``temperature``/``top_k``/
+    ``top_p`` enable sampling with one PRNG key threaded deterministically
+    through every sampling site (same queue -> same tokens)."""
+
+    def __init__(self, model, params, *, slots: int, max_len: int,
+                 chunk: int = 32, n_pages: Optional[int] = None,
+                 stop_token: Optional[int] = None, temperature: float = 0.0,
+                 top_k: Optional[int] = None, top_p: Optional[float] = None,
+                 seed: int = 0, burst_cap: int = 64,
+                 prefill_rounds: int = 2, admit_wave: int = 2, mesh=None):
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..models.paged import PageAllocator, num_pages
+        from ..models.transformer import (caches_with_table, init_caches,
+                                          sample_token)
+
+        cfg = model.cfg
+        if not cfg.paged_kv:
+            raise ValueError("ContinuousEngine requires cfg.paged_kv "
+                             "(admission allocates pages, not batch rows)")
+        why = cfg.paged_unsupported_reason()
+        if why is not None:
+            raise ValueError(f"continuous batching is unsupported for "
+                             f"{cfg.name}: {why} cannot page its cache")
+        assert slots >= 1 and chunk >= 1 and burst_cap >= 1
+        self.model, self.params, self.mesh = model, params, mesh
+        self.slots, self.max_len, self.chunk = slots, max_len, chunk
+        self.page = cfg.page_size
+        self.max_pages = num_pages(max_len, self.page)
+        self.n_pages = (slots * self.max_pages + 1 if n_pages is None
+                        else n_pages)
+        self.stop_token = stop_token
+        self.temperature, self.top_k, self.top_p = temperature, top_k, top_p
+        self.seed, self.burst_cap = seed, burst_cap
+        self.prefill_rounds = prefill_rounds
+        self.admit_wave = max(1, admit_wave)
+        self._num_pages = num_pages
+        self._jnp, self._jax = jnp, jax
+
+        self.alloc = PageAllocator(self.n_pages)
+        self.scratch = self.alloc.alloc(1)[0]      # dead-write sink, forever
+        self._table = np.full((slots, self.max_pages), self.scratch,
+                              np.int32)
+        self._table_dev = jnp.asarray(self._table)
+        self._table_dirty = False
+        self.caches = init_caches(cfg, slots, max_len, model.policy,
+                                  page_table=self._table,
+                                  n_pages=self.n_pages)
+        # per-slot host state (the scheduler's view; device state mirrors
+        # it through the traced burst arguments)
+        self.pos = np.full((slots,), max_len - 1, np.int32)
+        self.lens = np.zeros((slots,), np.int32)
+        self.done = np.ones((slots,), bool)
+        self.limit = np.zeros((slots,), np.int32)
+        self.tok = np.zeros((slots, 1), np.int32)
+        self._req: List[Optional[Request]] = [None] * slots
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._prog = np.zeros((slots,), np.int32)   # prefill progress
+        self._emitted: List[List[int]] = [[] for _ in range(slots)]
+        self._admit_round = np.zeros((slots,), np.int32)
+
+        def burst(params, caches, table, state, key):
+            # ONE packed [7, B] int32 upload carries the whole scheduler
+            # state (tok, pos, lens, limit, done, n_max, watch) and the
+            # table is installed inside the compiled region — per-burst
+            # host->device traffic is 2 small transfers, independent of
+            # model size
+            caches = caches_with_table(caches, table)
+            out, n, tok, caches, pos, lens, done, key = model.decode_burst(
+                params, state[0][:, None], caches, state[1], state[2],
+                state[4] != 0, state[3], max_len=max_len,
+                out_width=burst_cap, n_max=state[5, 0],
+                exit_on_finish=state[6, 0], stop_token=stop_token,
+                temperature=temperature, top_k=top_k, top_p=top_p,
+                key=key, mesh=mesh)
+            return (out, n,
+                    jnp.stack([tok[:, 0], pos, lens, done.astype(jnp.int32)]),
+                    caches, key)
+
+        # donate the caches operand: the page pools flow through every
+        # burst/chunk as pure carries and the host never reuses the
+        # pre-call object, so XLA aliases them in place instead of
+        # holding two full pools across each dispatch
+        self._burst = jax.jit(burst, donate_argnums=(1,))
+        self._sample = functools.partial(
+            sample_token, temperature=temperature, top_k=top_k, top_p=top_p)
+        self._with_table = caches_with_table
+        self._chunk_fns: Dict[tuple, object] = {}
+
+    # -- helpers ----------------------------------------------------------
+    def _chunk_fn(self, off: int, m: int):
+        """Jitted prefill chunk for an ``m``-slot admission wave at static
+        offset ``off`` (offsets step in multiples of ``self.chunk``, waves
+        are at most ``slots`` wide, so few programs ever compile; slot
+        indices, chunk lengths and tables are traced — admission never
+        retraces).  Folds the wave's first-token sampling into the same
+        dispatch: the returned [m] tokens are each row's sample off its
+        last live chunk position (only meaningful for a row whose final
+        chunk this is)."""
+        fn = self._chunk_fns.get((off, m))
+        if fn is None:
+            model, sample, mesh = self.model, self._sample, self.mesh
+            with_table = self._with_table
+
+            def chunk_step(params, caches, table, t, meta, key):
+                caches = with_table(caches, table)
+                lg, caches = model.prefill_chunk(
+                    params, t, caches, q_offset=off, row=meta[0],
+                    chunk_lens=meta[1], mesh=mesh)
+                return sample(lg[:, -1], key), caches
+
+            fn = self._jax.jit(chunk_step, donate_argnums=(1,))
+            self._chunk_fns[(off, m)] = fn
+        return fn
+
+    def _reserved_pages(self) -> int:
+        """Worst-case pages of every admitted-but-unfinished request —
+        the admission guard that makes lazy mid-burst allocation
+        infallible."""
+        return sum(self._num_pages(r.prompt_len + r.max_new, self.page)
+                   for r in self._req if r is not None)
+
+    def _ensure_pages(self, b: int, last_idx: int) -> None:
+        """Lazily allocate slot ``b``'s pages covering token slots up to
+        ``last_idx`` (inclusive) — the live-length-proportional part."""
+        want = min(last_idx, self.max_len - 1) // self.page + 1
+        while len(self._owned[b]) < want:
+            (pid,) = self.alloc.alloc(1)
+            self._table[b, len(self._owned[b])] = pid
+            self._owned[b].append(pid)
+            self._table_dirty = True
+
+    def _table_device(self):
+        """Device copy of the block table, re-uploaded only when the host
+        table changed (admission, lazy page allocs, recycling)."""
+        if self._table_dirty:
+            self._table_dev = self._jnp.asarray(self._table)
+            self._table_dirty = False
+        return self._table_dev
+
+    def _finish(self, b: int, round_no: int, results: dict) -> None:
+        """Page recycling: the slot's pages go back to the allocator the
+        round its request finishes; the table row falls back to scratch
+        and the slot is immediately admissible."""
+        req = self._req[b]
+        results[req.rid] = Finished(
+            rid=req.rid, prompt_len=req.prompt_len,
+            tokens=list(self._emitted[b]),
+            admit_round=int(self._admit_round[b]), finish_round=round_no,
+            slot=b)
+        self.alloc.free(self._owned[b])
+        self._owned[b] = []
+        self._table[b, :] = self.scratch
+        self._table_dirty = True
+        self._req[b] = None
+        self._emitted[b] = []
+        self.pos[b], self.lens[b] = self.max_len - 1, 0
+        self.done[b], self.limit[b] = True, 0
+
+    # -- the loop ---------------------------------------------------------
+    def run(self, requests: Sequence[Request]):
+        """Serve ``requests`` to completion.  Returns ``(finished, stats)``
+        with ``finished`` in input order and ``stats`` covering rounds,
+        mean batch occupancy and the page-pool high-water mark."""
+        jnp, jax = self._jnp, self._jax
+        for r in requests:
+            if r.prompt_len < 1 or r.max_new < 1:
+                raise ValueError(f"request {r.rid}: empty prompt or budget")
+            if r.prompt_len + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len} + budget "
+                    f"{r.max_new} exceeds max_len {self.max_len}")
+            if (self._num_pages(r.prompt_len + r.max_new, self.page)
+                    > self.n_pages - 1):
+                raise ValueError(
+                    f"request {r.rid} can never fit the pool: needs "
+                    f"{self._num_pages(r.prompt_len + r.max_new, self.page)}"
+                    f" pages, pool has {self.n_pages - 1} (+1 scratch)")
+        order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        pending = deque(order)
+        results: Dict[int, Finished] = {}
+        self.alloc.reset_peak()
+        key = jax.random.key(self.seed)
+        caches = self.caches
+        round_no = decode_rounds = occ_accum = bursts = 0
+
+        while pending or any(r is not None for r in self._req):
+            # -- admission: fill free slots from the queue ----------------
+            for b in range(self.slots):
+                if not pending or pending[0].arrival > round_no:
+                    break
+                if self._req[b] is not None:
+                    continue
+                req = pending[0]
+                need = self._num_pages(req.prompt_len + req.max_new,
+                                       self.page)
+                if self._reserved_pages() + need > self.n_pages - 1:
+                    break                       # stays queued; retry later
+                pages = self.alloc.try_alloc(
+                    self._num_pages(req.prompt_len, self.page))
+                assert pages is not None  # reservation guard covers this
+                self._table[b, :len(pages)] = pages
+                self._table_dirty = True
+                self._owned[b] = pages
+                self._req[b] = req
+                self._prog[b] = 0
+                self._emitted[b] = []
+                self._admit_round[b] = round_no
+                pending.popleft()
+
+            # -- one prefill chunk per admitting slot, same-offset slots
+            #    batched into one call (the t=0 admission wave especially)
+            prefilling = [b for b in range(self.slots)
+                          if self._req[b] is not None and self.done[b]]
+            waves: Dict[int, List[int]] = {}
+            for b in prefilling:
+                waves.setdefault(int(self._prog[b]), []).append(b)
+            for off, rows in sorted(waves.items()):
+                m = len(rows)
+                buf = np.zeros((m, self.chunk), np.int32)
+                meta = np.zeros((2, m), np.int32)       # rows / chunk lens
+                meta[0] = rows
+                for i, b in enumerate(rows):
+                    piece = list(self._req[b].tokens[off:off + self.chunk])
+                    buf[i, :len(piece)] = piece
+                    meta[1, i] = len(piece)
+                if self.temperature > 0.0:
+                    key, sk = jax.random.split(key)
+                else:
+                    sk = key
+                tok0, caches = self._chunk_fn(off, m)(
+                    self.params, caches, self._table_device(),
+                    jnp.asarray(buf), jnp.asarray(meta), sk)
+                tok0 = np.asarray(tok0)
+                for i, b in enumerate(rows):
+                    req = self._req[b]
+                    self._prog[b] += int(meta[1, i])
+                    if int(self._prog[b]) != req.prompt_len:
+                        continue
+                    t0 = int(tok0[i])
+                    self._emitted[b] = [t0]
+                    hit_stop = (self.stop_token is not None
+                                and t0 == self.stop_token)
+                    if hit_stop or req.max_new == 1:
+                        self._finish(b, round_no, results)
+                    else:
+                        self.tok[b, 0] = t0
+                        self.pos[b] = self.lens[b] = req.prompt_len
+                        self.limit[b] = req.prompt_len + req.max_new - 1
+                        self.done[b] = False
+
+            # -- decode burst over every slot -----------------------------
+            active = [b for b in range(self.slots) if not self.done[b]]
+            still_prefilling = any(
+                self._req[b] is not None and self.done[b]
+                for b in range(self.slots))
+            if active:
+                # admission wave: with a deep queue, let up to `admit_wave`
+                # finishes accumulate before handing control back — halves
+                # scheduler round-trips vs reacting to every single finish.
+                # n_max is then capped near the wave-th soonest budget
+                # finish so a lone early finisher never waits long.
+                wave = min(self.admit_wave, len(pending)) if pending else 0
+                if still_prefilling:
+                    # interleave: chunk, a few decode rounds, chunk, ... —
+                    # ongoing streams advance while a long prompt prefills
+                    n_max = self.prefill_rounds
+                else:
+                    n_max = self.burst_cap
+                    if pending:
+                        till = pending[0].arrival - round_no
+                        if till > 0:
+                            n_max = max(1, min(n_max, till))
+                        rem = sorted(int(self.limit[b]) - int(self.pos[b])
+                                     + 1 for b in active)
+                        k = min(wave, len(rem)) - 1
+                        n_max = max(1, min(n_max, rem[k] + 1))
+                for b in active:
+                    self._ensure_pages(
+                        b, min(int(self.pos[b]) + n_max - 1,
+                               int(self.limit[b]) - 1))
+                state = np.zeros((7, self.slots), np.int32)
+                state[0, :] = self.tok[:, 0]
+                state[1], state[2], state[3] = self.pos, self.lens, self.limit
+                state[4] = self.done
+                state[5, 0], state[6, 0] = n_max, wave
+                out, n, state_d, caches, key2 = self._burst(
+                    self.params, caches, self._table_device(),
+                    jnp.asarray(state), key)
+                n = int(n)                    # blocks on the burst
+                outs = np.asarray(out[:, :n])  # download only executed cols
+                new_state = np.array(state_d)
+                self.tok = new_state[0][:, None].copy()
+                self.pos = new_state[1]
+                if self.temperature > 0.0:
+                    key = key2
+                for b in active:
+                    # rounds this row actually ran = its live-length growth
+                    ran = int(new_state[2][b]) - int(self.lens[b])
+                    self._emitted[b].extend(int(t) for t in outs[b, :ran])
+                    occ_accum += ran
+                self.lens = new_state[2]
+                self.done = new_state[3].astype(bool)
+                round_no += n
+                decode_rounds += n
+                bursts += 1
+                for b in active:
+                    if self.done[b]:
+                        self._finish(b, round_no, results)
+            elif still_prefilling:
+                round_no += 1       # prefill-only round (no decoders yet)
+            elif pending:
+                # idle: nothing active, next request hasn't arrived yet
+                round_no = max(round_no + 1, pending[0].arrival)
+
+        self.caches = caches
+        stats = {
+            "rounds": round_no,
+            "decode_rounds": decode_rounds,
+            "bursts": bursts,
+            "occupancy": (occ_accum / (self.slots * decode_rounds)
+                          if decode_rounds else 0.0),
+            # request-KV pages only: the engine's always-live scratch page
+            # (dead-write sink) is bookkeeping, not cache content
+            "peak_live_pages": self.alloc.peak_live - 1,
+            "n_pages": self.n_pages,
+            "fixed_equiv_pages": self.slots * self.max_pages,
+            "pages_live_end": self.alloc.n_live - 1,
+        }
+        return [results[r.rid] for r in requests], stats

@@ -24,9 +24,24 @@ logits and generated tokens are bit-identical to the unshared identity
 layout while the pool holds fewer live pages.  With ``--ragged`` the
 identity table is used (per-row lengths + paged pool, no sharing demo).
 
+``--continuous`` serves a REQUEST QUEUE through the continuous-batching
+engine (``launch/engine.py``) instead of one fixed batch: requests are
+admitted into freed batch slots mid-generation, prompts prefill in chunks
+through the paged flash read path interleaved with decode rounds, each
+row decodes only to its OWN budget (``while_loop`` bursts exit the round
+any row finishes), and a finished row's pages return to the allocator
+that round.  The queue comes from ``--arrival-trace`` (comma-separated
+``arrival:prompt_len:max_new`` triples, arrivals in decode rounds) or
+defaults to the deterministic heavy-tail trace of the benchmark
+(``engine.synthetic_trace``).  Implies ``--paged``; the printout shows
+per-request admit/finish rounds, slot occupancy, and the page pool's
+high-water mark against the fixed-batch equivalent.
+
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 ``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
 ``python -m repro.launch.serve --arch gemma2-9b --paged --page-size 16``
+``python -m repro.launch.serve --arch gemma2-9b --continuous --slots 4``
+``python -m repro.launch.serve --continuous --arrival-trace 0:32:8,2:16:24``
 """
 from __future__ import annotations
 
@@ -63,6 +78,12 @@ def main(argv=None):
                     help="> 0 enables sampling (0 = greedy, the default)")
     ap.add_argument("--top-k", type=int, default=None)
     ap.add_argument("--top-p", type=float, default=None)
+    ap.add_argument("--repetition-penalty", type=float, default=None,
+                    help="> 1 discourages re-emitting seen tokens (HF "
+                         "semantics; prompt + generated counts)")
+    ap.add_argument("--presence-penalty", type=float, default=None,
+                    help="> 0 flat-penalizes every seen token (OpenAI "
+                         "semantics)")
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
     ap.add_argument("--ragged", action="store_true",
                     help="pack mixed-length prompts (1/4..4/4 of "
@@ -78,13 +99,37 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (the paged decode kernel's KV "
                          "block; use >= 128 on real TPUs)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine: admission queue, "
+                         "chunked prefill, per-request budgets, page "
+                         "recycling (implies --paged)")
+    ap.add_argument("--arrival-trace", default=None,
+                    help="comma-separated arrival:prompt_len:max_new "
+                         "triples (arrival in decode rounds); default: the "
+                         "benchmark's synthetic heavy-tail trace")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="batch slots of the continuous engine")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="request count of the default synthetic trace")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk width of the continuous engine")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     args = ap.parse_args(argv)
-    if ((args.ragged or args.paged or args.stop_token is not None)
-            and args.loop != "scan"):
-        ap.error("--ragged / --paged / --stop-token require --loop scan "
-                 "(the per-step python loop is the uniform-batch seed path)")
+    if ((args.ragged or args.paged or args.stop_token is not None
+         or args.continuous) and args.loop != "scan"):
+        ap.error("--ragged / --paged / --stop-token / --continuous require "
+                 "--loop scan (the per-step python loop is the "
+                 "uniform-batch seed path)")
+    if args.arrival_trace and not args.continuous:
+        args.continuous = True          # a request queue implies the engine
+    if args.continuous and args.ragged:
+        ap.error("--continuous subsumes --ragged (per-request lengths)")
+    pen = (args.repetition_penalty is not None
+           or args.presence_penalty is not None)
+    if pen and (args.loop != "scan" or args.continuous):
+        ap.error("--repetition-penalty / --presence-penalty apply to the "
+                 "scan/while generate() path only")
 
     import jax
     import jax.numpy as jnp
@@ -93,9 +138,51 @@ def main(argv=None):
     model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
     model = model.with_cfg(decode_backend=args.decode_backend,
                            prefill_backend=args.prefill_backend)
-    if args.paged:
+    if args.paged or args.continuous:
         model = model.with_cfg(paged_kv=True, page_size=args.page_size)
     params = model.init(jax.random.key(0))
+
+    if args.continuous:
+        from .engine import ContinuousEngine, Request, synthetic_trace
+        if args.arrival_trace:
+            reqs = []
+            for i, triple in enumerate(args.arrival_trace.split(",")):
+                arr, plen, budget = (int(x) for x in triple.split(":"))
+                toks = jax.random.randint(jax.random.key(100 + i), (plen,),
+                                          0, model.cfg.vocab)
+                reqs.append(Request(rid=i, tokens=[int(t) for t in toks],
+                                    max_new=budget, arrival=arr))
+        else:
+            reqs = synthetic_trace(args.requests, args.slots,
+                                   args.prompt_len, args.gen,
+                                   model.cfg.vocab)
+        max_len = max(r.prompt_len + r.max_new for r in reqs)
+        eng = ContinuousEngine(model, params, slots=args.slots,
+                               max_len=max_len, chunk=args.chunk,
+                               stop_token=args.stop_token,
+                               temperature=args.temperature,
+                               top_k=args.top_k, top_p=args.top_p,
+                               seed=args.seed)
+        fin, stats = eng.run(reqs)      # compile + warm
+        t0 = time.time()
+        fin, stats = eng.run(reqs)
+        dt = time.time() - t0
+        print(f"continuous engine: {args.slots} slots, page="
+              f"{args.page_size}, chunk={args.chunk}, "
+              f"{len(reqs)} requests")
+        for f in fin:
+            print(f"  req {f.rid:3d}: prompt {f.prompt_len:3d} -> "
+                  f"{len(f.tokens):3d} tokens  (slot {f.slot}, admitted "
+                  f"r{f.admit_round}, finished r{f.finish_round})")
+        n_tok = sum(len(f.tokens) for f in fin)
+        print(f"occupancy {stats['occupancy']:.2f} over "
+              f"{stats['decode_rounds']} rounds / {stats['bursts']} "
+              f"bursts; peak live pages {stats['peak_live_pages']} vs "
+              f"{stats['fixed_equiv_pages']} fixed-batch equivalent "
+              f"(pool {stats['n_pages']})")
+        print(f"{args.arch} [continuous/{args.decode_backend}]: {n_tok} "
+              f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        return
     max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
@@ -153,7 +240,9 @@ def main(argv=None):
             p, t, gen_len=args.gen, max_len=max_len,
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, key=key, prompt_lens=pl_,
-            stop_token=args.stop_token, page_table=tb, n_pages=n_pages)[0])
+            stop_token=args.stop_token, page_table=tb, n_pages=n_pages,
+            repetition_penalty=args.repetition_penalty,
+            presence_penalty=args.presence_penalty)[0])
         gen = jax.block_until_ready(
             gen_fn(params, prompts, prompt_lens, page_table))
         t0 = time.time()

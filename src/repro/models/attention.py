@@ -113,6 +113,24 @@ def _flash_attend(q, k, v, policy, *, causal, window, cap, q_offset=0,
                                 window=window, softcap=cap, q_offset=q_offset)
 
 
+def _flash_attend_paged(q, cache: PagedKVCache, policy, *, causal, window,
+                        cap, q_offset, kv_len):
+    """Prefill reads against a PAGED cache: q [B,H,S,Dh] against the page
+    pools of ``cache`` through its block table — the flash kernel
+    dereferences the table in its BlockSpec index maps
+    (``kernels.ops.flash_attention(block_table=)``), with ``bk`` pinned to
+    the page size (the page IS the KV block).  This is the chunked-prefill
+    read path: ``q_offset`` is the chunk's start position in the row and
+    ``kv_len`` the row's total live length (prefix + this chunk), so a
+    continuation chunk attends every earlier chunk's K/V straight out of
+    the pool, no contiguous view ever materialized."""
+    from ..kernels import ops as kops
+    return kops.flash_attention(q, cache.k_pool, cache.v_pool, kv_len=kv_len,
+                                block_table=cache.block_table, policy=policy,
+                                scale=q.shape[-1] ** -0.5, causal=causal,
+                                window=window, softcap=cap, q_offset=q_offset)
+
+
 def _masked_softmax_attend(q, k, v, policy, *, causal, window, cap,
                            q_offset, kv_len=None, chunk=512,
                            windowed_slice=False):
@@ -234,10 +252,13 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
 
     Paged cache: ``cache`` may be a ``paged.PagedKVCache`` (shared page
     pools + per-row block table) instead of a contiguous ``KVCache``.
-    Writes scatter through the table (``paged_update_rows``); decode reads
-    dereference it in the Pallas kernel's index maps (or gather, on the
-    dense fallback).  Prefill attention itself is unchanged — it attends
-    over the freshly computed k/v, so only the write path goes paged.
+    Writes scatter through the table (``paged_update_rows``); reads —
+    decode AND prefill — dereference it in the Pallas kernels' index maps
+    (or gather, on the dense fallback).  Paged prefill is write-then-read:
+    the chunk's K/V lands in the pool first and attention reads it back
+    through the table, so a chunked continuation (``cache_pos`` = the
+    chunk's start offset, ``kv_len`` = prefix + chunk live length) is the
+    same code path as a fresh prompt.
     """
     b, s, d = x.shape
     q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
@@ -290,7 +311,32 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
             ck = update_cache_rows(cache.k, k, cache_pos, axis=2)
             cv = update_cache_rows(cache.v, v, cache_pos, axis=2)
             new_cache = KVCache(ck, cv)
-        if s > 1:
+        if s > 1 and paged:
+            # paged prefill attends THROUGH the pool just written
+            # (write-then-read) instead of the freshly computed k/v: the
+            # same read path a chunked continuation takes, so chunk
+            # boundaries are invisible and decode later dereferences
+            # exactly what prefill attended.  ``kv_len`` is each row's
+            # TOTAL live length (prefix + this chunk's live tail);
+            # ``cache_pos`` is the chunk's static query offset.  Pallas
+            # keeps the indirection down to the kernel's index maps; the
+            # dense fallback gathers the pool (pure data movement, so it
+            # is bit-identical to attending the contiguous values).
+            live = kv_len if kv_len is not None else cache_pos + s
+            if _use_pallas_prefill(prefill_backend, cache_pos):
+                out = _flash_attend_paged(q, new_cache, policy,
+                                          causal=causal, window=window,
+                                          cap=attn_softcap,
+                                          q_offset=cache_pos, kv_len=live)
+            else:
+                out = _masked_softmax_attend(
+                    q,
+                    gather_paged_kv(new_cache.k_pool, new_cache.block_table),
+                    gather_paged_kv(new_cache.v_pool, new_cache.block_table),
+                    policy, causal=causal, window=window, cap=attn_softcap,
+                    q_offset=cache_pos, chunk=chunk, kv_len=live,
+                    windowed_slice=windowed_slice)
+        elif s > 1:
             # prefill: the prompt itself is the entire live cache content —
             # attend over the *current* k/v, not the cache buffer (kv_len
             # carries the per-row prompt lengths of a ragged batch).

@@ -127,13 +127,21 @@ class PageAllocator:
     the free list when their last reference dies (a finished row leaving a
     continuous batch).  Freed pages are handed out again LIFO — warm reuse.
     Raises ``MemoryError`` when the pool is exhausted (admission control's
-    signal to stop packing rows)."""
+    signal to stop packing rows); ``try_alloc`` is the non-raising admission
+    probe.
+
+    Continuous-batching hooks: every mid-generation ``alloc``/``free`` keeps
+    ``peak_live`` — the pool's high-water mark — so a serving loop can prove
+    its steady-state occupancy tracks the *sum of live sequence lengths*
+    rather than ``batch x max_len`` (``stats()`` snapshots the counters;
+    ``reset_peak()`` restarts the watermark, e.g. after warmup)."""
 
     def __init__(self, n_pages: int):
         assert n_pages > 0, n_pages
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._refs: dict = {}
+        self.peak_live = 0
 
     @property
     def n_free(self) -> int:
@@ -151,7 +159,22 @@ class PageAllocator:
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self._refs[i] = 1
+        self.peak_live = max(self.peak_live, self.n_live)
         return ids
+
+    def try_alloc(self, n: int) -> Optional[List[int]]:
+        """``alloc`` that returns None instead of raising — the admission
+        loop's probe: a request that doesn't fit simply stays queued."""
+        if n > len(self._free):
+            return None
+        return self.alloc(n)
+
+    def reset_peak(self) -> None:
+        self.peak_live = self.n_live
+
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "n_live": self.n_live,
+                "n_free": self.n_free, "peak_live": self.peak_live}
 
     def share(self, ids: Sequence[int]) -> List[int]:
         for i in ids:

@@ -11,6 +11,13 @@ Three entry points per model (the shapes of the assignment):
   ``prefill``        — [B, S] tokens -> (last-token logits, caches)  (prefill_32k)
   ``decode_step``    — one token + caches -> (logits, caches)  (decode_32k/long_500k)
 
+plus the continuous-batching steps driven by ``launch/engine.py``:
+  ``prefill_chunk``  — one prompt chunk into existing paged caches
+  ``decode_round``   — one decode round over every batch slot
+  ``decode_burst``   — a ``while_loop`` of rounds, exiting on any finish
+and ``generate(loop="while")``, the early-exit single-shot form (with
+repetition/presence penalties riding the carry — ``apply_penalties``).
+
 Transprecision: every matmul routes through core.ops under the active
 PrecisionPolicy; caches store in ``policy.kv_fmt``; softmax/norm/router
 stay f32 (FPnew's COMP group).
@@ -77,6 +84,93 @@ def sample_token(lg, key, *, temperature: float = 0.0,
         kth = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
         lg = jnp.where(lg < kth, -1e30, lg)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def apply_penalties(lg, counts, *, repetition_penalty: Optional[float] = None,
+                    presence_penalty: Optional[float] = None):
+    """Repetition/presence penalties on logits [B, V] from per-row token
+    counts [B, V] (prompt + everything emitted so far).
+
+    ``repetition_penalty`` (HF semantics, > 1 discourages): seen tokens'
+    logits are divided by the penalty when positive, multiplied when
+    negative.  ``presence_penalty`` (OpenAI semantics, > 0 discourages): a
+    flat subtraction for every seen token.  Both key off *presence*
+    (count > 0), are applied to the raw logits BEFORE temperature/top-k/
+    top-p, and leave unseen tokens untouched — ``None``/neutral knobs are
+    static, so the default graph carries no count state at all."""
+    lg = lg.astype(F32)
+    seen = counts > 0
+    if repetition_penalty is not None and repetition_penalty != 1.0:
+        rp = jnp.asarray(repetition_penalty, F32)
+        lg = jnp.where(seen, jnp.where(lg > 0, lg / rp, lg * rp), lg)
+    if presence_penalty is not None and presence_penalty != 0.0:
+        lg = lg - jnp.asarray(presence_penalty, F32) * seen.astype(F32)
+    return lg
+
+
+def token_counts(tokens, vocab: int, prompt_lens=None):
+    """Per-row token histogram [B, vocab] int32 of a (right-padded) prompt
+    [B, S] — the count state penalties start from.  ``prompt_lens`` masks
+    each row's pad tail out of the histogram (pad slots are not 'seen')."""
+    b, s = tokens.shape
+    live = jnp.ones((b, s), jnp.int32)
+    if prompt_lens is not None:
+        live = (jnp.arange(s)[None, :]
+                < jnp.reshape(jnp.asarray(prompt_lens, jnp.int32),
+                              (-1, 1))).astype(jnp.int32)
+    cnt = jnp.zeros((b, vocab), jnp.int32)
+    return cnt.at[jnp.arange(b)[:, None], tokens].add(live)
+
+
+def _bump_counts(cnt, tok):
+    """counts [B, V] += 1 at each row's emitted token [B, 1]."""
+    b = cnt.shape[0]
+    return cnt.at[jnp.arange(b), tok[:, 0]].add(1)
+
+
+def _is_paged_leaf(x) -> bool:
+    return isinstance(x, paged.PagedKVCache)
+
+
+def _caches_table_view(caches: "Caches", rows):
+    """View of paged ``caches`` whose block tables hold only the batch
+    slots ``rows`` (a traced [] or [m] int32 — an admission wave): pools
+    are shared, so subset-row prefill writes scatter into the full pool
+    while reads see only those rows' pages.  Stacked pattern caches
+    gather along their batch axis (second-to-last of the
+    [R, B, max_pages] table)."""
+    rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
+    def one(c):
+        if not _is_paged_leaf(c):
+            return c
+        tbl = jnp.take(c.block_table, rows, axis=c.block_table.ndim - 2)
+        return paged.PagedKVCache(c.k_pool, c.v_pool, tbl)
+    return jax.tree.map(one, caches, is_leaf=_is_paged_leaf)
+
+
+def _caches_adopt_tables(new: "Caches", orig: "Caches"):
+    """Updated pools from ``new``, block tables from ``orig`` (undo a
+    row view after a single-row prefill chunk)."""
+    def two(n, o):
+        if not _is_paged_leaf(n):
+            return n
+        return paged.PagedKVCache(n.k_pool, n.v_pool, o.block_table)
+    return jax.tree.map(two, new, orig, is_leaf=_is_paged_leaf)
+
+
+def caches_with_table(caches: "Caches", table):
+    """Swap a fresh [B, max_pages] block table into every paged layer
+    cache (stacked pattern caches broadcast it over their repeat axis) —
+    the serving loop's admission/recycling hook.  Tables are traced
+    values, so swapping between compiled steps never retraces."""
+    table = jnp.asarray(table, jnp.int32)
+    def one(c):
+        if not _is_paged_leaf(c):
+            return c
+        return paged.PagedKVCache(c.k_pool, c.v_pool,
+                                  jnp.broadcast_to(table,
+                                                   c.block_table.shape))
+    return jax.tree.map(one, caches, is_leaf=_is_paged_leaf)
 
 
 def _norm(x, p, cfg: ModelConfig):
@@ -619,7 +713,10 @@ class Model:
                  temperature: float = 0.0, top_k: Optional[int] = None,
                  top_p: Optional[float] = None, key=None,
                  prompt_lens=None, stop_token: Optional[int] = None,
-                 page_table=None, n_pages: Optional[int] = None):
+                 page_table=None, n_pages: Optional[int] = None,
+                 repetition_penalty: Optional[float] = None,
+                 presence_penalty: Optional[float] = None,
+                 loop: str = "scan", return_trips: bool = False):
         """Prefill + decode of ``gen_len`` tokens as ONE compiled program:
         the decode loop is a ``lax.scan`` over ``decode_step``, so the whole
         generation costs a single dispatch instead of one per token (the
@@ -660,26 +757,58 @@ class Model:
         archs keep updating their recurrent state; their outputs are
         discarded the same way).
 
+        Penalties: ``repetition_penalty`` / ``presence_penalty``
+        (``apply_penalties``) discount tokens already seen — a per-row
+        count histogram (prompt + emitted tokens, pad slots excluded)
+        rides the loop carry and is applied to the raw logits before
+        temperature / top-k / top-p at every step, composing with greedy
+        (penalized argmax) and EOS freezing alike.  The default (both
+        ``None``) carries no count state — greedy stays bit-identical.
+
+        ``loop="while"`` swaps the fixed-trip scan for a
+        ``jax.lax.while_loop`` over the SAME step body: with
+        ``stop_token`` set, the loop exits the round ALL rows are done
+        instead of stepping EOS-frozen rows to ``gen_len`` (trip count
+        capped at ``gen_len - 1`` either way) — tokens are bit-identical
+        to the scan form (unexecuted tail slots are pre-frozen to
+        ``stop_token``), and per-step logits match for every round that
+        actually ran (the tail of ``logits`` is zeros after an early
+        exit).  ``return_trips`` appends the executed decode-round count
+        to the return (``gen_len - 1`` for the scan form).
+
         Returns ``(gen_tokens [B, gen_len], logits)`` where ``logits`` is
         ``[B, gen_len, V]`` (prefill last-token logits followed by each
-        step's) when ``return_logits`` else None.
+        step's) when ``return_logits`` else None; ``(gen, logits, trips)``
+        when ``return_trips``.
         """
+        if loop not in ("scan", "while"):
+            raise ValueError(f"loop must be scan|while, got {loop!r}")
         b, prompt_len = tokens.shape
         max_len = max_len if max_len is not None else prompt_len + gen_len
         do_sample = temperature is not None and temperature > 0.0
         use_stop = stop_token is not None
+        use_pen = ((repetition_penalty is not None
+                    and repetition_penalty != 1.0)
+                   or (presence_penalty is not None
+                       and presence_penalty != 0.0))
         pick = functools.partial(sample_token, temperature=temperature,
                                  top_k=top_k, top_p=top_p)
+        pen = functools.partial(apply_penalties,
+                                repetition_penalty=repetition_penalty,
+                                presence_penalty=presence_penalty)
         lg0, caches = self.prefill(params, tokens, max_len=max_len,
                                    frontend_embeds=frontend_embeds,
                                    mesh=mesh, prompt_lens=prompt_lens,
                                    page_table=page_table, n_pages=n_pages)
+        cnt0 = (token_counts(tokens, self.vocab_out, prompt_lens)
+                if use_pen else None)
+        lg0p = pen(lg0[:, -1], cnt0) if use_pen else lg0[:, -1]
         if do_sample:
             key = jax.random.key(0) if key is None else key
             key, k0 = jax.random.split(key)
-            tok0 = pick(lg0[:, -1], k0)[:, None]
+            tok0 = pick(lg0p, k0)[:, None]
         else:
-            tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
+            tok0 = jnp.argmax(lg0p, -1).astype(jnp.int32)[:, None]
 
         # per-row write index when ragged, the shared scalar otherwise —
         # it ALWAYS advances (done rows write into dead slots, see above)
@@ -688,29 +817,36 @@ class Model:
         if use_stop:
             done0 = tok0[:, 0] == stop_token
             tok0 = jnp.where(done0[:, None], stop_token, tok0)
+        if use_pen:
+            cnt0 = _bump_counts(cnt0, tok0)
 
         def body(carry, _):
             tok, c, pos = carry[:3]
             rest = list(carry[3:])
-            lens = done = ky = None
+            lens = done = ky = cnt = None
             if use_stop:
                 lens, done = rest.pop(0), rest.pop(0)
+            if use_pen:
+                cnt = rest.pop(0)
             if do_sample:
                 ky, step_key = jax.random.split(rest.pop(0))
             # a done row's live window stays at the length it finished with
             attend = jnp.where(done, lens, pos + 1) if use_stop else None
             lg, c = self.decode_step(params, tok, c, pos, mesh=mesh,
                                      kv_len=attend)
+            lgp = pen(lg[:, -1], cnt) if use_pen else lg[:, -1]
             if do_sample:
-                nxt = pick(lg[:, -1], step_key)[:, None]
+                nxt = pick(lgp, step_key)[:, None]
             else:
-                nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                nxt = jnp.argmax(lgp, -1).astype(jnp.int32)[:, None]
             nc = [None, c, pos + 1]
             if use_stop:
                 nxt = jnp.where(done[:, None], stop_token, nxt)
                 nc += [jnp.where(done, lens, pos + 1), done
                        | (nxt[:, 0] == stop_token)]
             nc[0] = nxt
+            if use_pen:
+                nc.append(_bump_counts(cnt, nxt))
             if do_sample:
                 nc.append(ky)
             ys = (nxt[:, 0], lg[:, 0]) if return_logits else (nxt[:, 0],)
@@ -721,13 +857,68 @@ class Model:
             # live length entering the first step: the prompt only (tok0's
             # K/V is written by that step); broadcast for uniform batches
             init += [jnp.broadcast_to(pos0, (b,)), done0]
+        if use_pen:
+            init.append(cnt0)
         if do_sample:
             init.append(key)
+
+        if loop == "while":
+            return self._generate_while(tuple(init), body, tok0, lg0,
+                                        gen_len, use_stop=use_stop,
+                                        stop_token=stop_token,
+                                        return_logits=return_logits,
+                                        return_trips=return_trips)
         _, ys = jax.lax.scan(body, tuple(init), None, length=gen_len - 1)
         gen = jnp.concatenate([tok0, ys[0].swapaxes(0, 1)], axis=1)
-        if not return_logits:
-            return gen, None
-        return gen, jnp.concatenate([lg0, jnp.moveaxis(ys[1], 0, 1)], axis=1)
+        lgs = (jnp.concatenate([lg0, jnp.moveaxis(ys[1], 0, 1)], axis=1)
+               if return_logits else None)
+        if return_trips:
+            return gen, lgs, jnp.asarray(gen_len - 1, jnp.int32)
+        return gen, lgs
+
+    def _generate_while(self, init, body, tok0, lg0, gen_len: int, *,
+                        use_stop, stop_token, return_logits, return_trips):
+        """``generate``'s early-exit form: a ``lax.while_loop`` over the
+        SAME scan step body (bit-parity by construction), exiting the
+        round every row is done.  The token buffer is pre-frozen to
+        ``stop_token``, so unexecuted rounds emit exactly what the scan's
+        frozen rows would have."""
+        b = tok0.shape[0]
+        pad = stop_token if use_stop else 0
+        out0 = jnp.full((b, gen_len), pad, jnp.int32).at[:, 0].set(tok0[:, 0])
+        head = [jnp.zeros((), jnp.int32), out0]
+        if return_logits:
+            head.append(jnp.zeros((b, gen_len, lg0.shape[-1]), F32)
+                        .at[:, 0].set(lg0[:, -1]))
+        n_head = len(head)
+        done_idx = n_head + 4                       # (tok, caches, pos, lens, done)
+
+        def cond(c):
+            more = c[0] < gen_len - 1
+            if use_stop:
+                more = more & ~jnp.all(c[done_idx])
+            return more
+
+        def wbody(c):
+            i = c[0]
+            nc, ys = body(tuple(c[n_head:]), None)
+            out = jax.lax.dynamic_update_slice(c[1], ys[0][:, None],
+                                               (jnp.zeros((), jnp.int32),
+                                                i + 1))
+            head = [i + 1, out]
+            if return_logits:
+                head.append(jax.lax.dynamic_update_slice(
+                    c[2], ys[1][:, None].astype(F32),
+                    (jnp.zeros((), jnp.int32), i + 1,
+                     jnp.zeros((), jnp.int32))))
+            return tuple(head) + nc
+
+        fin = jax.lax.while_loop(cond, wbody, tuple(head) + init)
+        gen, trips = fin[1], fin[0]
+        lgs = fin[2] if return_logits else None
+        if return_trips:
+            return gen, lgs, trips
+        return gen, lgs
 
     def decode_step(self, params, token, caches: Caches, pos, *, mesh=None,
                     kv_len=None):
@@ -749,3 +940,159 @@ class Model:
                                        kv_len=kv_len)
         x = _norm(x, params["norm_f"], cfg)
         return self.logits(params, x).astype(F32), caches
+
+    # -- continuous-batching steps (launch/engine.py drives these) ---------
+    def prefill_chunk(self, params, tokens, caches: Caches, *,
+                      q_offset: int, row=None, chunk_lens=None, mesh=None):
+        """Consume ONE prompt chunk into EXISTING caches — the chunked-
+        prefill half of continuous batching (paged archs only: the chunk
+        must read every EARLIER chunk's K/V back through the page pool,
+        which is exactly the paged prefill read path).
+
+        ``tokens`` [b, C]: the chunk, right-padded to a fixed width C so
+        chunk calls share compiled programs.  ``q_offset``: the chunk's
+        start position in the row — a STATIC int (it shapes the Pallas
+        block schedule); schedulers step it in multiples of C, so at most
+        ``max_prompt / C`` programs ever compile.  ``chunk_lens`` [b]: live
+        tokens within this chunk (pad-tail K/V lands in dead slots that
+        later real writes overwrite before they can ever be read).
+
+        ``row``: traced [] or [m] int32 batch-slot indices — serve a
+        SUBSET of a wider serving batch (an admission wave while other
+        slots keep decoding; ``tokens``/``chunk_lens`` are then [m, C] /
+        [m]): block tables are gathered to those rows, writes scatter
+        into the SHARED pool through each row's own table entries, and
+        the returned caches carry the original full-width tables.  Being
+        traced, slot indices never retrace across admission events.
+
+        Returns ``(logits [b, 1, V], caches)`` — each row's logits at its
+        last live chunk position (the final chunk's logits seed the first
+        generated token)."""
+        cfg = self.cfg
+        if not cfg.paged_kv:
+            raise ValueError(
+                "prefill_chunk requires cfg.paged_kv: a continuation chunk "
+                "reads the prefix through the page pool (contiguous prefill "
+                "attends only its own fresh K/V)")
+        why = cfg.paged_unsupported_reason()
+        if why is not None:
+            raise ValueError(
+                f"prefill_chunk is unsupported for {cfg.name}: {why} cannot "
+                f"page a contiguous-state cache (attention archs only)")
+        b, s = tokens.shape
+        run = _caches_table_view(caches, row) if row is not None else caches
+        x = self.embed(params, tokens, pos_offset=q_offset)
+        positions = q_offset + jnp.arange(s)
+        live = jnp.reshape(jnp.asarray(
+            s if chunk_lens is None else chunk_lens, jnp.int32), (-1,))
+        x, run, _ = self._run_stack(params, x, positions=positions,
+                                    mesh=mesh, caches=run,
+                                    cache_pos=q_offset,
+                                    kv_len=q_offset + live)
+        x = _norm(x, params["norm_f"], cfg)
+        last = (jnp.maximum(jnp.broadcast_to(live, (b,)), 1) - 1)[:, None,
+                                                                  None]
+        lg = self.logits(params, jnp.take_along_axis(x, last,
+                                                     axis=1)).astype(F32)
+        if row is not None:
+            run = _caches_adopt_tables(run, caches)
+        return lg, run
+
+    def decode_round(self, params, tok, caches: Caches, pos, *, lens, done,
+                     stop_token: Optional[int] = None,
+                     temperature: float = 0.0, top_k: Optional[int] = None,
+                     top_p: Optional[float] = None, key=None, mesh=None):
+        """ONE decode round over every batch slot of a continuous batch:
+        ``decode_step`` at per-row write index ``pos``, attending each
+        row's live window (``lens`` for done/idle rows, ``pos + 1`` for
+        running ones), then sampling.  Done rows emit ``stop_token`` and
+        keep writing into dead slots; idle slots (``lens == 0``) attend
+        nothing and emit garbage the scheduler ignores.  All row state is
+        traced — admission, page recycling and EOS churn between rounds
+        never retrace.  Returns ``(next_tok [B,1], logits, caches, key)``;
+        the SCHEDULER owns pos/lens/done advancement (see decode_burst
+        for the compiled multi-round form)."""
+        attend = jnp.where(done, lens, pos + 1)
+        lg, caches = self.decode_step(params, tok, caches, pos, mesh=mesh,
+                                      kv_len=attend)
+        if temperature is not None and temperature > 0.0:
+            key, sk = jax.random.split(jax.random.key(0)
+                                       if key is None else key)
+            nxt = sample_token(lg[:, -1], sk, temperature=temperature,
+                               top_k=top_k, top_p=top_p)[:, None]
+        else:
+            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        if stop_token is not None:
+            nxt = jnp.where(done[:, None], stop_token, nxt)
+        return nxt, lg, caches, key
+
+    def decode_burst(self, params, tok, caches: Caches, pos, lens, done,
+                     limit, *, max_len: int, out_width: int, n_max,
+                     exit_on_finish, stop_token: Optional[int] = None,
+                     temperature: float = 0.0, top_k: Optional[int] = None,
+                     top_p: Optional[float] = None, key=None, mesh=None):
+        """Up to ``n_max`` continuous-batching decode rounds as ONE
+        compiled ``lax.while_loop`` — the engine's steady-state dispatch
+        cost amortizes like the scan path's.
+
+        Per-row carry: write index ``pos``, live length ``lens``, ``done``
+        mask, and ``limit`` (the pos at which a row has emitted its whole
+        budget: ``prompt_len + budget - 1``).  A row finishes when it
+        emits ``stop_token`` or reaches its limit; its outputs freeze and
+        its later writes land in dead slots (write index clamped inside
+        ``max_len``).  The loop exits when every row is done, after
+        ``n_max`` rounds (both always on), or — when ``exit_on_finish``
+        (a TRACED int) is ``k > 0`` — the round the k-th running row
+        finishes since burst entry, handing control back to the host
+        scheduler so finished rows' pages can be freed and queued
+        requests admitted that round (``k = 1``: react to every finish;
+        ``k = 2``: batch admissions in waves, halving scheduler
+        round-trips; ``0``: run to ``n_max``/all-done).  ``n_max``,
+        ``exit_on_finish`` and all row state are traced: bursts of any
+        shape share one compiled program.
+
+        Returns ``(out [B, out_width], n_steps, tok, caches, pos, lens,
+        done, key)`` — ``out[:, :n_steps]`` holds each round's emitted
+        token per row (rows already done emit ``stop_token``/pad)."""
+        b = tok.shape[0]
+        do_sample = temperature is not None and temperature > 0.0
+        if do_sample and key is None:
+            key = jax.random.key(0)
+        done0 = done
+        pad = stop_token if stop_token is not None else -1
+        out0 = jnp.full((b, out_width), pad, jnp.int32)
+        n_max = jnp.asarray(n_max, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+
+        wave = jnp.asarray(exit_on_finish, jnp.int32)
+
+        def cond(c):
+            i, done = c[0], c[6]
+            more = (i < n_max) & ~jnp.all(done)
+            newly = jnp.sum((done & ~done0).astype(jnp.int32))
+            return more & ((wave == 0) | (newly < wave))
+
+        def body(c):
+            i, out, tok, caches, pos, lens, done = c[:7]
+            nxt, _, caches, ky = self.decode_round(
+                params, tok, caches, pos, lens=lens, done=done,
+                stop_token=stop_token, temperature=temperature,
+                top_k=top_k, top_p=top_p,
+                key=c[7] if do_sample else None, mesh=mesh)
+            out = jax.lax.dynamic_update_slice(out, nxt, (zero, i))
+            fin = done | (pos + 1 >= limit)
+            if stop_token is not None:
+                fin = fin | (nxt[:, 0] == stop_token)
+            new_pos = jnp.where(done, pos,
+                                jnp.minimum(pos + 1, max_len - 1))
+            new_lens = jnp.where(done, lens, pos + 1)
+            nc = (i + 1, out, nxt, caches, new_pos, new_lens, fin)
+            return nc + ((ky,) if do_sample else ())
+
+        init = (zero, out0, tok, caches, pos, lens, done)
+        if do_sample:
+            init += (key,)
+        fin = jax.lax.while_loop(cond, body, init)
+        n, out, tok, caches, pos, lens, done = fin[:7]
+        return (out, n, tok, caches, pos, lens, done,
+                fin[7] if do_sample else key)
