@@ -204,6 +204,13 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     cont = continuous_ab(arch, prompt_len=prompt_len, quick=quick)
     row.update(cont)
 
+    # -- robustness soak: overload + injected faults must drain -------------
+    # (the PR-6 backpressure machinery: bursty over-committed arrivals on a
+    # constrained page pool with injected exhaustion / stragglers / poisoned
+    # logits.  The gate is DRAINAGE — every request finishes its full
+    # budget — with the preempt/shed/degrade/deadline counters recorded.)
+    row.update(robustness_soak(arch, prompt_len=prompt_len, quick=quick))
+
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
     return row
@@ -309,6 +316,77 @@ def continuous_ab(arch: str, *, prompt_len: int, quick: bool = False,
     }
 
 
+def robustness_soak(arch: str, *, prompt_len: int, quick: bool = False,
+                    slots: int = 4, gen: int = 64, n_req: int = 24) -> dict:
+    """Overload soak through the robustness machinery.
+
+    The soak trace (``synthetic_trace(flavor="soak")``: arrival bursts far
+    wider than ``slots``, long documents, mixed priorities, deadlines on
+    the top tier, quality-sensitive ``no_degrade`` requests) is served on
+    a page pool sized to about HALF the worst-case reservation, with a
+    ``ServeFaultPlan`` injecting pool exhaustion, a straggler stall and
+    masked NaN logits.  The engine must drain it completely — zero stuck,
+    zero lost, every budget honored — by preempting (swap-to-host, fp8
+    degraded where permitted), shedding with backoff and deadline-aware
+    scheduling.  The counters land in BENCH_serve.json as the robustness
+    trajectory; archs that cannot page carry nulls."""
+    import jax
+    from repro.launch.engine import ContinuousEngine, synthetic_trace
+    from repro.models.paged import num_pages
+    from repro.models.registry import build_model
+    from repro.train.fault import ServeFaultPlan
+
+    if quick:
+        slots, gen, n_req = 2, 16, 8
+    model = build_model(arch, policy="tp_bf16", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    keys = ("soak_drained", "soak_requests", "soak_tok_s",
+            "soak_preemptions", "soak_shed_events", "soak_degraded",
+            "soak_deadline_miss_rate", "soak_poisoned_rounds",
+            "soak_faults_exhaust")
+    if why is not None:
+        out = {k: None for k in keys}
+        out["soak_unsupported"] = why
+        return out
+    page = 16
+    model_pg = model.with_cfg(paged_kv=True, page_size=page)
+    params = model_pg.init(jax.random.key(0))
+    max_len = prompt_len + gen
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen, model.cfg.vocab,
+                           flavor="soak")
+    worst = max(num_pages(r.prompt_len + r.max_new, page) for r in reqs)
+    # ~half the worst-case steady-state reservation: admission cannot hold
+    # every slot's worst case, so preemption/shedding must engage
+    n_pages = max(worst + 2, (slots * worst) // 2 + 1)
+    plan = ServeFaultPlan(exhaust_at=(gen // 2, 3 * gen), exhaust_for=4,
+                          slow_at=(gen // 4,), slow_s=0.01,
+                          poison_at=tuple(range(gen // 2, gen // 2 + 4)),
+                          mask_poison=True)
+    eng = ContinuousEngine(model_pg, params, slots=slots, max_len=max_len,
+                           chunk=16, n_pages=n_pages, preempt="swap",
+                           degrade_fmt="fp8", fault_plan=plan)
+    eng.run(reqs)                                  # compile + warm
+    t0 = time.perf_counter()
+    fin, st = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    drained = (len(fin) == n_req
+               and all(len(f.tokens) == r.max_new
+                       for f, r in zip(fin, reqs)))
+    return {
+        "soak_drained": drained,
+        "soak_requests": n_req,
+        "soak_tok_s": sum(len(f.tokens) for f in fin) / dt,
+        "soak_preemptions": st["preemptions"],
+        "soak_shed_events": st["shed_events"],
+        "soak_degraded": st["degraded"],
+        "soak_deadline_miss_rate": st["deadline_miss_rate"],
+        "soak_poisoned_rounds": st["poisoned_rounds"],
+        "soak_faults_exhaust": st["faults_exhaust"],
+        "soak_pool_pages": n_pages,
+        "soak_deadline_total": st["deadline_total"],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", nargs="*", default=list(ARCHS))
@@ -356,6 +434,18 @@ def main(argv=None):
         else:
             print(f"  continuous n/a "
                   f"({row.get('continuous_unsupported')})", flush=True)
+        if row.get("soak_drained") is not None:
+            print(f"  soak drained={row['soak_drained']} "
+                  f"({row['soak_requests']} reqs, "
+                  f"{row['soak_tok_s']:.1f} tok/s) | "
+                  f"{row['soak_preemptions']} preempts, "
+                  f"{row['soak_shed_events']} sheds, "
+                  f"{row['soak_degraded']} degraded, miss-rate "
+                  f"{row['soak_deadline_miss_rate']:.2f}, "
+                  f"{row['soak_poisoned_rounds']} poisoned, "
+                  f"{row['soak_faults_exhaust']} exhaustions", flush=True)
+        else:
+            print(f"  soak n/a ({row.get('soak_unsupported')})", flush=True)
 
     if not args.quick:
         with open(args.out, "w") as f:

@@ -11,18 +11,26 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests (engine module gated separately below) =="
+echo "== tier-1 tests (engine + fault modules gated separately below) =="
 # includes tests/test_ragged_attention.py (per-row length plumbing) and
 # tests/test_paged_attention.py (block-table indirection: paged kernels
-# vs the paged oracles, allocator reuse-after-free, prefix sharing) —
-# all kernel tests run in Pallas interpret mode on CPU
-python -m pytest -x -q --ignore=tests/test_engine.py
+# vs the paged oracles, allocator misuse errors, preemption-batch frees,
+# prefix sharing) — all kernel tests run in Pallas interpret mode on CPU
+python -m pytest -x -q --ignore=tests/test_engine.py \
+    --ignore=tests/test_engine_faults.py
 
 echo "== continuous-batching engine tests =="
 # the PR-5 serving engine gate, run once as its own named step so a
 # failure is unmissable: while_loop==scan bit-parity, early exit,
-# admission determinism, page accounting, no-retrace
+# admission determinism, page accounting, penalties parity, no-retrace
 python -m pytest -q tests/test_engine.py
+
+echo "== serving fault / robustness tests =="
+# the PR-6 overload gate: preempt-resume bit-parity (free-and-reingest
+# AND swap-to-host), fp8-exact degraded swap, fault-plan replay
+# determinism, deadline accounting, poisoned-logits fail-fast, watchdog
+# abort, and the overload soak draining under injected faults
+python -m pytest -q tests/test_engine_faults.py
 
 echo "== docs: link + module-coverage check =="
 # every public kernels/ and models/ module must be mentioned in the docs
@@ -78,6 +86,8 @@ REQUIRED = [
     "paged_decode_tok_s", "paged_page_size",
     "continuous_decode_tok_s", "fixed_batch_tok_s", "continuous_speedup",
     "continuous_batch_occupancy", "peak_live_pages",
+    "soak_drained", "soak_preemptions", "soak_shed_events", "soak_degraded",
+    "soak_deadline_miss_rate", "soak_poisoned_rounds", "soak_faults_exhaust",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -110,9 +120,32 @@ for arch, row in report["archs"].items():
             sys.exit(f"BENCH_serve.json: {arch} steady-state live pages "
                      f"({peak}) exceed the fixed-batch equivalent "
                      f"({fixed_eq}) — page recycling is not working")
+    # robustness soak: for archs that can page, the soak must have
+    # DRAINED (zero stuck/lost requests under injected faults), the
+    # counters must be well-formed, and the constrained pool must have
+    # actually exercised the backpressure machinery
+    drained = row["soak_drained"]
+    if drained is not None:
+        if drained is not True:
+            sys.exit(f"BENCH_serve.json: {arch} soak_drained must be true "
+                     f"— the overload soak lost or stuck requests")
+        for col in ("soak_preemptions", "soak_shed_events", "soak_degraded",
+                    "soak_poisoned_rounds", "soak_faults_exhaust"):
+            v = row[col]
+            if not (isinstance(v, int) and v >= 0):
+                sys.exit(f"BENCH_serve.json: {arch} {col} must be a "
+                         f"non-negative int, got {v!r}")
+        if row["soak_preemptions"] + row["soak_shed_events"] == 0:
+            sys.exit(f"BENCH_serve.json: {arch} soak never engaged "
+                     f"preemption or shedding — the pool was not "
+                     f"constrained enough to test backpressure")
+        mr = row["soak_deadline_miss_rate"]
+        if not (isinstance(mr, (int, float)) and 0.0 <= mr <= 1.0):
+            sys.exit(f"BENCH_serve.json: {arch} soak_deadline_miss_rate "
+                     f"must be in [0, 1], got {mr!r}")
 print(f"schema OK ({len(report['archs'])} arch rows x "
-      f"{len(REQUIRED)} required columns, paged + continuous fields "
-      f"validated)")
+      f"{len(REQUIRED)} required columns, paged + continuous + soak "
+      f"fields validated)")
 EOF
 
 echo "CI OK"

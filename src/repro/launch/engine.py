@@ -1,4 +1,5 @@
-"""Continuous-batching serving engine: admission, chunked prefill, bursts.
+"""Continuous-batching serving engine: admission, chunked prefill, bursts,
+preemption, backpressure and transprecision graceful degradation.
 
 The serving-loop half of the repo's energy-proportionality story.  PR 1-4
 made every LAYER of the stack length-proportional — per-row ``kv_len``
@@ -24,8 +25,40 @@ waited for a full batch teardown.  This module closes that gap:
     admission, one page per row as its length crosses a page boundary), so
     the allocator's ``peak_live`` high-water mark tracks the sum of live
     sequence lengths, not ``slots x max_len``.  Admission reserves each
-    request's worst case (``num_pages(prompt + budget)``) against the pool
-    so mid-generation allocation can never fail.
+    request's worst case (``num_pages(prompt + budget)``) against the pool.
+
+Overload is HANDLED, not assumed away (the FPnew stance: when resources
+are tight, drop to a cheaper operating point instead of failing):
+
+  * **Priorities + deadlines** — ``Request.priority`` orders admission
+    (higher first; FIFO within a class), ``Request.deadline`` (a round
+    number) bumps an at-risk request's effective priority and is
+    accounted per request at finish (``Finished.deadline_miss``).
+  * **Preemption** — when ``try_alloc`` fails or a higher-priority
+    request can't fit, the weakest resident row is evicted: its pages are
+    freed and it re-enters the queue.  ``preempt="free"`` re-ingests the
+    victim's prompt + already-emitted tokens through the chunked-prefill
+    path on resume (chunk boundaries are invisible, so a resumed row's
+    remaining tokens are bit-identical to an un-preempted run);
+    ``preempt="swap"`` copies its live K/V pages to a host-side numpy
+    store instead and restores them on re-admission (no recompute).
+  * **Degradation before shedding** — with ``degrade_fmt`` set (e.g.
+    ``"fp8"``), a swapped victim's pages are stored in that format's
+    native container on the host and widened back on resume — the paper's
+    transprecision knob as a graceful-degradation axis.  It is tracked
+    per row (``Finished.degraded``) and quality-sensitive requests refuse
+    it via ``Request.no_degrade`` (they swap at full width).  When the
+    pool itself is already fp8 (policy ``tp_bf16_kv8``), the round-trip
+    is value-exact.
+  * **Shedding with backoff** — a queue entry that cannot be placed is
+    not allowed to block the loop: it is deferred with jittered
+    exponential backoff (deterministic per rid/attempt) and retried.
+  * **Fault injection + watchdog** — a ``ServeFaultPlan`` deterministically
+    injects page-pool exhaustion episodes, slow-burst stragglers (flagged
+    by a ``StragglerMonitor``) and NaN-poisoned logits inside the compiled
+    burst (masked-and-counted, or fail-fast ``PoisonedLogitsError``);
+    a ``ServeWatchdog`` turns a livelocked loop or a non-progressing
+    burst into a clean ``EngineStuckError`` instead of a hang.
 
 Dead-slot discipline (why idle/prefilling/finished slots are safe): every
 row writes decode K/V only through its OWN table row, and a cache slot
@@ -34,19 +67,23 @@ garbage writes (idle slots parked at ``max_len - 1``, frozen rows, pad
 tails of prefill chunks) land either on the reserved scratch page or on
 dead slots that real writes overwrite before any mask lets them be read.
 
-The driver is deliberately host-side Python: admission and page churn
-happen at burst boundaries, between compiled steps, never inside them —
-the same boundary the ``PageAllocator`` already lives at.
+The driver is deliberately host-side Python: admission, page churn,
+preemption and fault release happen at burst boundaries, between compiled
+steps, never inside them — the same boundary the ``PageAllocator``
+already lives at.
 
 ``python -m repro.launch.serve --continuous`` drives this end to end.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+from ..train.fault import (EngineStuckError, PoisonedLogitsError,
+                           ServeFaultPlan, ServeWatchdog, StragglerMonitor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,11 +92,20 @@ class Request:
 
     ``arrival`` is in DECODE ROUNDS (the engine's logical clock): the
     request becomes visible to admission once that many rounds have run —
-    a deterministic stand-in for wall-clock arrival traces."""
+    a deterministic stand-in for wall-clock arrival traces.  ``priority``
+    orders admission and picks preemption victims (higher wins; FIFO
+    within a class).  ``deadline`` is an absolute round number: finishing
+    after it counts a deadline miss, and a request that can no longer
+    make it gains one effective priority level (SLO-at-risk boost).
+    ``no_degrade`` marks a quality-sensitive request that refuses the
+    fp8 swap-store degradation (it is swapped at full width instead)."""
     rid: int
     tokens: Sequence[int]          # prompt token ids (>= 1)
     max_new: int                   # generation budget incl. the first token
     arrival: int = 0
+    priority: int = 0
+    deadline: Optional[int] = None
+    no_degrade: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -69,33 +115,91 @@ class Request:
 @dataclasses.dataclass
 class Finished:
     """A served request: ``tokens`` holds the generated ids (first token
-    included; a ``stop_token`` hit keeps the stop as the last element)."""
+    included; a ``stop_token`` hit keeps the stop as the last element).
+    The robustness trail rides along: how often the row was preempted or
+    shed-deferred, whether its swapped K/V was format-degraded, and
+    whether it met its deadline."""
     rid: int
     prompt_len: int
     tokens: List[int]
     admit_round: int
     finish_round: int
     slot: int
+    preemptions: int = 0
+    sheds: int = 0
+    degraded: bool = False
+    deadline: Optional[int] = None
+    deadline_miss: bool = False
+
+
+@dataclasses.dataclass
+class _Resume:
+    """A preempted request's continuation state.  ``blobs`` present: the
+    swap-to-host path (per-layer (k, v) page payloads covering ``written``
+    tokens, possibly stored in the degrade format).  ``blobs`` absent:
+    the free-and-reingest path — the prompt plus all but the last emitted
+    token are re-fed through chunked prefill, and the last emitted token
+    is re-fed through the normal decode round, so every K/V byte and
+    every subsequent sample reproduces the un-preempted run."""
+    emitted: List[int]
+    blobs: Optional[list]
+    written: int
+    degraded: bool
+
+
+@dataclasses.dataclass
+class _QEntry:
+    """Queue bookkeeping around a Request: backoff gate, shed/preempt
+    counters and (after a preemption) the resume state."""
+    req: Request
+    not_before: int
+    sheds: int = 0
+    preemptions: int = 0
+    degraded: bool = False
+    resume: Optional[_Resume] = None
 
 
 def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
-                    vocab: int, seed: int = 2) -> List[Request]:
-    """The deterministic mixed-length / mixed-budget / mixed-arrival
-    workload of the continuous-vs-fixed A/B (benchmarks/serve_decode.py,
-    ``launch/serve.py --continuous``).
+                    vocab: int, seed: int = 2,
+                    flavor: str = "chat") -> List[Request]:
+    """Deterministic workloads for the continuous-batching A/B and the
+    robustness soak.
 
-    Shape (a chat-like heavy tail): every 8th request in the first 3/4 of
-    the queue is LONG (budget ``gen``); the rest cycle short budgets
-    (``gen/16``, ``gen/8``, ``gen/4``).  Prompt lengths cycle 1/4..4/4 of
-    ``prompt_len``.  Arrivals: the first ``slots`` requests at round 0,
-    then clumps of four every ``gen/16`` rounds — bursty traffic that
-    keeps the admission queue fed.  Fixed batching pays ``gen`` rounds for
-    every batch containing one long request; continuous pays each row only
-    its own budget and backfills freed slots mid-generation."""
+    ``flavor="chat"`` (default, unchanged): the mixed-length /
+    mixed-budget / mixed-arrival heavy tail of benchmarks/serve_decode.py
+    — every 8th request in the first 3/4 of the queue is LONG (budget
+    ``gen``); the rest cycle short budgets (``gen/16``, ``gen/8``,
+    ``gen/4``).  Prompt lengths cycle 1/4..4/4 of ``prompt_len``.
+    Arrivals: the first ``slots`` requests at round 0, then clumps of
+    four every ``gen/16`` rounds.
+
+    ``flavor="soak"``: the overload scenario — arrivals in bursts of
+    eight (far more than ``slots``), every 5th request a LONG document
+    (full ``prompt_len``), every 4th a long budget, priorities mixed over
+    {0,1,2}, deadlines on the priority-2 tier (tight enough to bind under
+    faults), and every 11th request quality-sensitive (``no_degrade``).
+    Driven with a constrained page pool + a ``ServeFaultPlan``, this is
+    the trace that must drain to completion with zero stuck requests."""
     rng = np.random.RandomState(seed)
     fr_len = (0.25, 0.5, 0.75, 1.0)
     shorts = (gen // 16, gen // 8, gen // 4)
     reqs = []
+    if flavor == "soak":
+        for i in range(n_req):
+            plen = (prompt_len if i % 5 == 0
+                    else max(1, int(prompt_len * fr_len[i % 4])))
+            budget = gen if i % 4 == 0 else max(2, shorts[i % 3])
+            arrival = (i // 8) * max(2, gen // 8)
+            pri = 2 if i % 7 == 3 else (1 if i % 3 == 0 else 0)
+            deadline = (arrival + 4 * budget + 2 * max(2, gen // 8)
+                        if pri == 2 else None)
+            reqs.append(Request(
+                rid=i, tokens=rng.randint(0, vocab, size=plen).tolist(),
+                max_new=budget, arrival=arrival, priority=pri,
+                deadline=deadline, no_degrade=(i % 11 == 7)))
+        return reqs
+    if flavor != "chat":
+        raise ValueError(f"flavor must be chat|soak, got {flavor!r}")
     for i in range(n_req):
         is_long = (i % 8 == 0) and i < (3 * n_req) // 4
         budget = gen if is_long else max(2, shorts[i % 3])
@@ -108,6 +212,9 @@ def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
     return reqs
 
 
+_FAR = 1 << 30          # "no deadline" sort key
+
+
 class ContinuousEngine:
     """Continuous-batching scheduler over ``slots`` paged batch rows.
 
@@ -115,22 +222,43 @@ class ContinuousEngine:
     only).  Requests must satisfy ``prompt_len + max_new <= max_len`` and
     ``max_new >= 1``.  Greedy by default; ``temperature``/``top_k``/
     ``top_p`` enable sampling with one PRNG key threaded deterministically
-    through every sampling site (same queue -> same tokens)."""
+    through every sampling site (same queue -> same tokens).
+    ``repetition_penalty``/``presence_penalty`` apply the same seen-token
+    discounts as ``Model.generate`` (the count histograms ride the burst
+    carry; the host re-seeds them across bursts and preemptions).
+
+    Robustness knobs: ``preempt`` picks the eviction mechanism
+    (``"free"`` re-ingests on resume, ``"swap"`` round-trips live pages
+    through a host-side numpy store); ``degrade_fmt`` stores swapped
+    pages in a narrow format (fp8) unless the request opted out;
+    ``shed=False`` restores head-of-line blocking admission (no backoff
+    deferrals); ``fault_plan`` injects deterministic faults; the
+    watchdog aborts cleanly (``EngineStuckError``) after
+    ``watchdog_patience`` loop iterations without progress."""
 
     def __init__(self, model, params, *, slots: int, max_len: int,
                  chunk: int = 32, n_pages: Optional[int] = None,
                  stop_token: Optional[int] = None, temperature: float = 0.0,
                  top_k: Optional[int] = None, top_p: Optional[float] = None,
                  seed: int = 0, burst_cap: int = 64,
-                 prefill_rounds: int = 2, admit_wave: int = 2, mesh=None):
+                 prefill_rounds: int = 2, admit_wave: int = 2, mesh=None,
+                 repetition_penalty: Optional[float] = None,
+                 presence_penalty: Optional[float] = None,
+                 preempt: str = "free",
+                 degrade_fmt: Optional[str] = None,
+                 shed: bool = True, shed_base: int = 2, shed_cap: int = 64,
+                 min_resident: int = 2,
+                 fault_plan: Optional[ServeFaultPlan] = None,
+                 watchdog_patience: int = 200):
         import functools
 
         import jax
         import jax.numpy as jnp
 
         from ..models.paged import PageAllocator, num_pages
-        from ..models.transformer import (caches_with_table, init_caches,
-                                          sample_token)
+        from ..models.transformer import (apply_penalties, caches_with_table,
+                                          init_caches, sample_token,
+                                          sanitize_logits)
 
         cfg = model.cfg
         if not cfg.paged_kv:
@@ -140,6 +268,8 @@ class ContinuousEngine:
         if why is not None:
             raise ValueError(f"continuous batching is unsupported for "
                              f"{cfg.name}: {why} cannot page its cache")
+        if preempt not in ("free", "swap"):
+            raise ValueError(f"preempt must be free|swap, got {preempt!r}")
         assert slots >= 1 and chunk >= 1 and burst_cap >= 1
         self.model, self.params, self.mesh = model, params, mesh
         self.slots, self.max_len, self.chunk = slots, max_len, chunk
@@ -152,6 +282,22 @@ class ContinuousEngine:
         self.seed, self.burst_cap = seed, burst_cap
         self.prefill_rounds = prefill_rounds
         self.admit_wave = max(1, admit_wave)
+        self.repetition_penalty = repetition_penalty
+        self.presence_penalty = presence_penalty
+        self._use_pen = ((repetition_penalty is not None
+                          and repetition_penalty != 1.0)
+                         or (presence_penalty is not None
+                             and presence_penalty != 0.0))
+        self.preempt_mode = preempt
+        self.degrade_fmt = degrade_fmt
+        self._swap_dtype = None
+        if degrade_fmt is not None:
+            from ..models.attention import kv_swap_dtype
+            self._swap_dtype = kv_swap_dtype(degrade_fmt)
+        self.shed, self.shed_base, self.shed_cap = shed, shed_base, shed_cap
+        self.min_resident = max(0, min_resident)
+        self.fault_plan = fault_plan
+        self.watchdog_patience = watchdog_patience
         self._num_pages = num_pages
         self._jnp, self._jax = jnp, jax
 
@@ -172,28 +318,46 @@ class ContinuousEngine:
         self.limit = np.zeros((slots,), np.int32)
         self.tok = np.zeros((slots, 1), np.int32)
         self._req: List[Optional[Request]] = [None] * slots
+        self._entry: List[Optional[_QEntry]] = [None] * slots
         self._owned: List[List[int]] = [[] for _ in range(slots)]
         self._prog = np.zeros((slots,), np.int32)   # prefill progress
         self._emitted: List[List[int]] = [[] for _ in range(slots)]
+        # tokens chunked prefill consumes: the prompt, or on a reingest
+        # resume the prompt + previously emitted tokens (minus the last)
+        self._ingest: List[List[int]] = [[] for _ in range(slots)]
+        self._resume_tok: List[Optional[int]] = [None] * slots
         self._admit_round = np.zeros((slots,), np.int32)
+        self._cnt = (np.zeros((slots, model.vocab_out), np.int32)
+                     if self._use_pen else None)
+        self._pending: List[_QEntry] = []
+        self._held: List[int] = []      # fault-plan page grab
+        self._release_at: Optional[int] = None
 
-        def burst(params, caches, table, state, key):
-            # ONE packed [7, B] int32 upload carries the whole scheduler
-            # state (tok, pos, lens, limit, done, n_max, watch) and the
-            # table is installed inside the compiled region — per-burst
-            # host->device traffic is 2 small transfers, independent of
-            # model size
+        use_pen = self._use_pen
+        rp, pp = repetition_penalty, presence_penalty
+
+        def burst(params, caches, table, state, counts, key):
+            # ONE packed [8, B] int32 upload carries the whole scheduler
+            # state (tok, pos, lens, limit, done, n_max, watch, poison)
+            # and the table is installed inside the compiled region —
+            # per-burst host->device traffic stays 2-3 small transfers,
+            # independent of model size
             caches = caches_with_table(caches, table)
-            out, n, tok, caches, pos, lens, done, key = model.decode_burst(
+            r = model.decode_burst(
                 params, state[0][:, None], caches, state[1], state[2],
                 state[4] != 0, state[3], max_len=max_len,
                 out_width=burst_cap, n_max=state[5, 0],
                 exit_on_finish=state[6, 0], stop_token=stop_token,
                 temperature=temperature, top_k=top_k, top_p=top_p,
-                key=key, mesh=mesh)
+                key=key, mesh=mesh,
+                counts=counts if use_pen else None,
+                repetition_penalty=rp, presence_penalty=pp,
+                poison_at=state[7, 0], guard=True)
+            out, n, tok, caches, pos, lens, done, key = r[:8]
+            bad = r[8]
             return (out, n,
                     jnp.stack([tok[:, 0], pos, lens, done.astype(jnp.int32)]),
-                    caches, key)
+                    caches, key, bad)
 
         # donate the caches operand: the page pools flow through every
         # burst/chunk as pure carries and the host never reuses the
@@ -203,6 +367,10 @@ class ContinuousEngine:
         self._sample = functools.partial(
             sample_token, temperature=temperature, top_k=top_k, top_p=top_p)
         self._with_table = caches_with_table
+        self._sanitize = sanitize_logits
+        self._pen = functools.partial(apply_penalties,
+                                      repetition_penalty=rp,
+                                      presence_penalty=pp)
         self._chunk_fns: Dict[tuple, object] = {}
 
     # -- helpers ----------------------------------------------------------
@@ -210,22 +378,27 @@ class ContinuousEngine:
         """Jitted prefill chunk for an ``m``-slot admission wave at static
         offset ``off`` (offsets step in multiples of ``self.chunk``, waves
         are at most ``slots`` wide, so few programs ever compile; slot
-        indices, chunk lengths and tables are traced — admission never
-        retraces).  Folds the wave's first-token sampling into the same
-        dispatch: the returned [m] tokens are each row's sample off its
-        last live chunk position (only meaningful for a row whose final
-        chunk this is)."""
+        indices, chunk lengths, tables and count histograms are traced —
+        admission never retraces).  Folds the wave's first-token sampling
+        into the same dispatch: the returned [m] tokens are each row's
+        sample off its last live chunk position (only meaningful for a row
+        whose final chunk this is), guarded against non-finite logits and
+        penalized like every other sampling site."""
         fn = self._chunk_fns.get((off, m))
         if fn is None:
             model, sample, mesh = self.model, self._sample, self.mesh
             with_table = self._with_table
+            sanitize, pen, use_pen = self._sanitize, self._pen, self._use_pen
 
-            def chunk_step(params, caches, table, t, meta, key):
+            def chunk_step(params, caches, table, t, meta, counts, key):
                 caches = with_table(caches, table)
                 lg, caches = model.prefill_chunk(
                     params, t, caches, q_offset=off, row=meta[0],
                     chunk_lens=meta[1], mesh=mesh)
-                return sample(lg[:, -1], key), caches
+                lgv, bad = sanitize(lg[:, -1])
+                if use_pen:
+                    lgv = pen(lgv, counts)
+                return sample(lgv, key), bad, caches
 
             fn = self._jax.jit(chunk_step, donate_argnums=(1,))
             self._chunk_fns[(off, m)] = fn
@@ -233,20 +406,26 @@ class ContinuousEngine:
 
     def _reserved_pages(self) -> int:
         """Worst-case pages of every admitted-but-unfinished request —
-        the admission guard that makes lazy mid-burst allocation
-        infallible."""
+        the admission guard that keeps lazy mid-burst allocation from
+        failing in steady state (injected exhaustion can still race it;
+        ``try_alloc`` is the ground truth and preemption the recovery)."""
         return sum(self._num_pages(r.prompt_len + r.max_new, self.page)
                    for r in self._req if r is not None)
 
-    def _ensure_pages(self, b: int, last_idx: int) -> None:
+    def _ensure_pages(self, b: int, last_idx: int) -> bool:
         """Lazily allocate slot ``b``'s pages covering token slots up to
-        ``last_idx`` (inclusive) — the live-length-proportional part."""
+        ``last_idx`` (inclusive) — the live-length-proportional part.
+        Returns False when the pool can't supply them (pressure: the
+        caller preempts a victim or slot ``b`` itself and retries)."""
         want = min(last_idx, self.max_len - 1) // self.page + 1
         while len(self._owned[b]) < want:
-            (pid,) = self.alloc.alloc(1)
-            self._table[b, len(self._owned[b])] = pid
-            self._owned[b].append(pid)
+            got = self.alloc.try_alloc(1)
+            if got is None:
+                return False
+            self._table[b, len(self._owned[b])] = got[0]
+            self._owned[b].append(got[0])
             self._table_dirty = True
+        return True
 
     def _table_device(self):
         """Device copy of the block table, re-uploaded only when the host
@@ -256,30 +435,300 @@ class ContinuousEngine:
             self._table_dirty = False
         return self._table_dev
 
-    def _finish(self, b: int, round_no: int, results: dict) -> None:
-        """Page recycling: the slot's pages go back to the allocator the
-        round its request finishes; the table row falls back to scratch
-        and the slot is immediately admissible."""
+    def _prompt_hist(self, b: int) -> None:
+        """Seed slot ``b``'s penalty histogram: prompt + already-emitted
+        tokens (resume) — exactly the count state an un-preempted
+        ``generate`` carry would hold at this point."""
+        if not self._use_pen:
+            return
+        v = self._cnt.shape[1]
+        seen = list(self._req[b].tokens) + list(self._emitted[b])
+        self._cnt[b] = np.bincount(np.asarray(seen, np.int64) % v,
+                                   minlength=v).astype(np.int32)
+
+    # -- priorities, deadlines, victims -----------------------------------
+    def _pending_need(self, e: _QEntry) -> int:
+        """Pages an entry needs AT ADMISSION (its resume/prompt length)."""
+        if e.resume is not None:
+            if e.resume.blobs is not None:
+                return self._num_pages(e.resume.written, self.page)
+            n = e.req.prompt_len + len(e.resume.emitted) - 1
+            return self._num_pages(max(1, n), self.page)
+        return self._num_pages(e.req.prompt_len, self.page)
+
+    def _eff_pending(self, e: _QEntry, round_no: int) -> int:
+        """Effective priority of a queued entry: its class, +1 when its
+        deadline can no longer absorb any further waiting (SLO at risk)."""
+        p = e.req.priority
+        if e.req.deadline is not None:
+            emitted = len(e.resume.emitted) if e.resume is not None else 0
+            chunks = -(-e.req.prompt_len // self.chunk)
+            need = (e.req.max_new - emitted) + chunks
+            if round_no + need >= e.req.deadline:
+                p += 1
+        return p
+
+    def _eff_resident(self, b: int, round_no: int) -> int:
+        """Effective priority of a resident row (deadline-at-risk rows
+        get the same +1 boost, protecting them from preemption)."""
+        r = self._req[b]
+        p = r.priority
+        if r.deadline is not None:
+            if self.done[b]:        # still prefilling
+                rem = len(self._ingest[b]) - int(self._prog[b])
+                need = r.max_new + -(-max(0, rem) // self.chunk)
+            else:
+                need = int(self.limit[b]) - int(self.pos[b]) + 1
+            if round_no + need >= r.deadline:
+                p += 1
+        return p
+
+    def _victims_for(self, eff: int, round_no: int, exclude=()):
+        """Resident rows preemptible by effective priority ``eff``,
+        weakest first (anti-thrash: rows resident < ``min_resident``
+        rounds are protected).  Ties prefer the row donating the most
+        pages, then the lowest slot (deterministic)."""
+        cands = [b for b in range(self.slots)
+                 if self._req[b] is not None and b not in exclude
+                 and round_no - int(self._admit_round[b]) >= self.min_resident
+                 and self._eff_resident(b, round_no) < eff]
+        return sorted(cands, key=lambda b: (self._eff_resident(b, round_no),
+                                            -len(self._owned[b]), b))
+
+    def _backoff(self, e: _QEntry, round_no: int, counters: dict) -> None:
+        """Shed: defer the entry with jittered exponential backoff —
+        deterministic in (seed, rid, attempt), so replays are exact."""
+        delay = min(self.shed_cap, self.shed_base * (2 ** min(e.sheds, 16)))
+        rng = np.random.RandomState(
+            (self.seed * 1000003 + e.req.rid * 9973 + e.sheds * 97)
+            & 0x7FFFFFFF)
+        e.not_before = round_no + delay + int(rng.randint(0, max(1, delay)))
+        e.sheds += 1
+        counters["shed_events"] += 1
+        if self.fault_plan is not None:
+            self.fault_plan.note("shed", round=round_no, rid=e.req.rid,
+                                 until=e.not_before)
+
+    # -- preemption / swap ------------------------------------------------
+    def _paged_leaves(self, caches):
+        from ..models.paged import PagedKVCache
+        jax = self._jax
+        return [c for c in jax.tree.leaves(
+                    caches, is_leaf=lambda x: isinstance(x, PagedKVCache))
+                if isinstance(c, PagedKVCache)]
+
+    def _swap_out(self, caches, ids: List[int], degrade: bool):
+        """Copy the live content of ``ids`` pages (every paged layer) to
+        host numpy — in the degrade format's container when allowed."""
+        jnp = self._jnp
+        idx = jnp.asarray(ids, jnp.int32)
+        blobs, nbytes = [], 0
+        for c in self._paged_leaves(caches):
+            ax = c.k_pool.ndim - 4          # page axis (stacked adds [R,...])
+            k = np.asarray(jnp.take(c.k_pool, idx, axis=ax))
+            v = np.asarray(jnp.take(c.v_pool, idx, axis=ax))
+            if degrade:
+                k = k.astype(self._swap_dtype)
+                v = v.astype(self._swap_dtype)
+            blobs.append((k, v))
+            nbytes += k.nbytes + v.nbytes
+        return blobs, nbytes
+
+    def _swap_in(self, caches, blobs: list, ids: List[int]):
+        """Write swapped page payloads back into the pools at the victim's
+        NEW page ids (the table already maps them), widening from the
+        swap-store dtype to the pool dtype."""
+        from ..models.paged import PagedKVCache
+        jax, jnp = self._jax, self._jnp
+        idx = jnp.asarray(ids, jnp.int32)
+        it = iter(blobs)
+
+        def one(c):
+            if not isinstance(c, PagedKVCache):
+                return c
+            k, v = next(it)
+            ax = c.k_pool.ndim - 4
+            sel = (slice(None),) * ax + (idx,)
+            kp = c.k_pool.at[sel].set(jnp.asarray(k).astype(c.k_pool.dtype))
+            vp = c.v_pool.at[sel].set(jnp.asarray(v).astype(c.v_pool.dtype))
+            return PagedKVCache(kp, vp, c.block_table)
+
+        return jax.tree.map(one, caches,
+                            is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+    def _preempt(self, b: int, round_no: int, caches, counters: dict,
+                 reason: str):
+        """Evict resident row ``b``: capture its continuation (swap-out or
+        reingest state), free its pages and slot, and re-queue it —
+        immediately re-admissible, but only where it fits."""
+        e = self._entry[b]
         req = self._req[b]
-        results[req.rid] = Finished(
-            rid=req.rid, prompt_len=req.prompt_len,
-            tokens=list(self._emitted[b]),
-            admit_round=int(self._admit_round[b]), finish_round=round_no,
-            slot=b)
+        e.preemptions += 1
+        counters["preemptions"] += 1
+        if not self.done[b] and self.preempt_mode == "swap":
+            written = int(self.lens[b])
+            keep = self._owned[b][:self._num_pages(written, self.page)]
+            degrade = self.degrade_fmt is not None and not req.no_degrade
+            blobs, nbytes = self._swap_out(caches, keep, degrade)
+            e.resume = _Resume(emitted=list(self._emitted[b]), blobs=blobs,
+                               written=written, degraded=degrade)
+            if degrade:
+                e.degraded = True
+                counters["degraded"] += 1
+            counters["preempt_swap"] += 1
+            counters["swap_out_bytes"] += nbytes
+        elif self._emitted[b]:
+            e.resume = _Resume(emitted=list(self._emitted[b]), blobs=None,
+                               written=0, degraded=False)
+            counters["preempt_reingest"] += 1
+        else:
+            e.resume = None         # mid-prefill: restart from the prompt
+            counters["preempt_restart"] += 1
+        if self.fault_plan is not None:
+            self.fault_plan.note("preempt", round=round_no, rid=req.rid,
+                                 slot=b, reason=reason,
+                                 mode=("swap" if e.resume is not None
+                                       and e.resume.blobs is not None
+                                       else "reingest"))
         self.alloc.free(self._owned[b])
         self._owned[b] = []
         self._table[b, :] = self.scratch
         self._table_dirty = True
-        self._req[b] = None
-        self._emitted[b] = []
+        self._req[b], self._entry[b] = None, None
+        self._emitted[b], self._ingest[b] = [], []
+        self._prog[b], self._resume_tok[b] = 0, None
         self.pos[b], self.lens[b] = self.max_len - 1, 0
         self.done[b], self.limit[b] = True, 0
+        if self._use_pen:
+            self._cnt[b] = 0
+        e.not_before = max(e.not_before, round_no)
+        self._pending.append(e)
+        return caches
+
+    # -- admission --------------------------------------------------------
+    def _admit_one(self, e: _QEntry, b: int, pages: List[int],
+                   round_no: int, caches, counters: dict):
+        """Install entry ``e`` into free slot ``b`` with its admission
+        pages, restoring resume state (swap-in or reingest plumbing)."""
+        req = e.req
+        self._table[b, :len(pages)] = pages
+        self._table_dirty = True
+        self._owned[b] = pages
+        self._req[b], self._entry[b] = req, e
+        self._admit_round[b] = round_no
+        self._resume_tok[b] = None
+        rs, e.resume = e.resume, None
+        if rs is None:
+            self._ingest[b] = list(req.tokens)
+            self._prog[b] = 0
+            self._emitted[b] = []
+        elif rs.blobs is not None:
+            caches = self._swap_in(caches, rs.blobs, pages)
+            self._emitted[b] = list(rs.emitted)
+            self._ingest[b] = []
+            self._prog[b] = np.int32(req.prompt_len)
+            self.tok[b, 0] = rs.emitted[-1]
+            self.pos[b] = self.lens[b] = rs.written
+            self.limit[b] = req.prompt_len + req.max_new - 1
+            self.done[b] = False
+            counters["resumed"] += 1
+        else:
+            self._ingest[b] = list(req.tokens) + list(rs.emitted[:-1])
+            self._prog[b] = 0
+            self._emitted[b] = list(rs.emitted)
+            self._resume_tok[b] = rs.emitted[-1]
+            counters["resumed"] += 1
+        self._prompt_hist(b)
+        return caches
+
+    def _admission(self, round_no: int, caches, counters: dict):
+        """One admission pass: visible entries in (effective priority,
+        deadline, arrival, rid) order; a candidate that doesn't fit may
+        preempt strictly-weaker residents (degrading/swapping them rather
+        than dropping anything), else it is shed with backoff — never
+        blocking the entries behind it."""
+        admitted = 0
+        vis = [e for e in self._pending if e.not_before <= round_no]
+        vis.sort(key=lambda e: (
+            -self._eff_pending(e, round_no),
+            e.req.deadline if e.req.deadline is not None else _FAR,
+            e.req.arrival, e.req.rid))
+        for e in vis:
+            req = e.req
+            worst = self._num_pages(req.prompt_len + req.max_new, self.page)
+            need = self._pending_need(e)
+
+            def fits():
+                free_slots = [b for b in range(self.slots)
+                              if self._req[b] is None]
+                ok = (bool(free_slots)
+                      and self._reserved_pages() + worst <= self.n_pages - 1
+                      and self.alloc.n_free >= need)
+                return free_slots[0] if ok else None
+
+            b = fits()
+            if b is None:
+                eff = self._eff_pending(e, round_no)
+                for v in self._victims_for(eff, round_no):
+                    caches = self._preempt(v, round_no, caches, counters,
+                                           reason="pressure")
+                    b = fits()
+                    if b is not None:
+                        break
+                if b is None:
+                    # shed ONLY under resource pressure (pages short while
+                    # a slot sits free): a backoff there keeps the loop
+                    # live.  All-slots-busy is NOT pressure — the entry
+                    # just waits for the burst's wave-exit to free a slot,
+                    # uncapped bursts intact (the PR-5 steady state).
+                    if self.shed and any(self._req[s] is None
+                                         for s in range(self.slots)):
+                        self._backoff(e, round_no, counters)
+                    continue
+            pages = self.alloc.try_alloc(need)
+            if pages is None:       # raced an injected hold: treat as shed
+                if self.shed:
+                    self._backoff(e, round_no, counters)
+                continue
+            self._pending.remove(e)
+            caches = self._admit_one(e, b, pages, round_no, caches, counters)
+            admitted += 1
+        return admitted, caches
+
+    # -- finish -----------------------------------------------------------
+    def _finish(self, b: int, round_no: int, results: dict) -> None:
+        """Page recycling: the slot's pages go back to the allocator the
+        round its request finishes; the table row falls back to scratch
+        and the slot is immediately admissible.  Deadline accounting and
+        the robustness trail land on the Finished record here."""
+        req = self._req[b]
+        e = self._entry[b]
+        results[req.rid] = Finished(
+            rid=req.rid, prompt_len=req.prompt_len,
+            tokens=list(self._emitted[b]),
+            admit_round=int(self._admit_round[b]), finish_round=round_no,
+            slot=b, preemptions=e.preemptions, sheds=e.sheds,
+            degraded=e.degraded, deadline=req.deadline,
+            deadline_miss=(req.deadline is not None
+                           and round_no > req.deadline))
+        self.alloc.free(self._owned[b])
+        self._owned[b] = []
+        self._table[b, :] = self.scratch
+        self._table_dirty = True
+        self._req[b], self._entry[b] = None, None
+        self._emitted[b], self._ingest[b] = [], []
+        self._resume_tok[b] = None
+        self.pos[b], self.lens[b] = self.max_len - 1, 0
+        self.done[b], self.limit[b] = True, 0
+        if self._use_pen:
+            self._cnt[b] = 0
 
     # -- the loop ---------------------------------------------------------
     def run(self, requests: Sequence[Request]):
         """Serve ``requests`` to completion.  Returns ``(finished, stats)``
         with ``finished`` in input order and ``stats`` covering rounds,
-        mean batch occupancy and the page-pool high-water mark."""
+        mean batch occupancy, the page-pool high-water mark, and the
+        robustness counters (preempt/shed/degrade/deadline/fault)."""
         jnp, jax = self._jnp, self._jax
         for r in requests:
             if r.prompt_len < 1 or r.max_new < 1:
@@ -295,36 +744,56 @@ class ContinuousEngine:
                     f"{self._num_pages(r.prompt_len + r.max_new, self.page)}"
                     f" pages, pool has {self.n_pages - 1} (+1 scratch)")
         order = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        pending = deque(order)
+        self._pending = [_QEntry(req=r, not_before=r.arrival) for r in order]
         results: Dict[int, Finished] = {}
         self.alloc.reset_peak()
+        plan = self.fault_plan
+        if plan is not None:
+            plan.reset()
+        self._held, self._release_at = [], None
+        watchdog = ServeWatchdog(self.watchdog_patience)
+        monitor = StragglerMonitor()
+        counters = {k: 0 for k in (
+            "preemptions", "preempt_swap", "preempt_reingest",
+            "preempt_restart", "resumed", "degraded", "swap_out_bytes",
+            "shed_events", "poisoned_rounds", "nonfinite_prefill",
+            "stragglers", "faults_exhaust", "faults_slow")}
         key = jax.random.key(self.seed)
         caches = self.caches
         round_no = decode_rounds = occ_accum = bursts = 0
 
-        while pending or any(r is not None for r in self._req):
-            # -- admission: fill free slots from the queue ----------------
-            for b in range(self.slots):
-                if not pending or pending[0].arrival > round_no:
-                    break
-                if self._req[b] is not None:
-                    continue
-                req = pending[0]
-                need = self._num_pages(req.prompt_len + req.max_new,
-                                       self.page)
-                if self._reserved_pages() + need > self.n_pages - 1:
-                    break                       # stays queued; retry later
-                pages = self.alloc.try_alloc(
-                    self._num_pages(req.prompt_len, self.page))
-                assert pages is not None  # reservation guard covers this
-                self._table[b, :len(pages)] = pages
-                self._table_dirty = True
-                self._owned[b] = pages
-                self._req[b] = req
-                self._prog[b] = 0
-                self._emitted[b] = []
-                self._admit_round[b] = round_no
-                pending.popleft()
+        def diag():
+            return {"round": round_no,
+                    "pending": [(e.req.rid, e.not_before, e.sheds)
+                                for e in self._pending],
+                    "resident": [r.rid for r in self._req if r is not None],
+                    "pool": self.alloc.stats(),
+                    "held_pages": len(self._held),
+                    "counters": dict(counters)}
+
+        while self._pending or any(r is not None for r in self._req):
+            progress = 0
+
+            # -- fault plan: release expired holds, fire due injections ---
+            if self._held and round_no >= self._release_at:
+                self.alloc.free(self._held)
+                if plan is not None:
+                    plan.note("exhaust_release", round=round_no,
+                              pages=len(self._held))
+                self._held, self._release_at = [], None
+            if plan is not None and not self._held:
+                dur = plan.take_exhaustion(round_no)
+                if dur is not None:
+                    grab = self.alloc.n_free
+                    self._held = self.alloc.alloc(grab) if grab else []
+                    self._release_at = round_no + max(1, dur)
+                    counters["faults_exhaust"] += 1
+                    plan.note("exhaust", round=round_no, pages=grab,
+                              until=self._release_at)
+
+            # -- admission: place queue entries (preempt/degrade/shed) ----
+            admitted, caches = self._admission(round_no, caches, counters)
+            progress += admitted
 
             # -- one prefill chunk per admitting slot, same-offset slots
             #    batched into one call (the t=0 admission wave especially)
@@ -339,28 +808,51 @@ class ContinuousEngine:
                 meta = np.zeros((2, m), np.int32)       # rows / chunk lens
                 meta[0] = rows
                 for i, b in enumerate(rows):
-                    piece = list(self._req[b].tokens[off:off + self.chunk])
+                    piece = self._ingest[b][off:off + self.chunk]
                     buf[i, :len(piece)] = piece
                     meta[1, i] = len(piece)
                 if self.temperature > 0.0:
                     key, sk = jax.random.split(key)
                 else:
                     sk = key
-                tok0, caches = self._chunk_fn(off, m)(
+                cnts = (jnp.asarray(self._cnt[rows]) if self._use_pen
+                        else None)
+                tok0, badp, caches = self._chunk_fn(off, m)(
                     self.params, caches, self._table_device(),
-                    jnp.asarray(buf), jnp.asarray(meta), sk)
-                tok0 = np.asarray(tok0)
+                    jnp.asarray(buf), jnp.asarray(meta), cnts, sk)
+                tok0, badp = np.asarray(tok0), np.asarray(badp)
+                progress += 1
                 for i, b in enumerate(rows):
                     req = self._req[b]
                     self._prog[b] += int(meta[1, i])
-                    if int(self._prog[b]) != req.prompt_len:
+                    if int(self._prog[b]) != len(self._ingest[b]):
+                        continue
+                    if badp[i]:
+                        if plan is not None and plan.mask_poison:
+                            counters["nonfinite_prefill"] += 1
+                        else:
+                            raise PoisonedLogitsError(
+                                f"non-finite prefill logits for request "
+                                f"{req.rid} (slot {b}, round {round_no})")
+                    if self._resume_tok[b] is not None:
+                        # reingest resume: the re-fed tokens only rebuild
+                        # K/V; generation continues from the last emitted
+                        # token exactly where the un-preempted run was
+                        self.tok[b, 0] = self._resume_tok[b]
+                        self._resume_tok[b] = None
+                        self.pos[b] = self.lens[b] = len(self._ingest[b])
+                        self.limit[b] = req.prompt_len + req.max_new - 1
+                        self.done[b] = False
                         continue
                     t0 = int(tok0[i])
                     self._emitted[b] = [t0]
+                    if self._use_pen:
+                        self._cnt[b, t0 % self._cnt.shape[1]] += 1
                     hit_stop = (self.stop_token is not None
                                 and t0 == self.stop_token)
                     if hit_stop or req.max_new == 1:
                         self._finish(b, round_no, results)
+                        progress += 1
                     else:
                         self.tok[b, 0] = t0
                         self.pos[b] = self.lens[b] = req.prompt_len
@@ -372,66 +864,137 @@ class ContinuousEngine:
             still_prefilling = any(
                 self._req[b] is not None and self.done[b]
                 for b in range(self.slots))
+            n_max = 0
             if active:
                 # admission wave: with a deep queue, let up to `admit_wave`
                 # finishes accumulate before handing control back — halves
                 # scheduler round-trips vs reacting to every single finish.
                 # n_max is then capped near the wave-th soonest budget
                 # finish so a lone early finisher never waits long.
-                wave = min(self.admit_wave, len(pending)) if pending else 0
+                wave = (min(self.admit_wave, len(self._pending))
+                        if self._pending else 0)
                 if still_prefilling:
                     # interleave: chunk, a few decode rounds, chunk, ... —
                     # ongoing streams advance while a long prompt prefills
                     n_max = self.prefill_rounds
                 else:
                     n_max = self.burst_cap
-                    if pending:
-                        till = pending[0].arrival - round_no
+                    if self._pending:
+                        till = (min(e.not_before for e in self._pending)
+                                - round_no)
                         if till > 0:
                             n_max = max(1, min(n_max, till))
                         rem = sorted(int(self.limit[b]) - int(self.pos[b])
                                      + 1 for b in active)
                         k = min(wave, len(rem)) - 1
                         n_max = max(1, min(n_max, rem[k] + 1))
-                for b in active:
-                    self._ensure_pages(
-                        b, min(int(self.pos[b]) + n_max - 1,
-                               int(self.limit[b]) - 1))
-                state = np.zeros((7, self.slots), np.int32)
+                # page pressure: a failed lazy alloc preempts a weaker
+                # resident; if none exists the row itself yields its slot
+                for b in list(active):
+                    if b not in active:
+                        continue
+                    tgt = min(int(self.pos[b]) + n_max - 1,
+                              int(self.limit[b]) - 1)
+                    while not self._ensure_pages(b, tgt):
+                        vs = self._victims_for(
+                            self._eff_resident(b, round_no), round_no,
+                            exclude=(b,))
+                        if not vs:
+                            caches = self._preempt(b, round_no, caches,
+                                                   counters, reason="pages")
+                            active.remove(b)
+                            break
+                        caches = self._preempt(vs[0], round_no, caches,
+                                               counters, reason="pages")
+                        if vs[0] in active:
+                            active.remove(vs[0])
+            if active:
+                poison_rel = -1
+                if plan is not None:
+                    p = plan.next_poison(round_no, round_no + int(n_max))
+                    if p is not None:
+                        poison_rel = p - round_no
+                t_start = time.perf_counter()
+                if plan is not None:
+                    stall = plan.take_slow(round_no)
+                    if stall > 0.0:
+                        counters["faults_slow"] += 1
+                        plan.note("slow", round=round_no, seconds=stall)
+                        time.sleep(stall)
+                state = np.zeros((8, self.slots), np.int32)
                 state[0, :] = self.tok[:, 0]
                 state[1], state[2], state[3] = self.pos, self.lens, self.limit
                 state[4] = self.done
                 state[5, 0], state[6, 0] = n_max, wave
-                out, n, state_d, caches, key2 = self._burst(
+                state[7, 0] = poison_rel
+                cnts = jnp.asarray(self._cnt) if self._use_pen else None
+                out, n, state_d, caches, key2, bad_d = self._burst(
                     self.params, caches, self._table_device(),
-                    jnp.asarray(state), key)
+                    jnp.asarray(state), cnts, key)
                 n = int(n)                    # blocks on the burst
                 outs = np.asarray(out[:, :n])  # download only executed cols
                 new_state = np.array(state_d)
+                bad = np.asarray(bad_d)
+                dt = time.perf_counter() - t_start
+                if monitor.record(bursts, dt):
+                    counters["stragglers"] += 1
+                if bad.sum():
+                    if plan is not None and plan.mask_poison:
+                        counters["poisoned_rounds"] += int(bad.max())
+                        plan.note("poison", round=round_no,
+                                  rows=np.nonzero(bad)[0].tolist())
+                    else:
+                        raise PoisonedLogitsError(
+                            f"non-finite decode logits at round {round_no} "
+                            f"(rows {np.nonzero(bad)[0].tolist()}); no "
+                            f"masking fault harness is active")
                 self.tok = new_state[0][:, None].copy()
                 self.pos = new_state[1]
                 if self.temperature > 0.0:
                     key = key2
+                total_ran = 0
                 for b in active:
                     # rounds this row actually ran = its live-length growth
                     ran = int(new_state[2][b]) - int(self.lens[b])
-                    self._emitted[b].extend(int(t) for t in outs[b, :ran])
+                    emitted = [int(t) for t in outs[b, :ran]]
+                    self._emitted[b].extend(emitted)
+                    if self._use_pen and emitted:
+                        v = self._cnt.shape[1]
+                        np.add.at(self._cnt[b],
+                                  np.asarray(emitted, np.int64) % v, 1)
                     occ_accum += ran
+                    total_ran += ran
+                if n > 0 and total_ran == 0:
+                    raise EngineStuckError(
+                        f"decode burst executed {n} rounds without "
+                        f"advancing any of {len(active)} live rows", diag())
                 self.lens = new_state[2]
                 self.done = new_state[3].astype(bool)
                 round_no += n
                 decode_rounds += n
                 bursts += 1
+                progress += n
                 for b in active:
                     if self.done[b]:
                         self._finish(b, round_no, results)
+                        progress += 1
             elif still_prefilling:
                 round_no += 1       # prefill-only round (no decoders yet)
-            elif pending:
-                # idle: nothing active, next request hasn't arrived yet
-                round_no = max(round_no + 1, pending[0].arrival)
+            elif self._pending:
+                # idle: jump to the next event — an arrival, a backoff
+                # window expiring, or an injected exhaustion releasing
+                nxt = [e.not_before for e in self._pending]
+                if self._held:
+                    nxt.append(self._release_at)
+                round_no = max(round_no + 1, min(nxt))
+            watchdog.tick(progress > 0, diag)
 
+        if self._held:              # plan outlived the queue: tidy up
+            self.alloc.free(self._held)
+            self._held, self._release_at = [], None
         self.caches = caches
+        dl = [f for f in results.values() if f.deadline is not None]
+        misses = sum(1 for f in dl if f.deadline_miss)
         stats = {
             "rounds": round_no,
             "decode_rounds": decode_rounds,
@@ -444,5 +1007,10 @@ class ContinuousEngine:
             "n_pages": self.n_pages,
             "fixed_equiv_pages": self.slots * self.max_pages,
             "pages_live_end": self.alloc.n_live - 1,
+            "deadline_total": len(dl),
+            "deadline_misses": misses,
+            "deadline_miss_rate": (misses / len(dl)) if dl else 0.0,
+            "straggler_ewma_s": monitor.ewma,
+            **counters,
         }
         return [results[r.rid] for r in requests], stats

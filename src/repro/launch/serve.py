@@ -31,11 +31,27 @@ through the paged flash read path interleaved with decode rounds, each
 row decodes only to its OWN budget (``while_loop`` bursts exit the round
 any row finishes), and a finished row's pages return to the allocator
 that round.  The queue comes from ``--arrival-trace`` (comma-separated
-``arrival:prompt_len:max_new`` triples, arrivals in decode rounds) or
-defaults to the deterministic heavy-tail trace of the benchmark
-(``engine.synthetic_trace``).  Implies ``--paged``; the printout shows
-per-request admit/finish rounds, slot occupancy, and the page pool's
-high-water mark against the fixed-batch equivalent.
+``arrival:prompt_len:max_new[:priority[:deadline]]`` tuples, arrivals
+and deadlines in decode rounds) or defaults to the deterministic
+heavy-tail trace of the benchmark (``engine.synthetic_trace``).
+Implies ``--paged``; the printout shows per-request admit/finish
+rounds, slot occupancy, and the page pool's high-water mark against
+the fixed-batch equivalent.
+
+The engine's overload controls are exposed directly: ``--priority``
+and ``--deadline-ms`` annotate the queue (milliseconds are converted
+to decode rounds via ``--round-ms``, the assumed per-round latency
+budget), ``--pool-pages`` constrains the page pool so preemption and
+shedding actually engage, ``--preempt free|swap`` picks the eviction
+mechanism, ``--degrade-fmt fp8`` stores swapped victims' K/V in fp8 on
+the host (transprecision graceful degradation; quality-sensitive
+requests refuse it via the trace), ``--no-shed`` restores blocking
+admission, and ``--soak`` swaps in the bursty overload trace with
+injected faults (``--fault-exhaust/--fault-poison/--fault-slow``) —
+the robustness counters (preempted/shed/degraded/deadline-miss) print
+after the run.  Non-finite logits abort serving with
+``PoisonedLogitsError`` unless a masking fault plan is active — the
+solo path enables the same guard via ``generate(guard_nonfinite=)``.
 
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 ``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
@@ -104,9 +120,49 @@ def main(argv=None):
                          "chunked prefill, per-request budgets, page "
                          "recycling (implies --paged)")
     ap.add_argument("--arrival-trace", default=None,
-                    help="comma-separated arrival:prompt_len:max_new "
-                         "triples (arrival in decode rounds); default: the "
-                         "benchmark's synthetic heavy-tail trace")
+                    help="comma-separated arrival:prompt_len:max_new"
+                         "[:priority[:deadline]] tuples (arrival/deadline "
+                         "in decode rounds); default: the benchmark's "
+                         "synthetic heavy-tail trace")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority class stamped on default-trace requests "
+                         "(higher admits first and preempts lower)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline in milliseconds, converted "
+                         "to decode rounds via --round-ms and applied as "
+                         "arrival + rounds; missed deadlines are counted "
+                         "per request and in the stats")
+    ap.add_argument("--round-ms", type=float, default=1.0,
+                    help="assumed per-decode-round latency budget used to "
+                         "convert --deadline-ms to the engine's round clock")
+    ap.add_argument("--shed", dest="shed", action="store_true", default=True,
+                    help="defer unplaceable requests with jittered "
+                         "exponential backoff instead of blocking (default)")
+    ap.add_argument("--no-shed", dest="shed", action="store_false",
+                    help="head-of-line blocking admission (no backoff)")
+    ap.add_argument("--preempt", choices=("free", "swap"), default="free",
+                    help="eviction mechanism under pressure: free pages + "
+                         "re-ingest on resume, or swap K/V pages to a "
+                         "host-side store and restore them")
+    ap.add_argument("--degrade-fmt", default=None,
+                    help="store swapped victims' K/V in this format on the "
+                         "host (e.g. fp8) — transprecision graceful "
+                         "degradation; implies --preempt swap")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="page-pool size override (small pools exercise "
+                         "preemption/shedding; default: worst-case fit)")
+    ap.add_argument("--soak", action="store_true",
+                    help="overload soak: bursty synthetic trace (priorities,"
+                         " deadlines, long documents) + injected faults")
+    ap.add_argument("--fault-exhaust", default=None,
+                    help="comma-separated rounds at which the fault plan "
+                         "grabs the whole free page list for a few rounds")
+    ap.add_argument("--fault-poison", default=None,
+                    help="comma-separated decode rounds whose logits are "
+                         "NaN-poisoned inside the burst (masked + counted)")
+    ap.add_argument("--fault-slow", default=None,
+                    help="comma-separated rounds stalled before their burst "
+                         "(straggler injection)")
     ap.add_argument("--slots", type=int, default=4,
                     help="batch slots of the continuous engine")
     ap.add_argument("--requests", type=int, default=16,
@@ -127,12 +183,14 @@ def main(argv=None):
         ap.error("--continuous subsumes --ragged (per-request lengths)")
     pen = (args.repetition_penalty is not None
            or args.presence_penalty is not None)
-    if pen and (args.loop != "scan" or args.continuous):
+    if pen and args.loop != "scan":
         ap.error("--repetition-penalty / --presence-penalty apply to the "
-                 "scan/while generate() path only")
+                 "scan/while generate() and continuous-engine paths only")
 
     import jax
     import jax.numpy as jnp
+    import numpy as np
+
     from ..models.registry import build_model
 
     model = build_model(args.arch, policy=args.policy, reduced=args.reduced)
@@ -143,43 +201,105 @@ def main(argv=None):
     params = model.init(jax.random.key(0))
 
     if args.continuous:
+        import dataclasses as _dc
+
+        from ..train.fault import ServeFaultPlan
         from .engine import ContinuousEngine, Request, synthetic_trace
+        dl_rounds = (None if args.deadline_ms is None
+                     else max(1, int(args.deadline_ms / args.round_ms)))
         if args.arrival_trace:
             reqs = []
-            for i, triple in enumerate(args.arrival_trace.split(",")):
-                arr, plen, budget = (int(x) for x in triple.split(":"))
+            for i, tup in enumerate(args.arrival_trace.split(",")):
+                parts = [int(x) for x in tup.split(":")]
+                arr, plen, budget = parts[:3]
+                pri = parts[3] if len(parts) > 3 else args.priority
+                dl = (parts[4] if len(parts) > 4
+                      else (arr + dl_rounds if dl_rounds else None))
                 toks = jax.random.randint(jax.random.key(100 + i), (plen,),
                                           0, model.cfg.vocab)
                 reqs.append(Request(rid=i, tokens=[int(t) for t in toks],
-                                    max_new=budget, arrival=arr))
+                                    max_new=budget, arrival=arr,
+                                    priority=pri, deadline=dl))
         else:
-            reqs = synthetic_trace(args.requests, args.slots,
-                                   args.prompt_len, args.gen,
-                                   model.cfg.vocab)
+            reqs = synthetic_trace(
+                args.requests, args.slots, args.prompt_len, args.gen,
+                model.cfg.vocab,
+                flavor="soak" if args.soak else "chat")
+            if args.priority or dl_rounds is not None:
+                reqs = [_dc.replace(
+                    r, priority=r.priority or args.priority,
+                    deadline=(r.arrival + dl_rounds if dl_rounds
+                              else r.deadline)) for r in reqs]
+        plan = None
+        rounds = lambda s: tuple(int(x) for x in s.split(",")) if s else ()
+        if (args.fault_exhaust or args.fault_poison or args.fault_slow
+                or args.soak):
+            plan = ServeFaultPlan(
+                exhaust_at=rounds(args.fault_exhaust) or
+                ((args.gen,) if args.soak else ()),
+                slow_at=rounds(args.fault_slow),
+                poison_at=rounds(args.fault_poison),
+                mask_poison=True)
+        if args.degrade_fmt is not None:
+            args.preempt = "swap"       # degradation rides the swap store
         max_len = max(r.prompt_len + r.max_new for r in reqs)
         eng = ContinuousEngine(model, params, slots=args.slots,
                                max_len=max_len, chunk=args.chunk,
+                               n_pages=args.pool_pages,
                                stop_token=args.stop_token,
                                temperature=args.temperature,
                                top_k=args.top_k, top_p=args.top_p,
-                               seed=args.seed)
+                               seed=args.seed,
+                               repetition_penalty=args.repetition_penalty,
+                               presence_penalty=args.presence_penalty,
+                               preempt=args.preempt,
+                               degrade_fmt=args.degrade_fmt,
+                               shed=args.shed, fault_plan=plan)
         fin, stats = eng.run(reqs)      # compile + warm
         t0 = time.time()
         fin, stats = eng.run(reqs)
         dt = time.time() - t0
         print(f"continuous engine: {args.slots} slots, page="
               f"{args.page_size}, chunk={args.chunk}, "
-              f"{len(reqs)} requests")
+              f"{len(reqs)} requests, pool {stats['n_pages']} pages, "
+              f"preempt={args.preempt}"
+              + (f", degrade={args.degrade_fmt}" if args.degrade_fmt
+                 else ""))
         for f in fin:
+            trail = ""
+            if f.preemptions:
+                trail += f" preempted x{f.preemptions}"
+            if f.sheds:
+                trail += f" shed x{f.sheds}"
+            if f.degraded:
+                trail += " degraded"
+            if f.deadline is not None:
+                trail += (" DEADLINE MISS" if f.deadline_miss
+                          else f" met r{f.deadline}")
             print(f"  req {f.rid:3d}: prompt {f.prompt_len:3d} -> "
                   f"{len(f.tokens):3d} tokens  (slot {f.slot}, admitted "
-                  f"r{f.admit_round}, finished r{f.finish_round})")
+                  f"r{f.admit_round}, finished r{f.finish_round}){trail}")
         n_tok = sum(len(f.tokens) for f in fin)
         print(f"occupancy {stats['occupancy']:.2f} over "
               f"{stats['decode_rounds']} rounds / {stats['bursts']} "
               f"bursts; peak live pages {stats['peak_live_pages']} vs "
               f"{stats['fixed_equiv_pages']} fixed-batch equivalent "
               f"(pool {stats['n_pages']})")
+        print(f"robustness: {stats['preemptions']} preemptions "
+              f"({stats['preempt_swap']} swap / "
+              f"{stats['preempt_reingest']} reingest), "
+              f"{stats['shed_events']} sheds, {stats['degraded']} "
+              f"degraded, {stats['deadline_misses']}/"
+              f"{stats['deadline_total']} deadline misses, "
+              f"{stats['poisoned_rounds']} poisoned rounds masked, "
+              f"{stats['stragglers']} stragglers, "
+              f"{stats['faults_exhaust']} exhaustion episodes")
+        if plan is not None and plan.events:
+            kinds = {}
+            for k, _ in plan.events:
+                kinds[k] = kinds.get(k, 0) + 1
+            print(f"fault log: " + ", ".join(
+                f"{v}x {k}" for k, v in sorted(kinds.items())))
         print(f"{args.arch} [continuous/{args.decode_backend}]: {n_tok} "
               f"tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
         return
@@ -236,19 +356,28 @@ def main(argv=None):
 
     if args.loop == "scan":
         key = jax.random.key(args.seed)
+        # guard_nonfinite: every sampling site sanitizes its logits and
+        # counts guarded rows — finite logits pass through bit-identical,
+        # NaN/Inf ones abort serving instead of emitting garbage tokens
         gen_fn = jax.jit(lambda p, t, pl_, tb: model.generate(
             p, t, gen_len=args.gen, max_len=max_len,
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, key=key, prompt_lens=pl_,
             stop_token=args.stop_token, page_table=tb, n_pages=n_pages,
             repetition_penalty=args.repetition_penalty,
-            presence_penalty=args.presence_penalty)[0])
-        gen = jax.block_until_ready(
+            presence_penalty=args.presence_penalty,
+            guard_nonfinite=True)[::2])
+        gen, bad = jax.block_until_ready(
             gen_fn(params, prompts, prompt_lens, page_table))
         t0 = time.time()
-        gen = jax.block_until_ready(
+        gen, bad = jax.block_until_ready(
             gen_fn(params, prompts, prompt_lens, page_table))
         dt = time.time() - t0
+        if int(jnp.sum(bad)) > 0:
+            from ..train.fault import PoisonedLogitsError
+            raise PoisonedLogitsError(
+                f"non-finite logits at {int(jnp.sum(bad))} sampling steps "
+                f"(rows {np.nonzero(np.asarray(bad))[0].tolist()})")
         n_tok = args.batch * args.gen
         if args.stop_token is not None:
             live_tok = int(jnp.sum(gen != args.stop_token)

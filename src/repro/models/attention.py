@@ -37,6 +37,22 @@ def kv_store_dtype(policy):
     return tp.storage_dtype(policy.param_fmt, policy.mode)
 
 
+def kv_swap_dtype(fmt):
+    """Host-side storage dtype for KV pages swapped out of the pool under
+    a transprecision degrade format (serving-loop preemption): ``fmt`` is
+    a format name or ``FPFormat`` with a native container (``fp8`` ->
+    ``float8_e5m2``, 1 byte/value), so a degraded victim's swapped cache
+    really is 2-4x smaller in host memory; swap-in widens back to the
+    pool dtype.  When the pool itself already stores ``fmt`` (e.g. the
+    ``tp_bf16_kv8`` policy), the round-trip is value-exact."""
+    f = get_format(fmt)
+    if f.native_dtype is None:
+        raise ValueError(
+            f"degrade format {f.name!r} has no native container dtype to "
+            f"swap KV pages into (use fp8/bf16/fp16)")
+    return f.native_dtype
+
+
 def _is_vec(x) -> bool:
     """True for a per-sequence [B] vector (ragged batch), False for the
     scalar (python int / 0-d array) every row shares."""

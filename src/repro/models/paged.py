@@ -134,7 +134,16 @@ class PageAllocator:
     ``peak_live`` — the pool's high-water mark — so a serving loop can prove
     its steady-state occupancy tracks the *sum of live sequence lengths*
     rather than ``batch x max_len`` (``stats()`` snapshots the counters;
-    ``reset_peak()`` restarts the watermark, e.g. after warmup)."""
+    ``reset_peak()`` restarts the watermark, e.g. after warmup).
+
+    Misuse (double free, share of a dead page) raises ``ValueError`` — a
+    first-class error, not an ``assert``: a preemption batch frees many
+    rows' page lists in one sweep, and a bookkeeping bug there must
+    surface identically under ``python -O``.  ``free`` returns the number
+    of pages actually RELEASED to the free list (a shared page whose
+    refcount is still positive stays live), which is what a preempting
+    scheduler must add back to its fit arithmetic — the refcount, not the
+    length of the freed list, decides how many pages a victim donates."""
 
     def __init__(self, n_pages: int):
         assert n_pages > 0, n_pages
@@ -176,19 +185,31 @@ class PageAllocator:
         return {"n_pages": self.n_pages, "n_live": self.n_live,
                 "n_free": self.n_free, "peak_live": self.peak_live}
 
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
+
     def share(self, ids: Sequence[int]) -> List[int]:
         for i in ids:
-            assert self._refs.get(i, 0) > 0, f"share of dead page {i}"
+            if self._refs.get(i, 0) <= 0:
+                raise ValueError(f"share of dead page {i}")
             self._refs[i] += 1
         return list(ids)
 
-    def free(self, ids: Sequence[int]) -> None:
+    def free(self, ids: Sequence[int]) -> int:
+        """Drop one reference per id; returns how many pages were actually
+        released (last reference died).  Raises ``ValueError`` on a double
+        free — including a duplicate id inside ONE call whose references
+        ran out mid-batch (the share-then-preempt footgun)."""
+        released = 0
         for i in ids:
-            assert self._refs.get(i, 0) > 0, f"double free of page {i}"
+            if self._refs.get(i, 0) <= 0:
+                raise ValueError(f"double free of page {i}")
             self._refs[i] -= 1
             if self._refs[i] == 0:
                 del self._refs[i]
                 self._free.append(i)
+                released += 1
+        return released
 
 
 def build_tables(alloc: PageAllocator, batch: int, max_pages: int,

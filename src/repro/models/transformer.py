@@ -128,6 +128,20 @@ def _bump_counts(cnt, tok):
     return cnt.at[jnp.arange(b), tok[:, 0]].add(1)
 
 
+def sanitize_logits(lg):
+    """Non-finite logits guard: NaN/Inf entries go to the same large
+    negative the vocab pad tail uses (unsampleable), and each poisoned row
+    is flagged.  Returns ``(clean [..., V], bad [...])`` — ``bad`` is True
+    where ANY entry of the row was non-finite.  On finite logits the mask
+    is a no-op, so guarded and unguarded sampling stay bit-identical; on a
+    fully-poisoned row every logit collapses to the floor and argmax
+    deterministically picks token 0 — callers decide whether that flag is
+    fatal (fail fast) or counted (fault-harness mask-and-flag)."""
+    lg = lg.astype(F32)
+    finite = jnp.isfinite(lg)
+    return jnp.where(finite, lg, -1e30), ~jnp.all(finite, axis=-1)
+
+
 def _is_paged_leaf(x) -> bool:
     return isinstance(x, paged.PagedKVCache)
 
@@ -716,7 +730,8 @@ class Model:
                  page_table=None, n_pages: Optional[int] = None,
                  repetition_penalty: Optional[float] = None,
                  presence_penalty: Optional[float] = None,
-                 loop: str = "scan", return_trips: bool = False):
+                 loop: str = "scan", return_trips: bool = False,
+                 guard_nonfinite: bool = False):
         """Prefill + decode of ``gen_len`` tokens as ONE compiled program:
         the decode loop is a ``lax.scan`` over ``decode_step``, so the whole
         generation costs a single dispatch instead of one per token (the
@@ -776,10 +791,19 @@ class Model:
         exit).  ``return_trips`` appends the executed decode-round count
         to the return (``gen_len - 1`` for the scan form).
 
+        ``guard_nonfinite=True`` routes every sampling site (prefill
+        last-token logits included) through ``sanitize_logits`` and
+        appends a per-row [B] int32 count of guarded steps to the return —
+        the caller's fail-fast hook (raise when any count is nonzero) or
+        the fault harness's mask-and-flag accounting.  Finite logits are
+        untouched, so guarded greedy decoding stays bit-identical; the
+        default carries no guard state at all.
+
         Returns ``(gen_tokens [B, gen_len], logits)`` where ``logits`` is
         ``[B, gen_len, V]`` (prefill last-token logits followed by each
-        step's) when ``return_logits`` else None; ``(gen, logits, trips)``
-        when ``return_trips``.
+        step's) when ``return_logits`` else None; ``return_trips`` appends
+        the executed decode-round count, ``guard_nonfinite`` appends the
+        per-row guard counts (in that order).
         """
         if loop not in ("scan", "while"):
             raise ValueError(f"loop must be scan|while, got {loop!r}")
@@ -802,7 +826,12 @@ class Model:
                                    page_table=page_table, n_pages=n_pages)
         cnt0 = (token_counts(tokens, self.vocab_out, prompt_lens)
                 if use_pen else None)
-        lg0p = pen(lg0[:, -1], cnt0) if use_pen else lg0[:, -1]
+        guard = guard_nonfinite
+        lg0v = lg0[:, -1]
+        bad0 = None
+        if guard:
+            lg0v, bad0 = sanitize_logits(lg0v)
+        lg0p = pen(lg0v, cnt0) if use_pen else lg0v
         if do_sample:
             key = jax.random.key(0) if key is None else key
             key, k0 = jax.random.split(key)
@@ -830,11 +859,16 @@ class Model:
                 cnt = rest.pop(0)
             if do_sample:
                 ky, step_key = jax.random.split(rest.pop(0))
+            bad_acc = rest.pop(0) if guard else None
             # a done row's live window stays at the length it finished with
             attend = jnp.where(done, lens, pos + 1) if use_stop else None
             lg, c = self.decode_step(params, tok, c, pos, mesh=mesh,
                                      kv_len=attend)
-            lgp = pen(lg[:, -1], cnt) if use_pen else lg[:, -1]
+            lgv = lg[:, -1]
+            bad = None
+            if guard:
+                lgv, bad = sanitize_logits(lgv)
+            lgp = pen(lgv, cnt) if use_pen else lgv
             if do_sample:
                 nxt = pick(lgp, step_key)[:, None]
             else:
@@ -849,6 +883,9 @@ class Model:
                 nc.append(_bump_counts(cnt, nxt))
             if do_sample:
                 nc.append(ky)
+            if guard:
+                live_bad = (bad & ~done) if use_stop else bad
+                nc.append(bad_acc + live_bad.astype(jnp.int32))
             ys = (nxt[:, 0], lg[:, 0]) if return_logits else (nxt[:, 0],)
             return tuple(nc), ys
 
@@ -861,23 +898,30 @@ class Model:
             init.append(cnt0)
         if do_sample:
             init.append(key)
+        if guard:
+            init.append(bad0.astype(jnp.int32))
 
         if loop == "while":
             return self._generate_while(tuple(init), body, tok0, lg0,
                                         gen_len, use_stop=use_stop,
                                         stop_token=stop_token,
                                         return_logits=return_logits,
-                                        return_trips=return_trips)
-        _, ys = jax.lax.scan(body, tuple(init), None, length=gen_len - 1)
+                                        return_trips=return_trips,
+                                        return_bad=guard)
+        fc, ys = jax.lax.scan(body, tuple(init), None, length=gen_len - 1)
         gen = jnp.concatenate([tok0, ys[0].swapaxes(0, 1)], axis=1)
         lgs = (jnp.concatenate([lg0, jnp.moveaxis(ys[1], 0, 1)], axis=1)
                if return_logits else None)
+        out = (gen, lgs)
         if return_trips:
-            return gen, lgs, jnp.asarray(gen_len - 1, jnp.int32)
-        return gen, lgs
+            out += (jnp.asarray(gen_len - 1, jnp.int32),)
+        if guard:
+            out += (fc[-1],)
+        return out
 
     def _generate_while(self, init, body, tok0, lg0, gen_len: int, *,
-                        use_stop, stop_token, return_logits, return_trips):
+                        use_stop, stop_token, return_logits, return_trips,
+                        return_bad: bool = False):
         """``generate``'s early-exit form: a ``lax.while_loop`` over the
         SAME scan step body (bit-parity by construction), exiting the
         round every row is done.  The token buffer is pre-frozen to
@@ -916,9 +960,12 @@ class Model:
         fin = jax.lax.while_loop(cond, wbody, tuple(head) + init)
         gen, trips = fin[1], fin[0]
         lgs = fin[2] if return_logits else None
+        out = (gen, lgs)
         if return_trips:
-            return gen, lgs, trips
-        return gen, lgs
+            out += (trips,)
+        if return_bad:
+            out += (fin[-1],)     # guard counts ride last in the carry
+        return out
 
     def decode_step(self, params, token, caches: Caches, pos, *, mesh=None,
                     kv_len=None):
@@ -1001,7 +1048,10 @@ class Model:
     def decode_round(self, params, tok, caches: Caches, pos, *, lens, done,
                      stop_token: Optional[int] = None,
                      temperature: float = 0.0, top_k: Optional[int] = None,
-                     top_p: Optional[float] = None, key=None, mesh=None):
+                     top_p: Optional[float] = None, key=None, mesh=None,
+                     counts=None, repetition_penalty: Optional[float] = None,
+                     presence_penalty: Optional[float] = None,
+                     poison=None, guard: bool = False):
         """ONE decode round over every batch slot of a continuous batch:
         ``decode_step`` at per-row write index ``pos``, attending each
         row's live window (``lens`` for done/idle rows, ``pos + 1`` for
@@ -1009,28 +1059,52 @@ class Model:
         keep writing into dead slots; idle slots (``lens == 0``) attend
         nothing and emit garbage the scheduler ignores.  All row state is
         traced — admission, page recycling and EOS churn between rounds
-        never retrace.  Returns ``(next_tok [B,1], logits, caches, key)``;
-        the SCHEDULER owns pos/lens/done advancement (see decode_burst
-        for the compiled multi-round form)."""
+        never retrace.
+
+        ``counts`` [B, V] + ``repetition_penalty``/``presence_penalty``
+        apply the same seen-token discounts as ``generate`` (raw logits,
+        before temperature/top-k/top-p); the caller owns count upkeep.
+        ``poison`` (traced bool, fault injection) overwrites the round's
+        logits with NaN; ``guard=True`` routes sampling through
+        ``sanitize_logits`` — bit-identical on finite logits — and appends
+        the per-row ``bad`` flag to the return.  Returns ``(next_tok
+        [B,1], logits, caches, key[, bad])``; the SCHEDULER owns
+        pos/lens/done advancement (see decode_burst for the compiled
+        multi-round form)."""
         attend = jnp.where(done, lens, pos + 1)
         lg, caches = self.decode_step(params, tok, caches, pos, mesh=mesh,
                                       kv_len=attend)
+        lgv = lg[:, -1]
+        if poison is not None:
+            lgv = jnp.where(jnp.asarray(poison), jnp.nan, lgv)
+        bad = None
+        if guard:
+            lgv, bad = sanitize_logits(lgv)
+        if counts is not None:
+            lgv = apply_penalties(lgv, counts,
+                                  repetition_penalty=repetition_penalty,
+                                  presence_penalty=presence_penalty)
         if temperature is not None and temperature > 0.0:
             key, sk = jax.random.split(jax.random.key(0)
                                        if key is None else key)
-            nxt = sample_token(lg[:, -1], sk, temperature=temperature,
+            nxt = sample_token(lgv, sk, temperature=temperature,
                                top_k=top_k, top_p=top_p)[:, None]
         else:
-            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            nxt = jnp.argmax(lgv, -1).astype(jnp.int32)[:, None]
         if stop_token is not None:
             nxt = jnp.where(done[:, None], stop_token, nxt)
+        if guard:
+            return nxt, lg, caches, key, bad
         return nxt, lg, caches, key
 
     def decode_burst(self, params, tok, caches: Caches, pos, lens, done,
                      limit, *, max_len: int, out_width: int, n_max,
                      exit_on_finish, stop_token: Optional[int] = None,
                      temperature: float = 0.0, top_k: Optional[int] = None,
-                     top_p: Optional[float] = None, key=None, mesh=None):
+                     top_p: Optional[float] = None, key=None, mesh=None,
+                     counts=None, repetition_penalty: Optional[float] = None,
+                     presence_penalty: Optional[float] = None,
+                     poison_at=None, guard: bool = False):
         """Up to ``n_max`` continuous-batching decode rounds as ONE
         compiled ``lax.while_loop`` — the engine's steady-state dispatch
         cost amortizes like the scan path's.
@@ -1051,18 +1125,35 @@ class Model:
         ``exit_on_finish`` and all row state are traced: bursts of any
         shape share one compiled program.
 
+        Robustness hooks (launch/engine.py): ``counts`` [B, V] rides the
+        carry and applies ``repetition_penalty``/``presence_penalty`` at
+        every round exactly like ``generate``'s count carry (the caller
+        seeds the histogram and re-syncs it between bursts);
+        ``poison_at`` (traced int, ``-1`` = never) NaN-poisons that
+        relative round's logits — deterministic fault injection;
+        ``guard=True`` masks non-finite logits before sampling and counts
+        each live row's poisoned rounds.
+
         Returns ``(out [B, out_width], n_steps, tok, caches, pos, lens,
-        done, key)`` — ``out[:, :n_steps]`` holds each round's emitted
-        token per row (rows already done emit ``stop_token``/pad)."""
+        done, key[, bad][, counts])`` — ``out[:, :n_steps]`` holds each
+        round's emitted token per row (rows already done emit
+        ``stop_token``/pad); ``bad`` [B] int32 (when ``guard``) counts
+        rounds a live row's logits went non-finite; ``counts`` (when
+        penalties are active) is the advanced histogram."""
         b = tok.shape[0]
         do_sample = temperature is not None and temperature > 0.0
         if do_sample and key is None:
             key = jax.random.key(0)
+        use_pen = counts is not None and (
+            (repetition_penalty is not None and repetition_penalty != 1.0)
+            or (presence_penalty is not None and presence_penalty != 0.0))
         done0 = done
         pad = stop_token if stop_token is not None else -1
         out0 = jnp.full((b, out_width), pad, jnp.int32)
         n_max = jnp.asarray(n_max, jnp.int32)
         zero = jnp.zeros((), jnp.int32)
+        poison_at = (None if poison_at is None
+                     else jnp.asarray(poison_at, jnp.int32))
 
         wave = jnp.asarray(exit_on_finish, jnp.int32)
 
@@ -1074,11 +1165,20 @@ class Model:
 
         def body(c):
             i, out, tok, caches, pos, lens, done = c[:7]
-            nxt, _, caches, ky = self.decode_round(
+            extra = list(c[7:])
+            cnt = extra.pop(0) if use_pen else None
+            badc = extra.pop(0) if guard else None
+            r = self.decode_round(
                 params, tok, caches, pos, lens=lens, done=done,
                 stop_token=stop_token, temperature=temperature,
                 top_k=top_k, top_p=top_p,
-                key=c[7] if do_sample else None, mesh=mesh)
+                key=extra.pop(0) if do_sample else None, mesh=mesh,
+                counts=cnt if use_pen else None,
+                repetition_penalty=repetition_penalty,
+                presence_penalty=presence_penalty,
+                poison=(i == poison_at) if poison_at is not None else None,
+                guard=guard)
+            nxt, _, caches, ky = r[:4]
             out = jax.lax.dynamic_update_slice(out, nxt, (zero, i))
             fin = done | (pos + 1 >= limit)
             if stop_token is not None:
@@ -1087,12 +1187,29 @@ class Model:
                                 jnp.minimum(pos + 1, max_len - 1))
             new_lens = jnp.where(done, lens, pos + 1)
             nc = (i + 1, out, nxt, caches, new_pos, new_lens, fin)
+            if use_pen:
+                nc += (_bump_counts(cnt, nxt),)
+            if guard:
+                # attribute poisoned rounds to rows live entering the round
+                nc += (badc + (r[4] & ~done).astype(jnp.int32),)
             return nc + ((ky,) if do_sample else ())
 
         init = (zero, out0, tok, caches, pos, lens, done)
+        if use_pen:
+            init += (counts,)
+        if guard:
+            init += (jnp.zeros((b,), jnp.int32),)
         if do_sample:
             init += (key,)
         fin = jax.lax.while_loop(cond, body, init)
         n, out, tok, caches, pos, lens, done = fin[:7]
-        return (out, n, tok, caches, pos, lens, done,
-                fin[7] if do_sample else key)
+        extra = list(fin[7:])
+        cnt_out = extra.pop(0) if use_pen else None
+        bad_out = extra.pop(0) if guard else None
+        ret = (out, n, tok, caches, pos, lens, done,
+               extra.pop(0) if do_sample else key)
+        if guard:
+            ret += (bad_out,)
+        if use_pen:
+            ret += (cnt_out,)
+        return ret

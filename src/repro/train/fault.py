@@ -12,6 +12,17 @@ This module provides the process-level pieces that are testable on CPU:
     and the fault-tolerance example,
   * :func:`run_with_restarts` — supervisor loop: run -> crash -> restore
     from the latest checkpoint -> continue, bounded retries.
+
+Serving-side counterparts (launch/engine.py drives these off its decode-
+round clock instead of the training step counter):
+  * :class:`ServeFaultPlan` — deterministic injection of page-pool
+    exhaustion episodes, slow-burst stragglers and NaN-poisoned logits at
+    chosen rounds (same replayability contract as :class:`FailurePlan`:
+    one plan + one queue -> one trajectory),
+  * :class:`ServeWatchdog` — consecutive no-progress detector that turns
+    a livelocked scheduler loop into a clean :class:`EngineStuckError`,
+  * :class:`PoisonedLogitsError` — non-finite logits reached a sampler
+    outside a masking fault harness (fail fast, don't emit garbage).
 """
 from __future__ import annotations
 
@@ -63,6 +74,111 @@ class FailurePlan:
         if step in self.fail_at and step not in self.raised:
             self.raised.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+class PoisonedLogitsError(RuntimeError):
+    """Non-finite logits reached a sampling site with no fault harness
+    masking them — the serving loop fails fast instead of silently
+    emitting argmax-of-garbage token 0."""
+
+
+class EngineStuckError(RuntimeError):
+    """The serving watchdog tripped: the scheduler kept iterating without
+    admitting, prefilling, decoding or finishing anything.  ``diag``
+    carries the engine's slot/queue/pool snapshot at abort time."""
+
+    def __init__(self, msg: str, diag: Optional[dict] = None):
+        super().__init__(msg)
+        self.diag = diag or {}
+
+
+@dataclasses.dataclass
+class ServeFaultPlan:
+    """Deterministic serving-path fault injection, keyed to the engine's
+    decode-round clock (the logical time admission/preemption already run
+    on, so a plan + a queue replays to the same trajectory bit for bit).
+
+    ``exhaust_at``: rounds at which the engine grabs the allocator's
+    entire free list and holds it for ``exhaust_for`` rounds — admission
+    and lazy page growth must survive ``try_alloc`` returning ``None``.
+    ``slow_at``: rounds before whose burst the engine sleeps ``slow_s``
+    seconds — a slow-burst straggler the :class:`StragglerMonitor` must
+    flag.  ``poison_at``: decode rounds whose logits are overwritten with
+    NaN inside the compiled burst; ``mask_poison=True`` lets the guard
+    mask-and-count them, ``False`` makes the engine raise
+    :class:`PoisonedLogitsError` (fail-fast mode).
+
+    The plan is reusable: the engine calls :meth:`reset` at run start, so
+    replaying the same plan object is deterministic.  ``events`` logs
+    every injection actually fired (round, kind, payload)."""
+    exhaust_at: tuple = ()
+    exhaust_for: int = 4
+    slow_at: tuple = ()
+    slow_s: float = 0.05
+    poison_at: tuple = ()
+    mask_poison: bool = True
+
+    def __post_init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self._fired_exhaust: set = set()
+        self._fired_slow: set = set()
+        self.events: list = []
+
+    def note(self, kind: str, **kw) -> None:
+        self.events.append((kind, kw))
+
+    def take_exhaustion(self, round_no: int) -> Optional[int]:
+        """Duration of an exhaustion episode starting by ``round_no``
+        (each listed round fires once; catch-up included — the engine's
+        round clock can jump over idle stretches), else None."""
+        due = [r for r in self.exhaust_at
+               if r <= round_no and r not in self._fired_exhaust]
+        if not due:
+            return None
+        self._fired_exhaust.update(due)
+        return self.exhaust_for
+
+    def take_slow(self, round_no: int) -> float:
+        """Seconds of straggler stall due at ``round_no`` (0.0 if none)."""
+        due = [r for r in self.slow_at
+               if r <= round_no and r not in self._fired_slow]
+        self._fired_slow.update(due)
+        return self.slow_s * len(due)
+
+    def next_poison(self, lo: int, hi: int) -> Optional[int]:
+        """First poisoned round in ``[lo, hi)`` — the engine converts it
+        to a burst-relative index.  Stateless: the round window advances
+        monotonically, and a burst that exits before reaching the round
+        re-schedules it in the next window."""
+        hits = [r for r in self.poison_at if lo <= r < hi]
+        return min(hits) if hits else None
+
+
+class ServeWatchdog:
+    """Turns scheduler livelock into a clean abort: ``tick(False)`` for
+    ``patience`` consecutive loop iterations (no admission, no prefill
+    progress, no decode rounds, no finishes) raises
+    :class:`EngineStuckError` with the caller's diagnostics snapshot.
+    Any real progress resets the counter — waiting out backoff windows or
+    a bounded exhaustion episode is fine; waiting forever is not."""
+
+    def __init__(self, patience: int = 200):
+        assert patience >= 1
+        self.patience = patience
+        self.stalled = 0
+
+    def tick(self, progressed: bool, diag=None) -> None:
+        if progressed:
+            self.stalled = 0
+            return
+        self.stalled += 1
+        if self.stalled >= self.patience:
+            d = diag() if callable(diag) else (diag or {})
+            raise EngineStuckError(
+                f"serving loop made no progress for {self.stalled} "
+                f"consecutive iterations: {d}", d)
 
 
 def run_with_restarts(make_runner: Callable[[], "object"],

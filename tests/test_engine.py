@@ -338,6 +338,27 @@ def test_engine_stop_token_frees_early():
     assert eng.alloc.n_live == 1
 
 
+def test_engine_penalties_match_solo_generate(engine_run):
+    """Repetition/presence penalties threaded through the continuous
+    path (count histograms seeded at admission, bumped inside the burst
+    carry, re-seeded across bursts) emit exactly what solo generate's
+    penalty carry produces — the --continuous flags behave like the solo
+    ones."""
+    model, params, reqs, _, _, _ = engine_run
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           repetition_penalty=1.3, presence_penalty=0.4)
+    sub = reqs[:5]
+    fin, _ = eng.run(sub)
+    gen = jax.jit(lambda p, t, g: model.generate(
+        p, t, gen_len=g, max_len=48, repetition_penalty=1.3,
+        presence_penalty=0.4)[0], static_argnums=2)
+    for r, f in zip(sub, fin):
+        want = np.asarray(gen(params, jnp.asarray(r.tokens, jnp.int32)[None],
+                              r.max_new))[0].tolist()
+        assert f.tokens == want, (r.rid, f.tokens, want)
+    assert eng._burst._cache_size() == 1       # penalties don't retrace
+
+
 def test_engine_refuses_unpageable_and_unpaged():
     model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
     params = model.init(jax.random.key(0))

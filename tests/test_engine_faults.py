@@ -1,0 +1,276 @@
+"""Preemption, backpressure, degradation and fault injection for the
+continuous-batching engine.
+
+Contract under test (the robustness half of the serving story):
+
+  * preempt-resume parity — a row evicted under pressure and resumed
+    later emits exactly the tokens of an un-preempted solo run, on BOTH
+    mechanisms: ``preempt="free"`` (chunked re-ingest of prompt+emitted)
+    and ``preempt="swap"`` (K/V pages round-tripped through a host-side
+    numpy store).  With the fp8 KV policy the degraded swap store is
+    value-exact too.
+  * graceful degradation — ``degrade_fmt="fp8"`` on a bf16 pool is lossy
+    but tracked (``Finished.degraded``); ``Request.no_degrade`` opts a
+    quality-sensitive request out and keeps it bit-exact.
+  * fault-plan replay — the same plan + the same queue produce the same
+    tokens, the same counters and the same injection event log, twice.
+  * deadlines — impossible deadlines are counted as misses, generous
+    ones are not, and the per-request flag lands on ``Finished``.
+  * overload soak — a bursty over-committed trace with injected
+    exhaustion, stragglers and poisoned logits drains COMPLETELY (every
+    request finishes with its full budget; nothing is lost or stuck).
+  * failure modes — unmasked poisoned logits fail fast
+    (``PoisonedLogitsError``); a livelocked loop aborts cleanly
+    (``EngineStuckError`` with diagnostics) instead of hanging.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.engine import ContinuousEngine, Request, synthetic_trace
+from repro.models.registry import build_model
+from repro.train.fault import (EngineStuckError, PoisonedLogitsError,
+                               ServeFaultPlan, ServeWatchdog,
+                               StragglerMonitor)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model("gemma2-9b", policy="tp_bf16",
+                        reduced=True).with_cfg(paged_kv=True, page_size=16)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def _solo(model, params, req, **gen_kw):
+    g = jax.jit(lambda p, t, n: model.generate(
+        p, t, gen_len=n, max_len=48, **gen_kw)[0], static_argnums=2)
+    return np.asarray(g(params, jnp.asarray(req.tokens, jnp.int32)[None],
+                        req.max_new))[0].tolist()
+
+
+def _pressure_queue(vocab, seed=0, no_degrade=False):
+    """Two low-priority residents fill a 5-page pool; a priority-2
+    arrival at round 4 cannot fit without preempting one of them."""
+    rng = np.random.RandomState(seed)
+    mk = lambda n: rng.randint(0, vocab, size=n).tolist()
+    return [Request(rid=0, tokens=mk(20), max_new=12, arrival=0,
+                    no_degrade=no_degrade),
+            Request(rid=1, tokens=mk(20), max_new=12, arrival=0),
+            Request(rid=2, tokens=mk(16), max_new=8, arrival=4, priority=2)]
+
+
+# ---------------------------------------------------------------------------
+# preempt-resume parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["free", "swap"])
+def test_preempt_resume_bit_parity(setup, mode):
+    """The victim of a priority preemption, resumed after the intruder
+    drains, emits EXACTLY its un-preempted solo tokens — whether its
+    continuation was re-ingested ("free") or swapped to host ("swap")."""
+    model, params = setup
+    reqs = _pressure_queue(model.cfg.vocab)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=5, preempt=mode)
+    fin, stats = eng.run(reqs)
+    assert stats["preemptions"] >= 1 and stats["resumed"] >= 1
+    assert stats["preempt_swap" if mode == "swap"
+                 else "preempt_reingest"] >= 1
+    victims = [f for f in fin if f.preemptions > 0]
+    assert victims, "pressure scenario failed to preempt anyone"
+    for r, f in zip(reqs, fin):
+        assert f.tokens == _solo(model, params, r), (mode, r.rid)
+        assert len(f.tokens) == r.max_new
+
+
+def test_degraded_swap_is_exact_on_fp8_pool():
+    """Policy tp_bf16_kv8 already stores K/V in fp8 — the degraded swap
+    store is the pool's own container, so the round-trip is value-exact
+    and the preempted row stays bit-identical to its solo run."""
+    model = build_model("gemma2-9b", policy="tp_bf16_kv8",
+                        reduced=True).with_cfg(paged_kv=True, page_size=16)
+    params = model.init(jax.random.key(0))
+    reqs = _pressure_queue(model.cfg.vocab)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=5, preempt="swap", degrade_fmt="fp8")
+    fin, stats = eng.run(reqs)
+    assert stats["degraded"] >= 1
+    assert any(f.degraded for f in fin)
+    for r, f in zip(reqs, fin):
+        assert f.tokens == _solo(model, params, r), r.rid
+
+
+def test_degrade_tracked_and_refusable(setup):
+    """On a bf16 pool the fp8 swap store is lossy: the victim is flagged
+    ``degraded`` (tokens may drift — that's the graceful part) and keeps
+    its full budget.  A ``no_degrade`` victim swaps at full width
+    instead: unflagged and bit-exact."""
+    model, params = setup
+    for refuse in (False, True):
+        reqs = _pressure_queue(model.cfg.vocab, no_degrade=refuse)
+        eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                               n_pages=5, preempt="swap", degrade_fmt="fp8")
+        fin, stats = eng.run(reqs)
+        victims = [f for f in fin if f.preemptions > 0]
+        assert victims
+        for f in victims:
+            assert len(f.tokens) == reqs[f.rid].max_new
+            if refuse and f.rid == 0:
+                assert not f.degraded
+                assert f.tokens == _solo(model, params, reqs[0])
+        if not refuse:
+            assert stats["degraded"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# fault-plan replay + injections
+# ---------------------------------------------------------------------------
+def test_fault_plan_replay_deterministic(setup):
+    """Same plan + same queue -> same tokens, same robustness counters,
+    same injection event log.  Exhaustion, a straggler stall and masked
+    poison all fire."""
+    model, params = setup
+    reqs = synthetic_trace(8, 2, 16, 16, model.cfg.vocab, flavor="soak")
+    plan = ServeFaultPlan(exhaust_at=(6,), exhaust_for=3,
+                          slow_at=(3,), slow_s=0.01,
+                          poison_at=tuple(range(8, 13)), mask_poison=True)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=5, fault_plan=plan)
+    fin1, st1 = eng.run(reqs)
+    ev1 = list(plan.events)
+    fin2, st2 = eng.run(reqs)
+    assert [f.tokens for f in fin1] == [f.tokens for f in fin2]
+    for k in ("rounds", "preemptions", "shed_events", "poisoned_rounds",
+              "faults_exhaust", "faults_slow", "deadline_misses"):
+        assert st1[k] == st2[k], k
+    assert ev1 == list(plan.events)
+    assert st1["faults_exhaust"] >= 1
+    assert st1["faults_slow"] >= 1
+    assert st1["poisoned_rounds"] >= 1
+    assert len(fin1) == len(reqs)
+
+
+def test_poison_fail_fast_without_masking(setup):
+    """Unmasked NaN logits must raise, not emit argmax-of-garbage."""
+    model, params = setup
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=0, tokens=rng.randint(
+        0, model.cfg.vocab, size=8).tolist(), max_new=8)]
+    plan = ServeFaultPlan(poison_at=tuple(range(0, 40)), mask_poison=False)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           fault_plan=plan)
+    with pytest.raises(PoisonedLogitsError):
+        eng.run(reqs)
+
+
+def test_watchdog_aborts_livelock(setup):
+    """shed=False + a never-released exhaustion hold = a loop that can
+    never place its request: the watchdog must abort with diagnostics
+    instead of spinning forever."""
+    model, params = setup
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=0, tokens=rng.randint(
+        0, model.cfg.vocab, size=8).tolist(), max_new=4)]
+    plan = ServeFaultPlan(exhaust_at=(0,), exhaust_for=10**6)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=4, shed=False, fault_plan=plan,
+                           watchdog_patience=10)
+    with pytest.raises(EngineStuckError) as ei:
+        eng.run(reqs)
+    assert ei.value.diag["pool"]["n_free"] == 0
+    assert ei.value.diag["pending"]
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+def test_deadline_accounting(setup):
+    model, params = setup
+    rng = np.random.RandomState(0)
+    mk = lambda n: rng.randint(0, model.cfg.vocab, size=n).tolist()
+    reqs = [Request(rid=0, tokens=mk(8), max_new=4, deadline=2),
+            Request(rid=1, tokens=mk(8), max_new=4, deadline=200),
+            Request(rid=2, tokens=mk(8), max_new=4)]
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16)
+    fin, stats = eng.run(reqs)
+    assert fin[0].deadline_miss and fin[0].deadline == 2
+    assert not fin[1].deadline_miss
+    assert fin[2].deadline is None and not fin[2].deadline_miss
+    assert stats["deadline_total"] == 2
+    assert stats["deadline_misses"] == 1
+    assert stats["deadline_miss_rate"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# the overload soak: bursty arrivals + long documents + injected faults
+# must drain completely on a constrained pool
+# ---------------------------------------------------------------------------
+def test_soak_drains_under_faults(setup):
+    model, params = setup
+    reqs = synthetic_trace(12, 2, 16, 16, model.cfg.vocab, flavor="soak")
+    plan = ServeFaultPlan(exhaust_at=(5, 30), exhaust_for=3,
+                          slow_at=(3,), slow_s=0.005,
+                          poison_at=(7, 8, 9), mask_poison=True)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=5, preempt="swap", degrade_fmt="fp8",
+                           fault_plan=plan)
+    fin, stats = eng.run(reqs)
+    # zero stuck, zero lost: every request finishes with its FULL budget
+    assert len(fin) == len(reqs)
+    for r, f in zip(reqs, fin):
+        assert f.rid == r.rid and len(f.tokens) == r.max_new
+    # the pool was genuinely over-committed: pressure machinery engaged
+    assert stats["preemptions"] + stats["shed_events"] > 0
+    assert stats["faults_exhaust"] >= 1
+    assert stats["deadline_total"] >= 1
+    # pages drained back (scratch only) and the trail is well-formed
+    assert eng.alloc.n_live == 1
+    assert stats["pages_live_end"] == 0
+    assert 0.0 <= stats["deadline_miss_rate"] <= 1.0
+
+
+def test_soak_trace_deterministic_and_mixed():
+    a = synthetic_trace(16, 2, 16, 16, 64, flavor="soak")
+    b = synthetic_trace(16, 2, 16, 16, 64, flavor="soak")
+    assert [(r.tokens, r.arrival, r.priority, r.deadline, r.no_degrade)
+            for r in a] == \
+           [(r.tokens, r.arrival, r.priority, r.deadline, r.no_degrade)
+            for r in b]
+    assert {r.priority for r in a} == {0, 1, 2}
+    assert any(r.deadline is not None for r in a)
+    assert any(r.no_degrade for r in a)
+    with pytest.raises(ValueError):
+        synthetic_trace(4, 2, 16, 16, 64, flavor="nope")
+
+
+# ---------------------------------------------------------------------------
+# fault primitives (no model)
+# ---------------------------------------------------------------------------
+def test_serve_fault_plan_primitives():
+    plan = ServeFaultPlan(exhaust_at=(3, 5), exhaust_for=2,
+                          slow_at=(4,), slow_s=0.5, poison_at=(6, 9))
+    # catch-up: a round-clock jump over both listed rounds fires once
+    assert plan.take_exhaustion(10) == 2
+    assert plan.take_exhaustion(10) is None
+    assert plan.take_slow(4) == 0.5
+    assert plan.take_slow(4) == 0.0
+    assert plan.next_poison(0, 7) == 6
+    assert plan.next_poison(7, 20) == 9
+    assert plan.next_poison(10, 20) is None
+    plan.reset()
+    assert plan.take_exhaustion(10) == 2      # reusable after reset
+
+
+def test_serve_watchdog_and_straggler_monitor():
+    wd = ServeWatchdog(patience=3)
+    wd.tick(False), wd.tick(False)
+    wd.tick(True)                              # progress resets
+    wd.tick(False), wd.tick(False)
+    with pytest.raises(EngineStuckError):
+        wd.tick(False, diag=lambda: {"where": "here"})
+    mon = StragglerMonitor(warmup=2)
+    flags = [mon.record(i, 0.01) for i in range(5)]
+    assert not any(flags)
+    assert mon.record(5, 0.5)                  # 50x the EWMA: flagged
+    assert mon.flagged and mon.flagged[0][0] == 5

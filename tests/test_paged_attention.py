@@ -261,7 +261,7 @@ def test_allocator_reuse_after_free():
     assert again[0] == 1 and set(first[:1] + first[2:] + again) == {0, 1, 2, 3}
     with pytest.raises(MemoryError):
         a.alloc(1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         a.free([1, 1, 1])              # more frees than references
 
 
@@ -269,10 +269,59 @@ def test_allocator_shared_pages_survive_partial_free():
     a = PageAllocator(6)
     prefix = a.alloc(2)
     a.share(prefix)                    # two rows reference the prefix
-    a.free(prefix)                     # row 0 leaves
+    assert a.free(prefix) == 0         # row 0 leaves; nothing released yet
     assert a.n_live == 2               # row 1 still holds them
-    a.free(prefix)                     # row 1 leaves
+    assert a.free(prefix) == 2         # row 1 leaves; pages really return
     assert a.n_live == 0 and a.n_free == 6
+
+
+def test_allocator_free_shared_id_in_preemption_batch():
+    # a preemption sweep frees a victim's whole page list in one call;
+    # pages shared with a surviving row must NOT return to the free list,
+    # and the released count must reflect the refcounts, not the list
+    a = PageAllocator(8)
+    shared = a.alloc(2)
+    private = a.alloc(3)
+    a.share(shared)                    # surviving row references the prefix
+    released = a.free(shared + private)          # victim preempted
+    assert released == 3               # only the private pages came back
+    assert a.n_live == 2 and a.n_free == 6
+    # survivor's view is intact: its pages cannot be re-allocated
+    assert set(a.alloc(6)).isdisjoint(shared)
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    assert a.free(shared) == 2         # survivor leaves; pool drains
+    assert a.n_live == 6
+
+
+def test_allocator_double_free_and_dead_share_raise():
+    a = PageAllocator(4)
+    ids = a.alloc(2)
+    a.free(ids)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([ids[0]])
+    with pytest.raises(ValueError, match="dead page"):
+        a.share([ids[1]])
+    # a duplicate id inside ONE call trips once the references run out
+    b = a.alloc(1)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([b[0], b[0]])
+
+
+def test_allocator_try_alloc_exhaustion_probe():
+    # try_alloc is the admission probe: a miss must not mutate anything,
+    # and a later free must make the same probe succeed (the engine's
+    # worst-case reservation can race injected exhaustion — the probe,
+    # not the reservation arithmetic, is the ground truth)
+    a = PageAllocator(4)
+    held = a.alloc(3)
+    assert a.try_alloc(2) is None
+    assert a.n_free == 1 and a.n_live == 3       # probe left no trace
+    got = a.try_alloc(1)
+    assert got is not None and a.n_free == 0
+    a.free(held[:2])
+    assert a.try_alloc(2) is not None            # freed pages admit again
+    assert a.n_free == 0
 
 
 def test_build_tables_shared_prefix_layout():
