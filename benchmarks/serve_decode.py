@@ -211,6 +211,13 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     # budget — with the preempt/shed/degrade/deadline counters recorded.)
     row.update(robustness_soak(arch, prompt_len=prompt_len, quick=quick))
 
+    # -- numerical health: flag-telemetry overhead + escalation/SDC soak ----
+    # (the PR-7 machinery: IEEE flag counters in the decode kernel, flag-
+    # driven KV-precision escalation, checksummed swap payloads.)
+    row.update(flag_overhead(repeats=repeats))
+    row.update(numerical_health_soak(arch, prompt_len=prompt_len,
+                                     quick=quick))
+
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
     return row
@@ -387,6 +394,150 @@ def robustness_soak(arch: str, *, prompt_len: int, quick: bool = False,
     }
 
 
+def flag_overhead(repeats: int = 3) -> dict:
+    """Flag-telemetry overhead A/B on the fused decode kernel.
+
+    Times ``kernels.ops.decode_attention`` over an fp8-container ragged KV
+    strip with ``return_flags`` off vs on — the cost of accumulating the
+    per-block IEEE OF/UF/NX/NV counters alongside the attention math
+    (docs/KERNELS.md).  On CPU both sides run the Pallas interpreter, so
+    the ratio is a loose upper bound; on TPU the counters are a handful of
+    vector compares + integer adds per visited tile."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.policy import get_policy
+    from repro.kernels import ops as kops
+
+    pol = get_policy("em_fp8").replace(kv_fmt="fp8")
+    rs = np.random.RandomState(0)
+    b, h, hkv, s, d = 4, 8, 2, 256, 64
+    q = jnp.asarray(rs.randn(b, h, 1, d), jnp.float32)
+    k = jnp.asarray(rs.randn(b, hkv, s, d), jnp.float32)
+    v = jnp.asarray(rs.randn(b, hkv, s, d), jnp.float32)
+    kv_len = jnp.asarray([s, s // 2, 3, s], jnp.int32)
+
+    plain = jax.jit(lambda q, k, v, l: kops.decode_attention(
+        q, k, v, kv_len=l, policy=pol, interpret=True))
+    flagged = jax.jit(lambda q, k, v, l: kops.decode_attention(
+        q, k, v, kv_len=l, policy=pol, interpret=True, return_flags=True))
+    t_off = _time_call(lambda: plain(q, k, v, kv_len), repeats)
+    t_on = _time_call(lambda: flagged(q, k, v, kv_len)[0], repeats)
+    return {
+        "flag_decode_ms": t_off * 1e3,
+        "flag_decode_flags_ms": t_on * 1e3,
+        "flag_telemetry_overhead": t_on / t_off,
+    }
+
+
+def numerical_health_soak(arch: str, *, prompt_len: int,
+                          quick: bool = False, slots: int = 4,
+                          gen: int = 48, n_req: int = 12) -> dict:
+    """Deterministic numerical-health soak: escalation + SDC-checked swap.
+
+    Two engine runs prove the numerical-health gates end-to-end:
+
+    * **escalation leg** — the fp32 wide-container pool with the
+      ``fp8 -> fp16 -> fp16alt`` ladder and an injected write-side K/V
+      overflow (``overflow_at`` scales the rows' K/V writes by 2^16): the
+      saturating casts keep logits finite while OF pressure crosses the
+      threshold, the engine re-ingests the pressured rows one rung wider
+      between bursts, and every request still drains its full budget with
+      zero poisoned rounds and no ``PoisonedLogitsError``.
+    * **SDC leg** — swap-mode preemption on a half-sized page pool with a
+      bit flip injected into the first swap payloads: every corruption
+      must be caught by the CRC32 check at swap-in (injected == detected,
+      zero undetected) and recovered by re-ingest with tokens IDENTICAL
+      to an uncorrupted twin of the same run.
+
+    Both legs replay one deterministic fault plan; archs that cannot page
+    carry nulls, like the ragged/paged columns."""
+    import jax
+    from repro.core.policy import EscalationPolicy
+    from repro.launch.engine import ContinuousEngine, synthetic_trace
+    from repro.models.paged import num_pages
+    from repro.models.registry import build_model
+    from repro.train.fault import ServeFaultPlan
+
+    if quick:
+        slots, gen, n_req = 2, 16, 6
+    keys = ("esc_soak_drained", "esc_soak_escalations",
+            "esc_soak_escalated_requests", "esc_soak_deferred",
+            "esc_soak_refused", "esc_soak_poisoned_rounds",
+            "esc_soak_tok_s", "sdc_soak_injected", "sdc_soak_detected",
+            "sdc_soak_reingest", "sdc_soak_token_parity")
+    model = build_model(arch, policy="fp32", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    if why is not None:
+        out = {k: None for k in keys}
+        out["health_soak_unsupported"] = why
+        return out
+    page = 16
+    max_len = prompt_len + gen
+
+    # -- escalation leg: overflow fault -> saturate -> escalate -> drain ----
+    model_pg = model.with_cfg(paged_kv=True, page_size=page)
+    params = model_pg.init(jax.random.key(0))
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen, model.cfg.vocab)
+    worst = max(num_pages(r.prompt_len + r.max_new, page) for r in reqs)
+    plan = ServeFaultPlan(overflow_at=(3, 4), overflow_scale=65536.0)
+    eng = ContinuousEngine(
+        model_pg, params, slots=slots, max_len=max_len, chunk=16,
+        n_pages=slots * worst + 2, burst_cap=8, fault_plan=plan,
+        escalate=EscalationPolicy(of_threshold=4))
+    eng.run(reqs)                                  # compile + warm
+    t0 = time.perf_counter()
+    fin, st = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    esc_drained = (len(fin) == n_req
+                   and all(len(f.tokens) == r.max_new
+                           for f, r in zip(fin, reqs)))
+    out = {
+        "esc_soak_drained": esc_drained,
+        "esc_soak_escalations": st["escalations"],
+        "esc_soak_escalated_requests": sum(1 for f in fin if f.escalated),
+        "esc_soak_deferred": st["esc_deferred"],
+        "esc_soak_refused": st["esc_refused"],
+        "esc_soak_poisoned_rounds": st["poisoned_rounds"],
+        "esc_soak_tok_s": sum(len(f.tokens) for f in fin) / dt,
+    }
+
+    # -- SDC leg: corrupted swap payloads must be detected + recovered ------
+    # (bf16 pool under page pressure so swap preemption actually engages;
+    # the clean twin pins the recovered tokens bit-for-bit.)
+    model_sw = build_model(arch, policy="tp_bf16", reduced=True).with_cfg(
+        paged_kv=True, page_size=page)
+    params_sw = model_sw.init(jax.random.key(0))
+    reqs_sw = synthetic_trace(n_req, slots, prompt_len, gen,
+                              model_sw.cfg.vocab, flavor="soak")
+    worst = max(num_pages(r.prompt_len + r.max_new, page) for r in reqs_sw)
+    n_pages = max(worst + 2, (slots * worst) // 2 + 1)
+
+    # exhaustion episode in BOTH twins (identical trajectories; corruption
+    # alone differs) so swap preemption reliably engages at full size
+    pressure = dict(exhaust_at=(gen // 2,), exhaust_for=4)
+
+    def sdc_run(fault_plan):
+        e = ContinuousEngine(model_sw, params_sw, slots=slots,
+                             max_len=max_len, chunk=16, n_pages=n_pages,
+                             preempt="swap", fault_plan=fault_plan)
+        return e.run(reqs_sw)
+
+    fin_clean, _ = sdc_run(ServeFaultPlan(**pressure))
+    fin_sdc, st = sdc_run(ServeFaultPlan(corrupt_swap_at=tuple(range(4)),
+                                         **pressure))
+    out.update({
+        "sdc_soak_injected": st["sdc_injected"],
+        "sdc_soak_detected": st["sdc_detected"],
+        "sdc_soak_reingest": st["sdc_reingest"],
+        "sdc_soak_token_parity": (
+            len(fin_sdc) == len(fin_clean) == n_req
+            and all(a.tokens == b.tokens
+                    for a, b in zip(fin_sdc, fin_clean))),
+    })
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", nargs="*", default=list(ARCHS))
@@ -446,6 +597,21 @@ def main(argv=None):
                   f"{row['soak_faults_exhaust']} exhaustions", flush=True)
         else:
             print(f"  soak n/a ({row.get('soak_unsupported')})", flush=True)
+        print(f"  flag telemetry {row['flag_telemetry_overhead']:.2f}x "
+              f"({row['flag_decode_ms']:.1f} -> "
+              f"{row['flag_decode_flags_ms']:.1f} ms)", flush=True)
+        if row.get("esc_soak_drained") is not None:
+            print(f"  health esc drained={row['esc_soak_drained']} "
+                  f"({row['esc_soak_escalations']} escalations, "
+                  f"{row['esc_soak_escalated_requests']} reqs wider, "
+                  f"{row['esc_soak_poisoned_rounds']} poisoned) | "
+                  f"sdc {row['sdc_soak_injected']} injected / "
+                  f"{row['sdc_soak_detected']} detected / "
+                  f"{row['sdc_soak_reingest']} reingested, "
+                  f"parity={row['sdc_soak_token_parity']}", flush=True)
+        else:
+            print(f"  health soak n/a "
+                  f"({row.get('health_soak_unsupported')})", flush=True)
 
     if not args.quick:
         with open(args.out, "w") as f:

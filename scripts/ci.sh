@@ -32,6 +32,15 @@ echo "== serving fault / robustness tests =="
 # abort, and the overload soak draining under injected faults
 python -m pytest -q tests/test_engine_faults.py
 
+echo "== numerical-health tests =="
+# the PR-7 gate: IEEE flag casts vs an ml_dtypes oracle (exhaustive
+# 16-bit sweep, both overflow modes), kernel flag counters under ragged
+# lengths + scrambled page tables, the saturating KV write ladder,
+# flag-driven escalation finishing wider with zero poison, CRC-checked
+# swap detecting injected bit flips with bit-identical recovery, and
+# fresh-monitor state across restarts
+python -m pytest -q tests/test_numerical_health.py
+
 echo "== docs: link + module-coverage check =="
 # every public kernels/ and models/ module must be mentioned in the docs
 # surface (README.md + docs/), and every relative markdown link must
@@ -88,6 +97,9 @@ REQUIRED = [
     "continuous_batch_occupancy", "peak_live_pages",
     "soak_drained", "soak_preemptions", "soak_shed_events", "soak_degraded",
     "soak_deadline_miss_rate", "soak_poisoned_rounds", "soak_faults_exhaust",
+    "flag_telemetry_overhead", "esc_soak_drained", "esc_soak_escalations",
+    "esc_soak_poisoned_rounds", "sdc_soak_injected", "sdc_soak_detected",
+    "sdc_soak_reingest", "sdc_soak_token_parity",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -143,9 +155,45 @@ for arch, row in report["archs"].items():
         if not (isinstance(mr, (int, float)) and 0.0 <= mr <= 1.0):
             sys.exit(f"BENCH_serve.json: {arch} soak_deadline_miss_rate "
                      f"must be in [0, 1], got {mr!r}")
+    # flag telemetry must have been measured (a positive overhead ratio)
+    fo = row["flag_telemetry_overhead"]
+    if not (isinstance(fo, (int, float)) and fo > 0):
+        sys.exit(f"BENCH_serve.json: {arch} flag_telemetry_overhead must "
+                 f"be a positive ratio, got {fo!r}")
+    # numerical-health soak: for archs that can page, the escalation leg
+    # must drain with at least one escalation and ZERO poisoned rounds
+    # (saturating casts + widening beat the injected overflow), and the
+    # SDC leg must detect EVERY injected swap corruption (zero undetected)
+    # and recover with token parity against the uncorrupted twin
+    esc = row["esc_soak_drained"]
+    if esc is not None:
+        if esc is not True:
+            sys.exit(f"BENCH_serve.json: {arch} esc_soak_drained must be "
+                     f"true — escalation lost or stuck requests")
+        if not (isinstance(row["esc_soak_escalations"], int)
+                and row["esc_soak_escalations"] >= 1):
+            sys.exit(f"BENCH_serve.json: {arch} escalation soak never "
+                     f"escalated — the overflow fault did not build "
+                     f"enough flag pressure")
+        if row["esc_soak_poisoned_rounds"] != 0:
+            sys.exit(f"BENCH_serve.json: {arch} escalation soak produced "
+                     f"{row['esc_soak_poisoned_rounds']!r} poisoned "
+                     f"rounds — saturation failed to keep logits finite")
+        inj, det = row["sdc_soak_injected"], row["sdc_soak_detected"]
+        if not (isinstance(inj, int) and inj >= 1):
+            sys.exit(f"BENCH_serve.json: {arch} SDC soak never injected a "
+                     f"swap corruption (got {inj!r}) — swap preemption "
+                     f"did not engage")
+        if det != inj or row["sdc_soak_reingest"] != inj:
+            sys.exit(f"BENCH_serve.json: {arch} UNDETECTED swap "
+                     f"corruption: {inj} injected, {det} detected, "
+                     f"{row['sdc_soak_reingest']} recovered")
+        if row["sdc_soak_token_parity"] is not True:
+            sys.exit(f"BENCH_serve.json: {arch} SDC recovery broke token "
+                     f"parity with the uncorrupted run")
 print(f"schema OK ({len(report['archs'])} arch rows x "
-      f"{len(REQUIRED)} required columns, paged + continuous + soak "
-      f"fields validated)")
+      f"{len(REQUIRED)} required columns, paged + continuous + soak + "
+      f"numerical-health fields validated)")
 EOF
 
 echo "CI OK"

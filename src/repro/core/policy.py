@@ -31,7 +31,8 @@ from typing import Optional
 
 from .formats import FPFormat, get_format
 
-__all__ = ["MatmulPolicy", "PrecisionPolicy", "get_policy", "PRESETS"]
+__all__ = ["MatmulPolicy", "PrecisionPolicy", "EscalationPolicy",
+           "get_policy", "PRESETS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +96,55 @@ class PrecisionPolicy:
 
     def replace(self, **kw) -> "PrecisionPolicy":
         return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class EscalationPolicy:
+    """Flag-driven KV-precision escalation — the inverse of graceful
+    degradation, steered by the IEEE exception telemetry of the write-side
+    CONV stage (FPnew's fflags, §II.B; SmallFloat format selection in the
+    ultra-low-power platform paper).
+
+    A serving row starts at ``ladder[0]`` (narrowest).  Its accumulated
+    write-time OF / UF counts are per-request *pressure*; when either
+    crosses its threshold and the row is not yet at the top of the ladder,
+    the scheduler escalates the row one rung — recomputing its K/V at the
+    wider format via the free-and-reingest path, since the cached
+    narrow-format values (saturated on overflow) are exactly what the
+    telemetry says is damaged.  Escalation is refusable per request
+    (``Request.no_escalate``) and budgeted against page pressure: it is
+    deferred while the pool's free list is shorter than
+    ``min_free_pages`` (an escalating row re-prefills its whole history,
+    the worst possible moment to fight admission for pages).
+
+    Every rung must fit the f32 pool container exactly (the engine stores
+    rung-snapped values in a shared f32 pool, selected per row at write
+    time — mixed formats in one pool, no repage on escalation).
+    ``uf_threshold`` defaults effectively off: underflow is high-rate /
+    low-harm telemetry, overflow is what poisons logits.
+    """
+    ladder: tuple = ("fp8", "fp16", "fp16alt")
+    of_threshold: int = 8
+    uf_threshold: int = 1 << 30
+    min_free_pages: int = 0
+
+    def __post_init__(self):
+        if len(self.ladder) < 2:
+            raise ValueError("escalation ladder needs >= 2 rungs")
+        if self.of_threshold < 1 or self.uf_threshold < 1:
+            raise ValueError("escalation thresholds must be >= 1")
+        for name in self.ladder:
+            fmt = get_format(name)
+            if fmt.e_bits > 8 or fmt.m_bits > 23:
+                raise ValueError(
+                    f"ladder rung {name!r} does not fit an f32 container")
+
+    @property
+    def formats(self) -> tuple:
+        return tuple(get_format(n) for n in self.ladder)
+
+    def top(self) -> int:
+        return len(self.ladder) - 1
 
 
 def _mk(name, src, acc, out=None, **kw) -> PrecisionPolicy:

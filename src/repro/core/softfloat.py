@@ -37,7 +37,17 @@ import jax.numpy as jnp
 
 from .formats import FPFormat, get_format
 
-__all__ = ["quantize", "ROUNDING_MODES"]
+__all__ = ["quantize", "quantize_with_flags", "ROUNDING_MODES", "FLAG_NAMES"]
+
+# IEEE-754 status flags raised by a conversion (FPnew §II.B exposes these as
+# RISC-V fflags).  DZ cannot fire on a cast, so the telemetry tuple is:
+#   OF  overflow   — |x| rounded beyond the target's max normal
+#   UF  underflow  — tiny (below min normal, before rounding) AND inexact
+#   NX  inexact    — the snapped value differs from the input
+#   NV  invalid    — the input was NaN (we flag all NaN traffic, not just
+#                    signaling NaNs: a NaN reaching a cast means upstream
+#                    arithmetic already went invalid)
+FLAG_NAMES = ("of", "uf", "nx", "nv")
 
 ROUNDING_MODES = ("rne", "rtz", "rdn", "rup", "rmm", "stochastic")
 
@@ -66,8 +76,9 @@ def _round_signed(r, mode: str, u):
     raise ValueError(f"unknown rounding mode {mode!r}; known: {ROUNDING_MODES}")
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "saturate"))
-def _quantize_bits(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
+def _quantize_core(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
+    """Shared rounding core: returns the snapped value plus the four
+    per-element IEEE flag masks (OF, UF, NX, NV bool arrays)."""
     cdt = jnp.dtype(x.dtype)
     udt, cm, cbias, emask = _CONTAINERS[cdt]
     m, emin, emax = fmt.m_bits, fmt.emin, fmt.emax
@@ -160,11 +171,32 @@ def _quantize_bits(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
         ovf_val = jnp.where(pos, inf_bits, max_bits)
     rounded = jnp.where(over, ovf_val, rounded)
 
-    # specials: container inf/NaN propagate untouched
+    # ---- IEEE status flags (before specials overwrite ``rounded``) ---------
     special = absbits >= inf_bits
+    nv = absbits > inf_bits                      # NaN input
+    of = over & ~special
+    nx = (rounded != absbits) & ~special         # OF implies NX, per IEEE
+    # tininess detected before rounding: nonzero magnitude below min normal
+    tiny = (absbits != 0) & (
+        (absbits >> cm).astype(jnp.int32) - cbias < emin)
+    uf = tiny & nx
+
+    # specials: container inf/NaN propagate untouched
     rounded = jnp.where(special, absbits, rounded)
 
-    return jax.lax.bitcast_convert_type(sign | rounded, cdt)
+    return jax.lax.bitcast_convert_type(sign | rounded, cdt), of, uf, nx, nv
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "saturate"))
+def _quantize_bits(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
+    return _quantize_core(x, fmt=fmt, mode=mode, saturate=saturate, key=key)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "saturate"))
+def _quantize_bits_flags(x, *, fmt: FPFormat, mode: str, saturate: bool, key):
+    y, of, uf, nx, nv = _quantize_core(x, fmt=fmt, mode=mode,
+                                       saturate=saturate, key=key)
+    return y, {"of": of, "uf": uf, "nx": nx, "nv": nv}
 
 
 def quantize(x, fmt, mode: str = "rne", *, saturate: bool = False,
@@ -196,3 +228,43 @@ def quantize(x, fmt, mode: str = "rne", *, saturate: bool = False,
     if fmt.e_bits >= jnp.finfo(cdt).nexp and fmt.m_bits >= jnp.finfo(cdt).nmant:
         return xin
     return _quantize_bits(xin, fmt=fmt, mode=mode, saturate=saturate, key=key)
+
+
+def quantize_with_flags(x, fmt, mode: str = "rne", *, saturate: bool = False,
+                        key: Optional[jax.Array] = None):
+    """:func:`quantize` plus the IEEE status flags the conversion raises.
+
+    Returns ``(y, flags)`` where ``flags`` is a dict of per-element bool
+    masks keyed by :data:`FLAG_NAMES` (``of``/``uf``/``nx``/``nv``).  This
+    is the software analog of FPnew's fflags output (§II.B): the signal a
+    transprecision runtime consumes to learn that a narrow format is
+    failing the workload *at the source*, instead of discovering the Inf
+    three matmuls later.  ``saturate=True`` additionally clamps overflow
+    to ±max_normal (finite, degraded) instead of ±Inf — OF still fires.
+
+    Exact conversions (identity fast-paths) raise no OF/UF/NX; NV still
+    reports NaN inputs so poisoned traffic stays visible.
+    """
+    fmt = get_format(fmt)
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        x = x.astype(jnp.float32)
+
+    def _exact(y):
+        no = jnp.zeros(y.shape, jnp.bool_)
+        return y, {"of": no, "uf": no, "nx": no, "nv": jnp.isnan(y)}
+
+    xinfo = jnp.finfo(x.dtype)
+    if fmt.e_bits >= xinfo.nexp and fmt.m_bits >= xinfo.nmant:
+        return _exact(x)
+    cdt = fmt.container_dtype()
+    if cdt == jnp.float64 and not jax.config.read("jax_enable_x64"):
+        if fmt.e_bits >= 11 and fmt.m_bits >= 23:
+            return _exact(x.astype(jnp.float32))
+        raise ValueError(
+            f"format {fmt} needs an f64 container; enable jax_enable_x64")
+    xin = x.astype(cdt)
+    if fmt.e_bits >= jnp.finfo(cdt).nexp and fmt.m_bits >= jnp.finfo(cdt).nmant:
+        return _exact(xin)
+    return _quantize_bits_flags(xin, fmt=fmt, mode=mode, saturate=saturate,
+                                key=key)

@@ -69,8 +69,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import get_format
 from .quant_common import widen as _widen
+from .quant_common import widen_with_flags as _widen_flags
 
 NEG_INF = -1e30
+
+# flag-counter channel order (docs/KERNELS.md): OF, UF, NX, NV
+N_FLAGS = 4
+
+
+def _flag_counts(x_ref, fmt, src_dtype, live):
+    """Per-tile OF/UF/NX/NV counts of one CONV site, masked by ``live``
+    (liveness along the leading tile axis — dead/padded slots contribute
+    zero).  Returns an int32 [4] vector."""
+    _, of, uf, nx, nv = _widen_flags(x_ref, fmt, src_dtype)
+    return jnp.stack([jnp.sum((f & live).astype(jnp.int32))
+                      for f in (of, uf, nx, nv)])
 
 
 def softcap_scores(s, cap: float):
@@ -87,14 +100,16 @@ def softcap_scores(s, cap: float):
 def _decode_kernel(len_ref, *args, nk: int, bk: int, paged: bool,
                    scale: float, window: Optional[int],
                    softcap: Optional[float], kv_fmt, q_fmt, src_dtype,
-                   out_dtype, debug_visits: bool):
+                   out_dtype, debug_visits: bool, debug_flags: bool):
     if paged:
         args = args[1:]            # bt_ref: consumed by the index maps only
     q_ref, k_ref, v_ref, o_ref, *rest = args
+    visits_ref = flags_ref = None
     if debug_visits:
-        visits_ref, m_ref, acc_ref, l_ref = rest
-    else:
-        m_ref, acc_ref, l_ref = rest
+        visits_ref, rest = rest[0], rest[1:]
+    if debug_flags:
+        flags_ref, rest = rest[0], rest[1:]
+    m_ref, acc_ref, l_ref = rest
     ip = pl.program_id(1)          # 0 = max pass, 1 = accumulate pass
     j = pl.program_id(2)           # kv block
     kvl = len_ref[pl.program_id(0)]   # this row's own live length
@@ -157,11 +172,27 @@ def _decode_kernel(len_ref, *args, nk: int, bk: int, paged: bool,
 
     if debug_visits:
         visits_ref[0, 0] = active.astype(jnp.int32)
+    if debug_flags:
+        # Flag accumulation mirrors debug_visits: both passes write the same
+        # (h, j) cell and the accumulate pass (ip == 1) writes last, when
+        # v_ref maps to block j's true page (it is pinned during the max
+        # pass) — so the surviving value counts each K/V tile exactly once
+        # per row.  Q's CONV site is charged to the j == 0 cell.  Slots at
+        # or past this row's kv_len are masked out and early-out blocks
+        # write zeros: dead/padded cache slots contribute nothing.
+        live = (j * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+                ) < kvl
+        cnts = (_flag_counts(k_ref[0], kv_fmt, src_dtype, live)
+                + _flag_counts(v_ref[0], kv_fmt, src_dtype, live))
+        qc = _flag_counts(q_ref[0], q_fmt, src_dtype,
+                          jnp.ones((1, 1), jnp.bool_))
+        cnts = cnts + jnp.where(j == 0, qc, 0)
+        flags_ref[0, 0, :] = jnp.where(active, cnts, 0)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "bk", "scale", "window", "softcap", "kv_fmt_name", "q_fmt_name",
-    "src_dtype", "out_dtype", "interpret", "debug_visits"))
+    "src_dtype", "out_dtype", "interpret", "debug_visits", "debug_flags"))
 def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
                             bk: int = 128,
                             scale: float = 1.0,
@@ -172,7 +203,8 @@ def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
                             src_dtype=jnp.bfloat16,
                             out_dtype=jnp.float32,
                             interpret: bool = True,
-                            debug_visits: bool = False):
+                            debug_visits: bool = False,
+                            debug_flags: bool = False):
     """q: [BHkv, G, D]; k, v: [BHkv, Smax, D]; kv_len: int32 live cache
     length(s) — a traced value, not a static.  A [1, 1] (or scalar) length
     is broadcast to every row; a per-row [BHkv, 1] (or [BHkv]) vector gives
@@ -194,6 +226,14 @@ def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
     storage; native narrow dtypes are widened exactly without it.  With
     ``debug_visits`` the kernel also returns an int32 [BHkv, Smax/bk] array
     flagging, per row, which KV blocks did work (early-outs write 0).
+
+    With ``debug_flags`` the kernel additionally returns an int32
+    [BHkv, Smax/bk, 4] array of per-(row, KV-block) IEEE flag counts in
+    channel order OF, UF, NX, NV — the fflags its CONV sites raise
+    (docs/KERNELS.md).  Each live K and V element is counted once per row,
+    Q once per row in the j == 0 cell; slots at or past ``kv_len`` and
+    early-out blocks contribute zero.  Extra outputs are appended in
+    (visits, flags) order when both are requested.
     """
     bh, g, d = q.shape
     paged = block_table is not None
@@ -217,7 +257,8 @@ def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
         window=window, softcap=softcap,
         kv_fmt=get_format(kv_fmt_name) if kv_fmt_name else None,
         q_fmt=get_format(q_fmt_name) if q_fmt_name else None,
-        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits,
+        debug_flags=debug_flags)
     # scalar-prefetch args (kvl, and the page table when paged) are SMEM
     # tables the index maps may read at DMA-issue time; index maps take
     # (grid ids..., *scalar refs).
@@ -231,18 +272,24 @@ def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
         v_map = lambda h, p, j, kvl, bt: (bt[h, j * p], 0, 0)
         fixed = lambda h, p, j, kvl, bt: (h, 0, 0)
         vis = lambda h, p, j, kvl, bt: (h, j)
+        flg = lambda h, p, j, kvl, bt: (h, j, 0)
     else:
         scalars = (kvl,)
         k_map = lambda h, p, j, kvl: (h, j, 0)
         v_map = lambda h, p, j, kvl: (h, j * p, 0)   # pinned as above
         fixed = lambda h, p, j, kvl: (h, 0, 0)
         vis = lambda h, p, j, kvl: (h, j)
+        flg = lambda h, p, j, kvl: (h, j, 0)
     out_shape = [jax.ShapeDtypeStruct((bh, g, d), out_dtype)]
     out_specs = [pl.BlockSpec((1, g, d), fixed)]
     if debug_visits:
         # both passes write the same (h, j) cell with the same value
         out_shape.append(jax.ShapeDtypeStruct((bh, nk), jnp.int32))
         out_specs.append(pl.BlockSpec((1, 1), vis))
+    if debug_flags:
+        # the accumulate pass's write survives (correct V page; see kernel)
+        out_shape.append(jax.ShapeDtypeStruct((bh, nk, N_FLAGS), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1, N_FLAGS), flg))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(scalars),
         grid=(bh, 2, nk),
@@ -260,4 +307,4 @@ def decode_attention_pallas(q, k, v, kv_len, block_table=None, *,
     out = pl.pallas_call(
         kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
     )(*scalars, q, k, v)
-    return tuple(out) if debug_visits else out[0]
+    return tuple(out) if (debug_visits or debug_flags) else out[0]

@@ -57,7 +57,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import get_format
-from .decode_attention import softcap_scores
+from .decode_attention import N_FLAGS, _flag_counts, softcap_scores
 from .quant_common import widen as _widen
 
 NEG_INF = -1e30
@@ -107,14 +107,16 @@ def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref, *args, bq: int,
                  bk: int, paged: bool, scale: float, causal: bool,
                  window: Optional[int], softcap: Optional[float],
                  q_offset: int, src_fmt, src_dtype, out_dtype,
-                 debug_visits: bool):
+                 debug_visits: bool, debug_flags: bool):
     if paged:
         args = args[1:]            # bt_ref: consumed by the index maps only
     q_ref, k_ref, v_ref, o_ref, *rest = args
+    visits_ref = flags_ref = None
     if debug_visits:
-        visits_ref, acc_ref, m_ref, l_ref = rest
-    else:
-        acc_ref, m_ref, l_ref = rest
+        visits_ref, rest = rest[0], rest[1:]
+    if debug_flags:
+        flags_ref, rest = rest[0], rest[1:]
+    acc_ref, m_ref, l_ref = rest
     step = pl.program_id(1)
     iq = qi_ref[step]
     ik = ki_ref[step]
@@ -175,11 +177,27 @@ def _attn_kernel(kvl_ref, qi_ref, ki_ref, ff_ref, lf_ref, *args, bq: int,
 
     if debug_visits:
         visits_ref[0, 0] = active.astype(jnp.int32)
+    if debug_flags:
+        # Per-VISIT flag counts (like debug_visits): each scheduled step's
+        # K/V tiles are charged to its own (h, step) cell, masked to the
+        # row's live length; the Q tile is charged once per query block, at
+        # its first scheduled step.  Early-out steps write zeros.  The
+        # derived p-snap at the PV input is NOT counted — telemetry tracks
+        # stored-data CONV sites (q/k/v), not recomputed probabilities.
+        live = (ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+                ) < kvl
+        cnts = (_flag_counts(k_ref[0], src_fmt, src_dtype, live)
+                + _flag_counts(v_ref[0], src_fmt, src_dtype, live))
+        qc = _flag_counts(q_ref[0], src_fmt, src_dtype,
+                          jnp.ones((1, 1), jnp.bool_))
+        cnts = cnts + jnp.where(ff_ref[step] == 1, qc, 0)
+        flags_ref[0, 0, :] = jnp.where(active, cnts, 0)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "group", "bq", "bk", "scale", "causal", "window", "softcap", "q_offset",
-    "src_fmt_name", "src_dtype", "out_dtype", "interpret", "debug_visits"))
+    "src_fmt_name", "src_dtype", "out_dtype", "interpret", "debug_visits",
+    "debug_flags"))
 def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
                            group: int = 1,
                            bq: int = 128, bk: int = 128, scale: float = 1.0,
@@ -191,7 +209,8 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
                            src_dtype=jnp.bfloat16,
                            out_dtype=jnp.float32,
                            interpret: bool = True,
-                           debug_visits: bool = False):
+                           debug_visits: bool = False,
+                           debug_flags: bool = False):
     """q: [BH, Sq, D]; k: [BKV, Skv, D]; v: [BKV, Skv, Dv]; BH = BKV * group.
 
     Paged layout (``block_table`` [BKV, nk] int32, a traced value): k/v are
@@ -216,6 +235,14 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
     [BH, n_steps] array flagging, per row, which scheduled grid steps did
     QK/PV work (the dynamic per-row ``kv_len`` early-outs write 0 — the
     per-sequence energy-proportionality proof).
+
+    With ``debug_flags`` the kernel additionally returns an int32
+    [BH, n_steps, 4] array of per-(row, scheduled step) IEEE flag counts
+    (OF, UF, NX, NV — docs/KERNELS.md): K/V tiles are counted per VISIT
+    (a KV block seen by several query blocks is charged at each), the Q
+    tile once per query block at its first scheduled step; slots at or
+    past ``kv_len`` and early-out steps contribute zero.  Extra outputs
+    are appended in (visits, flags) order when both are requested.
     """
     bh, sq, d = q.shape
     paged = block_table is not None
@@ -246,7 +273,8 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
         _attn_kernel, bq=bq, bk=bk, paged=paged, scale=scale, causal=causal,
         window=window, softcap=softcap, q_offset=q_offset,
         src_fmt=get_format(src_fmt_name) if src_fmt_name else None,
-        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits)
+        src_dtype=src_dtype, out_dtype=out_dtype, debug_visits=debug_visits,
+        debug_flags=debug_flags)
     # index maps see (grid ids..., *scalar-prefetch refs); the paged form
     # appends the page table and dereferences it for the K/V block index
     if paged:
@@ -256,6 +284,7 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
         kv_map = lambda h, s, kvl, qi, ki, ff, lf, bt, g=group: \
             (bt[h // g, ki[s]], 0, 0)
         vis_map = lambda h, s, kvl, qi, ki, ff, lf, bt: (h, s)
+        flg_map = lambda h, s, kvl, qi, ki, ff, lf, bt: (h, s, 0)
     else:
         scalars = (kvl, jnp.asarray(qi), jnp.asarray(ki), jnp.asarray(ff),
                    jnp.asarray(lf))
@@ -263,11 +292,16 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
         kv_map = lambda h, s, kvl, qi, ki, ff, lf, g=group: \
             (h // g, ki[s], 0)
         vis_map = lambda h, s, kvl, qi, ki, ff, lf: (h, s)
+        flg_map = lambda h, s, kvl, qi, ki, ff, lf: (h, s, 0)
     out_shape = [jax.ShapeDtypeStruct((bh, sq, dv), out_dtype)]
     out_specs = [pl.BlockSpec((1, bq, dv), q_map)]
     if debug_visits:
         out_shape.append(jax.ShapeDtypeStruct((bh, n_steps), jnp.int32))
         out_specs.append(pl.BlockSpec((1, 1), vis_map))
+    if debug_flags:
+        out_shape.append(jax.ShapeDtypeStruct((bh, n_steps, N_FLAGS),
+                                              jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1, N_FLAGS), flg_map))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(scalars),
         grid=(bh, n_steps),
@@ -285,4 +319,4 @@ def flash_attention_pallas(q, k, v, kv_len=None, block_table=None, *,
     out = pl.pallas_call(
         kern, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
     )(*scalars, q, k, v)
-    return tuple(out) if debug_visits else out[0]
+    return tuple(out) if (debug_visits or debug_flags) else out[0]

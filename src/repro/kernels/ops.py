@@ -138,13 +138,23 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+def _reduce_flag_cells(cells, b: int, h: int):
+    """Reduce a kernel's per-(head-row, cell) flag counters [B*H, n, 4] to
+    per-SEQUENCE counts [B, 4] (summed over cells and heads).  In-kernel
+    liveness masking already zeroed dead/padded slots, so this is a plain
+    sum."""
+    return jnp.sum(cells.reshape(b, h, -1, cells.shape[-1]),
+                   axis=(1, 2)).astype(jnp.int32)
+
+
 def flash_attention(q, k, v, *, kv_len=None, policy=None,
                     block_table=None,
                     scale: Optional[float] = None,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None, q_offset: int = 0,
                     bq: Optional[int] = None, bk: Optional[int] = None,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    return_flags: bool = False):
     """q [B, H, S, D], k/v [B, Hkv, Skv, Dk/Dv] -> [B, H, S, Dv] (f32).
 
     The prefill/train attention entry point (behind ``cfg.prefill_backend``):
@@ -168,6 +178,11 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
 
     ``interpret=None`` auto-resolves: interpret on CPU, compiled on real
     accelerators — same hot-path contract as ``decode_attention``.
+
+    ``return_flags=True`` additionally returns per-SEQUENCE int32 [B, 4]
+    IEEE flag counts (OF, UF, NX, NV summed over heads and scheduled
+    steps; per-visit semantics — docs/KERNELS.md) from the kernel's
+    ``debug_flags`` counters.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -203,7 +218,12 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
             expand_block_table(block_table, hkv), group=group,
             bq=bq_, bk=page, scale=scale, causal=causal, window=window,
             softcap=softcap, q_offset=q_offset, src_fmt_name=src_fmt_name,
-            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret,
+            debug_flags=return_flags)
+        if return_flags:
+            o, fl = o
+            return (o[:, :sq].reshape(b, h, sq, dv),
+                    _reduce_flag_cells(fl, b, h))
         return o[:, :sq].reshape(b, h, sq, dv)
     kf = k.reshape(b * hkv, skv, d)
     vf = v.reshape(b * hkv, skv, dv)
@@ -214,7 +234,11 @@ def flash_attention(q, k, v, *, kv_len=None, policy=None,
         qf, kf, vf, expand_kv_lens(kv_len, b, h, skv), group=group,
         bq=bq_, bk=bk_, scale=scale, causal=causal, window=window,
         softcap=softcap, q_offset=q_offset, src_fmt_name=src_fmt_name,
-        src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+        src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret,
+        debug_flags=return_flags)
+    if return_flags:
+        o, fl = o
+        return o[:, :sq].reshape(b, h, sq, dv), _reduce_flag_cells(fl, b, h)
     return o[:, :sq].reshape(b, h, sq, dv)
 
 
@@ -224,7 +248,8 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      bk: Optional[int] = None,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None,
+                     return_flags: bool = False):
     """Fused single-query decode attention over the (quantized) KV cache.
 
     q [B, H, 1, D]; k/v [B, Hkv, Smax, D] *in their storage dtype* (native
@@ -249,6 +274,11 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     accelerators — this wrapper sits on the serving hot path (behind
     ``cfg.decode_backend``), so it must not silently run the interpreter
     on TPU like the explicit ``interpret=True`` research wrappers do.
+
+    ``return_flags=True`` additionally returns per-SEQUENCE int32 [B, 4]
+    IEEE flag counts (OF, UF, NX, NV summed over heads and KV blocks;
+    each live K/V element once, Q once per head row — docs/KERNELS.md)
+    from the kernel's ``debug_flags`` counters.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -284,7 +314,13 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
         o = decode_attention_pallas(
             qf, kf, vf, kvl, btf, bk=page, scale=scale, window=window,
             softcap=softcap, kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name,
-            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret)
+            src_dtype=src_dt, out_dtype=jnp.float32, interpret=interpret,
+            debug_flags=return_flags)
+        if return_flags:
+            o, fl = o
+            return (o[:, :group].reshape(b, hkv, group, d
+                                         ).reshape(b, h, 1, d),
+                    _reduce_flag_cells(fl, b, hkv))
         return o[:, :group].reshape(b, hkv, group, d).reshape(b, h, 1, d)
     kf = k.reshape(b * hkv, smax, d)
     vf = v.reshape(b * hkv, smax, d)
@@ -296,7 +332,11 @@ def decode_attention(q, k, v, *, kv_len, policy=None,
     o = decode_attention_pallas(
         qf, kf, vf, kvl, bk=bk, scale=scale, window=window, softcap=softcap,
         kv_fmt_name=kv_fmt_name, q_fmt_name=q_fmt_name, src_dtype=src_dt,
-        out_dtype=jnp.float32, interpret=interpret)
+        out_dtype=jnp.float32, interpret=interpret, debug_flags=return_flags)
+    if return_flags:
+        o, fl = o
+        return (o[:, :group].reshape(b, hkv, group, d).reshape(b, h, 1, d),
+                _reduce_flag_cells(fl, b, hkv))
     return o[:, :group].reshape(b, hkv, group, d).reshape(b, h, 1, d)
 
 

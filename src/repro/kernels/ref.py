@@ -17,6 +17,8 @@ from ..core.formats import get_format
 
 NEG_INF = -1e30
 
+N_FLAG_CH = 4   # flag-count channel order: OF, UF, NX, NV
+
 
 def _per_row_lens(kv_len, bh, default):
     """Normalize a scalar-or-vector ``kv_len`` to a length-``bh`` numpy int
@@ -344,6 +346,118 @@ def flash_attention_paged_ref(q, k_pool, v_pool, block_table, *, bq,
     return flash_attention_ref(q, paged_gather(k_pool, block_table),
                                paged_gather(v_pool, block_table),
                                kv_len=kv_len, bq=bq, bk=page, **kw)
+
+
+def _flag_masks_ref(x, fmt):
+    """Oracle twin of ``quant_common.widen_with_flags``'s masks, derived
+    independently from the softfloat oracle: the non-saturating snap's Inf
+    marks OF, the FTZ'd snap's value change marks NX, tininess below min
+    normal plus NX marks UF, NaN input marks NV.  Native narrow storage
+    (fmt None / non-f32 input): OF := stored ±Inf, NV := stored NaN,
+    UF/NX := False."""
+    if fmt is not None and x.dtype == jnp.float32:
+        y_ieee = softfloat.quantize(x, fmt)       # overflow -> ±Inf
+        y = _ftz(y_ieee, fmt)
+        nv = jnp.isnan(x)
+        of = jnp.isinf(y_ieee) & ~jnp.isinf(x) & ~nv
+        nx = (y != x) & ~nv
+        uf = (x != 0) & (jnp.abs(x) < fmt.min_normal) & nx
+        return of, uf, nx, nv
+    z = jnp.zeros(x.shape, bool)
+    return jnp.isinf(x), z, z, jnp.isnan(x)
+
+
+def _mask_counts(masks, live):
+    return jnp.stack([jnp.sum((f & live).astype(jnp.int32),
+                              axis=tuple(range(1, f.ndim)))
+                      for f in masks], axis=-1)
+
+
+def decode_flag_counts_ref(q, k, v, *, kv_len,
+                           kv_fmt_name: Optional[str] = None,
+                           q_fmt_name: Optional[str] = None):
+    """Per-row IEEE flag-count oracle of ``decode_attention_pallas(...,
+    debug_flags=True)`` summed over KV blocks: int32 [BHkv, 4] in OF, UF,
+    NX, NV order.  Each live K/V element (position < that row's kv_len)
+    counts once; Q counts once per row with live length > 0; dead/padded
+    slots contribute zero.  Layouts as in :func:`decode_attention_ref`."""
+    bh, g, d = q.shape
+    smax = k.shape[1]
+    kv_len = jnp.asarray(_per_row_lens(kv_len, bh, smax), jnp.int32)
+    kfmt = get_format(kv_fmt_name) if kv_fmt_name else None
+    qfmt = get_format(q_fmt_name) if q_fmt_name else None
+    live = (jnp.arange(smax)[None, :, None]
+            < kv_len[:, None, None])                       # [BH, Smax, 1]
+    cnt = (_mask_counts(_flag_masks_ref(k, kfmt), live)
+           + _mask_counts(_flag_masks_ref(v, kfmt), live))
+    qc = _mask_counts(_flag_masks_ref(q, qfmt), jnp.ones((bh, 1, 1), bool))
+    return cnt + jnp.where((kv_len > 0)[:, None], qc, 0)
+
+
+def decode_flag_counts_paged_ref(q, k_pool, v_pool, block_table, *, kv_len,
+                                 **kw):
+    """Paged twin: gather pages to the contiguous view first (the count is
+    schedule-free — a position is live iff it is < kv_len)."""
+    return decode_flag_counts_ref(q, paged_gather(k_pool, block_table),
+                                  paged_gather(v_pool, block_table),
+                                  kv_len=kv_len, **kw)
+
+
+def flash_flag_counts_ref(q, k, v, *, group: int = 1, kv_len=None,
+                          causal: bool = True,
+                          window: Optional[int] = None, q_offset: int = 0,
+                          src_fmt_name: Optional[str] = None,
+                          bq: int = 128, bk: int = 128):
+    """Per-row flag-count oracle of ``flash_attention_pallas(...,
+    debug_flags=True)`` summed over steps: int32 [BH, 4].  Walks the SAME
+    pruned ``block_schedule`` with the kernel's per-VISIT semantics — a KV
+    block seen by several query blocks is charged at each visit, the Q
+    tile once per query block at its first scheduled step, early-out steps
+    (block start >= that row's kv_len) charge nothing."""
+    from .flash_attention import block_schedule
+
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    kv_len = _per_row_lens(kv_len, bh, skv)
+    fmt = get_format(src_fmt_name) if src_fmt_name else None
+    qi, ki, ff, lf = block_schedule(sq, skv, bq, bk, causal=causal,
+                                    window=window, q_offset=q_offset)
+    kmask = _flag_masks_ref(k, fmt)
+    vmask = _flag_masks_ref(v, fmt)
+    qmask = _flag_masks_ref(q, fmt)
+    pos = jnp.arange(skv)[:, None]                          # [Skv, 1]
+    out = []
+    for h in range(bh):
+        hk = h // group
+        kvl = int(kv_len[h])
+        cnt = jnp.zeros((N_FLAG_CH,), jnp.int32)
+        for step in range(len(qi)):
+            iq, ik = int(qi[step]), int(ki[step])
+            if ik * bk >= kvl:
+                continue
+            live = pos[ik * bk:(ik + 1) * bk] < kvl
+            cnt = cnt + _mask_counts(
+                [f[hk, ik * bk:(ik + 1) * bk][None] for f in kmask],
+                live[None])[0]
+            cnt = cnt + _mask_counts(
+                [f[hk, ik * bk:(ik + 1) * bk][None] for f in vmask],
+                live[None])[0]
+            if ff[step]:
+                cnt = cnt + _mask_counts(
+                    [f[h, iq * bq:(iq + 1) * bq][None] for f in qmask],
+                    jnp.ones((1, 1, 1), bool))[0]
+        out.append(cnt)
+    return jnp.stack(out)
+
+
+def flash_flag_counts_paged_ref(q, k_pool, v_pool, block_table, *, bq,
+                                kv_len=None, **kw):
+    """Paged twin of :func:`flash_flag_counts_ref` (bk pinned to the page
+    size, like the paged output oracles)."""
+    page = k_pool.shape[1]
+    return flash_flag_counts_ref(q, paged_gather(k_pool, block_table),
+                                 paged_gather(v_pool, block_table),
+                                 kv_len=kv_len, bq=bq, bk=page, **kw)
 
 
 def dotp_ex_ref(a, b, *, src_dtype=jnp.float16):

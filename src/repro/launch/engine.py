@@ -59,6 +59,19 @@ are tight, drop to a cheaper operating point instead of failing):
     burst (masked-and-counted, or fail-fast ``PoisonedLogitsError``);
     a ``ServeWatchdog`` turns a livelocked loop or a non-progressing
     burst into a clean ``EngineStuckError`` instead of a hang.
+  * **Flag-driven precision escalation** — with an ``EscalationPolicy``,
+    every cache write carries FPnew-style IEEE exception telemetry: the
+    burst accumulates per-row OF/UF flag counts from the write-side CONV
+    stage (saturating casts keep overflowed values finite, so logits never
+    poison), and when a row's pressure crosses the policy threshold the
+    scheduler escalates its KV format one ladder rung (fp8 -> fp16 -> ...)
+    via the free-and-reingest path — the inverse of degradation, refusable
+    per request (``Request.no_escalate``) and deferred under page pressure.
+  * **SDC-checked swap** — every swapped-out page payload carries a CRC32
+    computed at swap-out; swap-in verifies it, and a corrupted payload
+    (bit flips in host memory — silent data corruption) is detected 100%
+    of the time and recovered by falling back to free-and-reingest, which
+    recomputes the K/V instead of restoring damaged bytes.
 
 Dead-slot discipline (why idle/prefilling/finished slots are safe): every
 row writes decode K/V only through its OWN table row, and a cache slot
@@ -78,12 +91,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..core.policy import EscalationPolicy
 from ..train.fault import (EngineStuckError, PoisonedLogitsError,
                            ServeFaultPlan, ServeWatchdog, StragglerMonitor)
+
+
+def _crc_blobs(blobs: list) -> list:
+    """Per-layer (crc32(k), crc32(v)) checksums of swap payloads."""
+    return [(zlib.crc32(k.tobytes()), zlib.crc32(v.tobytes()))
+            for k, v in blobs]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +119,10 @@ class Request:
     after it counts a deadline miss, and a request that can no longer
     make it gains one effective priority level (SLO-at-risk boost).
     ``no_degrade`` marks a quality-sensitive request that refuses the
-    fp8 swap-store degradation (it is swapped at full width instead)."""
+    fp8 swap-store degradation (it is swapped at full width instead).
+    ``no_escalate`` refuses flag-driven KV-precision escalation (a
+    latency-sensitive request that prefers saturated-but-cheap KV over a
+    reingest pause keeps its admission rung)."""
     rid: int
     tokens: Sequence[int]          # prompt token ids (>= 1)
     max_new: int                   # generation budget incl. the first token
@@ -106,6 +130,7 @@ class Request:
     priority: int = 0
     deadline: Optional[int] = None
     no_degrade: bool = False
+    no_escalate: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -130,6 +155,7 @@ class Finished:
     degraded: bool = False
     deadline: Optional[int] = None
     deadline_miss: bool = False
+    escalated: int = 0             # final escalation-ladder level (0 = base)
 
 
 @dataclasses.dataclass
@@ -140,23 +166,33 @@ class _Resume:
     the free-and-reingest path — the prompt plus all but the last emitted
     token are re-fed through chunked prefill, and the last emitted token
     is re-fed through the normal decode round, so every K/V byte and
-    every subsequent sample reproduces the un-preempted run."""
+    every subsequent sample reproduces the un-preempted run.
+    ``checksums`` (swap path): per-layer CRC32 pairs computed at swap-out,
+    verified before swap-in — a mismatch means the host payload was
+    silently corrupted, and the engine falls back to reingest."""
     emitted: List[int]
     blobs: Optional[list]
     written: int
     degraded: bool
+    checksums: Optional[list] = None
 
 
 @dataclasses.dataclass
 class _QEntry:
     """Queue bookkeeping around a Request: backoff gate, shed/preempt
-    counters and (after a preemption) the resume state."""
+    counters and (after a preemption) the resume state.  ``esc_level`` /
+    ``esc_pressure`` persist the request's escalation rung and accumulated
+    OF/UF flag pressure across preemptions (the rung is a property of the
+    REQUEST, not the slot it happens to occupy)."""
     req: Request
     not_before: int
     sheds: int = 0
     preemptions: int = 0
     degraded: bool = False
     resume: Optional[_Resume] = None
+    esc_level: int = 0
+    esc_pressure: tuple = (0, 0)
+    esc_refused: bool = False
 
 
 def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
@@ -249,7 +285,8 @@ class ContinuousEngine:
                  shed: bool = True, shed_base: int = 2, shed_cap: int = 64,
                  min_resident: int = 2,
                  fault_plan: Optional[ServeFaultPlan] = None,
-                 watchdog_patience: int = 200):
+                 watchdog_patience: int = 200,
+                 escalate: Optional[EscalationPolicy] = None):
         import functools
 
         import jax
@@ -298,6 +335,21 @@ class ContinuousEngine:
         self.min_resident = max(0, min_resident)
         self.fault_plan = fault_plan
         self.watchdog_patience = watchdog_patience
+        self.escalate = escalate
+        self._esc_fmts = None
+        if escalate is not None:
+            if not isinstance(escalate, EscalationPolicy):
+                raise TypeError(f"escalate must be an EscalationPolicy, "
+                                f"got {type(escalate).__name__}")
+            from ..models.attention import kv_store_dtype
+            pool_dt = np.dtype(kv_store_dtype(model.policy))
+            if model.policy.kv_fmt is not None or pool_dt != np.float32:
+                raise ValueError(
+                    f"escalation needs an f32 KV pool with no kv_fmt (the "
+                    f"write path snaps each row to its OWN ladder rung "
+                    f"inside a shared wide container); policy "
+                    f"{model.policy.name!r} stores KV as {pool_dt}")
+            self._esc_fmts = escalate.formats
         self._num_pages = num_pages
         self._jnp, self._jax = jnp, jax
 
@@ -329,20 +381,32 @@ class ContinuousEngine:
         self._admit_round = np.zeros((slots,), np.int32)
         self._cnt = (np.zeros((slots, model.vocab_out), np.int32)
                      if self._use_pen else None)
+        # numerical-health state: each slot's escalation-ladder rung and
+        # its accumulated OF/UF write-flag pressure (host mirror of the
+        # telemetry the burst carries back)
+        self.kv_levels = np.zeros((slots,), np.int32)
+        self.flag_pressure = np.zeros((slots, 2), np.int64)
         self._pending: List[_QEntry] = []
         self._held: List[int] = []      # fault-plan page grab
         self._release_at: Optional[int] = None
+        self.reset_monitors()
 
         use_pen = self._use_pen
         rp, pp = repetition_penalty, presence_penalty
+        esc_fmts = self._esc_fmts
+        ovf_scale = float(getattr(fault_plan, "overflow_scale", 1.0)
+                          if fault_plan is not None else 1.0)
 
         def burst(params, caches, table, state, counts, key):
-            # ONE packed [8, B] int32 upload carries the whole scheduler
-            # state (tok, pos, lens, limit, done, n_max, watch, poison)
-            # and the table is installed inside the compiled region —
-            # per-burst host->device traffic stays 2-3 small transfers,
-            # independent of model size
+            # ONE packed [10, B] int32 upload carries the whole scheduler
+            # state (tok, pos, lens, limit, done, n_max, watch, poison,
+            # kv_levels, ovf_round) and the table is installed inside the
+            # compiled region — per-burst host->device traffic stays 2-3
+            # small transfers, independent of model size
             caches = caches_with_table(caches, table)
+            esc_kw = ({} if esc_fmts is None else
+                      dict(esc_fmts=esc_fmts, kv_levels=state[8],
+                           ovf_at=state[9, 0], ovf_scale=ovf_scale))
             r = model.decode_burst(
                 params, state[0][:, None], caches, state[1], state[2],
                 state[4] != 0, state[3], max_len=max_len,
@@ -352,12 +416,14 @@ class ContinuousEngine:
                 key=key, mesh=mesh,
                 counts=counts if use_pen else None,
                 repetition_penalty=rp, presence_penalty=pp,
-                poison_at=state[7, 0], guard=True)
+                poison_at=state[7, 0], guard=True, **esc_kw)
             out, n, tok, caches, pos, lens, done, key = r[:8]
             bad = r[8]
+            fl = (r[-1] if esc_fmts is not None
+                  else jnp.zeros((slots, 2), jnp.int32))
             return (out, n,
                     jnp.stack([tok[:, 0], pos, lens, done.astype(jnp.int32)]),
-                    caches, key, bad)
+                    caches, key, bad, fl)
 
         # donate the caches operand: the page pools flow through every
         # burst/chunk as pure carries and the host never reuses the
@@ -374,6 +440,15 @@ class ContinuousEngine:
         self._chunk_fns: Dict[tuple, object] = {}
 
     # -- helpers ----------------------------------------------------------
+    def reset_monitors(self) -> None:
+        """Fresh watchdog + straggler-monitor state.  Called at engine
+        construction, at every ``run()`` start, and by
+        ``train.fault.run_with_restarts`` before each restart attempt —
+        a restarted run must not inherit a pre-crash straggler EWMA (it
+        would mis-flag warm-up bursts) or stale watchdog stall counts."""
+        self.watchdog = ServeWatchdog(self.watchdog_patience)
+        self.monitor = StragglerMonitor()
+
     def _chunk_fn(self, off: int, m: int):
         """Jitted prefill chunk for an ``m``-slot admission wave at static
         offset ``off`` (offsets step in multiples of ``self.chunk``, waves
@@ -389,16 +464,22 @@ class ContinuousEngine:
             model, sample, mesh = self.model, self._sample, self.mesh
             with_table = self._with_table
             sanitize, pen, use_pen = self._sanitize, self._pen, self._use_pen
+            esc_fmts, jnp = self._esc_fmts, self._jnp
 
             def chunk_step(params, caches, table, t, meta, counts, key):
                 caches = with_table(caches, table)
-                lg, caches = model.prefill_chunk(
+                esc_kw = ({} if esc_fmts is None else
+                          dict(esc_fmts=esc_fmts, kv_levels=meta[2]))
+                r = model.prefill_chunk(
                     params, t, caches, q_offset=off, row=meta[0],
-                    chunk_lens=meta[1], mesh=mesh)
+                    chunk_lens=meta[1], mesh=mesh, **esc_kw)
+                lg, caches = r[0], r[1]
+                fl = (r[2] if esc_fmts is not None
+                      else jnp.zeros((t.shape[0], 2), jnp.int32))
                 lgv, bad = sanitize(lg[:, -1])
                 if use_pen:
                     lgv = pen(lgv, counts)
-                return sample(lgv, key), bad, caches
+                return sample(lgv, key), bad, caches, fl
 
             fn = self._jax.jit(chunk_step, donate_argnums=(1,))
             self._chunk_fns[(off, m)] = fn
@@ -519,7 +600,10 @@ class ContinuousEngine:
 
     def _swap_out(self, caches, ids: List[int], degrade: bool):
         """Copy the live content of ``ids`` pages (every paged layer) to
-        host numpy — in the degrade format's container when allowed."""
+        host numpy — in the degrade format's container when allowed.
+        Returns ``(blobs, nbytes, checksums)``; the CRC32s are computed
+        HERE, before the payload sits in host memory, so any later bit
+        flip (injected or real) is detectable at swap-in."""
         jnp = self._jnp
         idx = jnp.asarray(ids, jnp.int32)
         blobs, nbytes = [], 0
@@ -532,7 +616,17 @@ class ContinuousEngine:
                 v = v.astype(self._swap_dtype)
             blobs.append((k, v))
             nbytes += k.nbytes + v.nbytes
-        return blobs, nbytes
+        return blobs, nbytes, _crc_blobs(blobs)
+
+    @staticmethod
+    def _flip_bit(blobs: list, rid: int) -> None:
+        """Deterministic single-bit corruption of a swap payload (SDC
+        injection): byte and bit indices derive from the rid alone, so a
+        plan replays to the identical corruption."""
+        k, _ = blobs[0]
+        flat = np.array(k, copy=True).view(np.uint8).reshape(-1)
+        flat[(rid * 2654435761) % flat.size] ^= np.uint8(1 << (rid % 8))
+        blobs[0] = (flat.view(k.dtype).reshape(k.shape), blobs[0][1])
 
     def _swap_in(self, caches, blobs: list, ids: List[int]):
         """Write swapped page payloads back into the pools at the victim's
@@ -557,21 +651,35 @@ class ContinuousEngine:
                             is_leaf=lambda x: isinstance(x, PagedKVCache))
 
     def _preempt(self, b: int, round_no: int, caches, counters: dict,
-                 reason: str):
+                 reason: str, force_reingest: bool = False):
         """Evict resident row ``b``: capture its continuation (swap-out or
         reingest state), free its pages and slot, and re-queue it —
-        immediately re-admissible, but only where it fits."""
+        immediately re-admissible, but only where it fits.
+        ``force_reingest`` bypasses the swap path even in swap mode — an
+        ESCALATING row must recompute its K/V at the wider rung, not
+        restore the narrow saturated bytes the telemetry just condemned."""
         e = self._entry[b]
         req = self._req[b]
         e.preemptions += 1
         counters["preemptions"] += 1
-        if not self.done[b] and self.preempt_mode == "swap":
+        e.esc_level = int(self.kv_levels[b])
+        e.esc_pressure = (int(self.flag_pressure[b, 0]),
+                          int(self.flag_pressure[b, 1]))
+        if (not self.done[b] and self.preempt_mode == "swap"
+                and not force_reingest):
             written = int(self.lens[b])
             keep = self._owned[b][:self._num_pages(written, self.page)]
             degrade = self.degrade_fmt is not None and not req.no_degrade
-            blobs, nbytes = self._swap_out(caches, keep, degrade)
+            blobs, nbytes, sums = self._swap_out(caches, keep, degrade)
+            if (self.fault_plan is not None
+                    and self.fault_plan.take_corrupt()):
+                self._flip_bit(blobs, req.rid)
+                counters["sdc_injected"] += 1
+                self.fault_plan.note("sdc_inject", round=round_no,
+                                     rid=req.rid, slot=b)
             e.resume = _Resume(emitted=list(self._emitted[b]), blobs=blobs,
-                               written=written, degraded=degrade)
+                               written=written, degraded=degrade,
+                               checksums=sums)
             if degrade:
                 e.degraded = True
                 counters["degraded"] += 1
@@ -599,6 +707,7 @@ class ContinuousEngine:
         self._prog[b], self._resume_tok[b] = 0, None
         self.pos[b], self.lens[b] = self.max_len - 1, 0
         self.done[b], self.limit[b] = True, 0
+        self.kv_levels[b], self.flag_pressure[b] = 0, 0
         if self._use_pen:
             self._cnt[b] = 0
         e.not_before = max(e.not_before, round_no)
@@ -609,7 +718,15 @@ class ContinuousEngine:
     def _admit_one(self, e: _QEntry, b: int, pages: List[int],
                    round_no: int, caches, counters: dict):
         """Install entry ``e`` into free slot ``b`` with its admission
-        pages, restoring resume state (swap-in or reingest plumbing)."""
+        pages, restoring resume state (swap-in or reingest plumbing).
+
+        Swap-in is SDC-checked: the payload's CRC32s are recomputed and
+        compared against the swap-out checksums first.  A mismatch never
+        reaches the pool — the resume falls back to free-and-reingest
+        (recompute), which needs exactly the pages already allocated here
+        (``lens == prompt + emitted - 1`` is the engine invariant, so the
+        swap and reingest page needs coincide) and reproduces the
+        un-preempted run bit for bit."""
         req = e.req
         self._table[b, :len(pages)] = pages
         self._table_dirty = True
@@ -617,7 +734,18 @@ class ContinuousEngine:
         self._req[b], self._entry[b] = req, e
         self._admit_round[b] = round_no
         self._resume_tok[b] = None
+        self.kv_levels[b] = e.esc_level
+        self.flag_pressure[b] = np.asarray(e.esc_pressure, np.int64)
         rs, e.resume = e.resume, None
+        if (rs is not None and rs.blobs is not None
+                and rs.checksums is not None
+                and _crc_blobs(rs.blobs) != rs.checksums):
+            counters["sdc_detected"] += 1
+            counters["sdc_reingest"] += 1
+            if self.fault_plan is not None:
+                self.fault_plan.note("sdc_detect", round=round_no,
+                                     rid=req.rid, slot=b)
+            rs.blobs, rs.checksums = None, None
         if rs is None:
             self._ingest[b] = list(req.tokens)
             self._prog[b] = 0
@@ -710,7 +838,8 @@ class ContinuousEngine:
             slot=b, preemptions=e.preemptions, sheds=e.sheds,
             degraded=e.degraded, deadline=req.deadline,
             deadline_miss=(req.deadline is not None
-                           and round_no > req.deadline))
+                           and round_no > req.deadline),
+            escalated=int(self.kv_levels[b]))
         self.alloc.free(self._owned[b])
         self._owned[b] = []
         self._table[b, :] = self.scratch
@@ -720,8 +849,51 @@ class ContinuousEngine:
         self._resume_tok[b] = None
         self.pos[b], self.lens[b] = self.max_len - 1, 0
         self.done[b], self.limit[b] = True, 0
+        self.kv_levels[b], self.flag_pressure[b] = 0, 0
         if self._use_pen:
             self._cnt[b] = 0
+
+    # -- escalation -------------------------------------------------------
+    def _maybe_escalate(self, active, round_no: int, caches, counters: dict):
+        """Flag-pressure check after a burst: any live row whose OF or UF
+        pressure crossed its threshold moves one rung up the ladder via a
+        forced free-and-reingest (the saturated narrow-format bytes are
+        exactly what the flags condemned — recompute, don't swap them
+        back).  Refusable per request; deferred while the free list is
+        shorter than the policy's ``min_free_pages`` (an escalating row
+        re-prefills its whole history — the worst moment to fight
+        admission for pages)."""
+        esc = self.escalate
+        plan = self.fault_plan
+        for b in active:
+            if self._req[b] is None or self.done[b]:
+                continue                    # finished/evicted this round
+            lvl = int(self.kv_levels[b])
+            of, uf = (int(self.flag_pressure[b, 0]),
+                      int(self.flag_pressure[b, 1]))
+            if of < esc.of_threshold and uf < esc.uf_threshold:
+                continue
+            if lvl >= esc.top():
+                continue                    # already at the widest rung
+            e = self._entry[b]
+            if self._req[b].no_escalate:
+                if not e.esc_refused:
+                    e.esc_refused = True
+                    counters["esc_refused"] += 1
+                continue
+            if self.alloc.n_free < esc.min_free_pages:
+                counters["esc_deferred"] += 1
+                continue
+            rid = self._req[b].rid
+            caches = self._preempt(b, round_no, caches, counters,
+                                   reason="escalate", force_reingest=True)
+            e.esc_level = lvl + 1
+            e.esc_pressure = (0, 0)
+            counters["escalations"] += 1
+            if plan is not None:
+                plan.note("escalate", round=round_no, rid=rid, slot=b,
+                          level=lvl + 1, of=of, uf=uf)
+        return caches
 
     # -- the loop ---------------------------------------------------------
     def run(self, requests: Sequence[Request]):
@@ -751,13 +923,15 @@ class ContinuousEngine:
         if plan is not None:
             plan.reset()
         self._held, self._release_at = [], None
-        watchdog = ServeWatchdog(self.watchdog_patience)
-        monitor = StragglerMonitor()
+        self.reset_monitors()
+        watchdog, monitor = self.watchdog, self.monitor
         counters = {k: 0 for k in (
             "preemptions", "preempt_swap", "preempt_reingest",
             "preempt_restart", "resumed", "degraded", "swap_out_bytes",
             "shed_events", "poisoned_rounds", "nonfinite_prefill",
-            "stragglers", "faults_exhaust", "faults_slow")}
+            "stragglers", "faults_exhaust", "faults_slow",
+            "escalations", "esc_deferred", "esc_refused",
+            "sdc_injected", "sdc_detected", "sdc_reingest")}
         key = jax.random.key(self.seed)
         caches = self.caches
         round_no = decode_rounds = occ_accum = bursts = 0
@@ -805,22 +979,26 @@ class ContinuousEngine:
             for off, rows in sorted(waves.items()):
                 m = len(rows)
                 buf = np.zeros((m, self.chunk), np.int32)
-                meta = np.zeros((2, m), np.int32)       # rows / chunk lens
+                meta = np.zeros((3, m), np.int32)   # rows/chunk lens/levels
                 meta[0] = rows
                 for i, b in enumerate(rows):
                     piece = self._ingest[b][off:off + self.chunk]
                     buf[i, :len(piece)] = piece
                     meta[1, i] = len(piece)
+                    meta[2, i] = self.kv_levels[b]
                 if self.temperature > 0.0:
                     key, sk = jax.random.split(key)
                 else:
                     sk = key
                 cnts = (jnp.asarray(self._cnt[rows]) if self._use_pen
                         else None)
-                tok0, badp, caches = self._chunk_fn(off, m)(
+                tok0, badp, caches, flp = self._chunk_fn(off, m)(
                     self.params, caches, self._table_device(),
                     jnp.asarray(buf), jnp.asarray(meta), cnts, sk)
                 tok0, badp = np.asarray(tok0), np.asarray(badp)
+                if self.escalate is not None:
+                    # prefill write flags feed the same per-slot pressure
+                    self.flag_pressure[rows] += np.asarray(flp, np.int64)
                 progress += 1
                 for i, b in enumerate(rows):
                     req = self._req[b]
@@ -909,11 +1087,14 @@ class ContinuousEngine:
                         if vs[0] in active:
                             active.remove(vs[0])
             if active:
-                poison_rel = -1
+                poison_rel = ovf_rel = -1
                 if plan is not None:
                     p = plan.next_poison(round_no, round_no + int(n_max))
                     if p is not None:
                         poison_rel = p - round_no
+                    o = plan.next_overflow(round_no, round_no + int(n_max))
+                    if o is not None:
+                        ovf_rel = o - round_no
                 t_start = time.perf_counter()
                 if plan is not None:
                     stall = plan.take_slow(round_no)
@@ -921,14 +1102,16 @@ class ContinuousEngine:
                         counters["faults_slow"] += 1
                         plan.note("slow", round=round_no, seconds=stall)
                         time.sleep(stall)
-                state = np.zeros((8, self.slots), np.int32)
+                state = np.zeros((10, self.slots), np.int32)
                 state[0, :] = self.tok[:, 0]
                 state[1], state[2], state[3] = self.pos, self.lens, self.limit
                 state[4] = self.done
                 state[5, 0], state[6, 0] = n_max, wave
                 state[7, 0] = poison_rel
+                state[8] = self.kv_levels
+                state[9, 0] = ovf_rel
                 cnts = jnp.asarray(self._cnt) if self._use_pen else None
-                out, n, state_d, caches, key2, bad_d = self._burst(
+                out, n, state_d, caches, key2, bad_d, fl_d = self._burst(
                     self.params, caches, self._table_device(),
                     jnp.asarray(state), cnts, key)
                 n = int(n)                    # blocks on the burst
@@ -968,6 +1151,13 @@ class ContinuousEngine:
                     raise EngineStuckError(
                         f"decode burst executed {n} rounds without "
                         f"advancing any of {len(active)} live rows", diag())
+                if self.escalate is not None:
+                    self.flag_pressure += np.asarray(fl_d, np.int64)
+                    if plan is not None and 0 <= ovf_rel < n:
+                        counters["faults_overflow"] = counters.get(
+                            "faults_overflow", 0) + 1
+                        plan.note("overflow", round=round_no + ovf_rel,
+                                  scale=plan.overflow_scale)
                 self.lens = new_state[2]
                 self.done = new_state[3].astype(bool)
                 round_no += n
@@ -978,6 +1168,9 @@ class ContinuousEngine:
                     if self.done[b]:
                         self._finish(b, round_no, results)
                         progress += 1
+                if self.escalate is not None:
+                    caches = self._maybe_escalate(active, round_no, caches,
+                                                  counters)
             elif still_prefilling:
                 round_no += 1       # prefill-only round (no decoders yet)
             elif self._pending:

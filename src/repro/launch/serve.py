@@ -53,6 +53,20 @@ after the run.  Non-finite logits abort serving with
 ``PoisonedLogitsError`` unless a masking fault plan is active — the
 solo path enables the same guard via ``generate(guard_nonfinite=)``.
 
+Numerical health (requires ``--policy fp32``, the wide-container pool):
+``--escalate fp8,fp16,fp16alt`` turns on flag-driven KV-precision
+escalation — every row's K/V is quantized at write time to its current
+ladder rung (saturating, so overflow clamps instead of poisoning the
+logits) and the per-row IEEE OF/UF flag counts accumulate as pressure;
+a row whose overflow pressure crosses ``--escalate-of-threshold`` is
+re-ingested one rung wider.  ``--fault-overflow`` scales K/V writes by
+``--overflow-scale`` at the listed decode rounds (the write-side twin
+of ``--fault-poison``), and ``--fault-corrupt-swap`` flips one bit in
+the listed swap-out events' host payloads — the swap-in checksum must
+detect each corruption and recover via re-ingest.  ``--burst-cap``
+bounds decode-burst length (escalation decisions happen between
+bursts, so shorter bursts react faster).
+
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 ``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
 ``python -m repro.launch.serve --arch gemma2-9b --paged --page-size 16``
@@ -163,6 +177,30 @@ def main(argv=None):
     ap.add_argument("--fault-slow", default=None,
                     help="comma-separated rounds stalled before their burst "
                          "(straggler injection)")
+    ap.add_argument("--escalate", default=None,
+                    help="comma-separated KV-format ladder (e.g. "
+                         "fp8,fp16,fp16alt): flag-driven precision "
+                         "escalation on a fp32 pool — rows quantize K/V "
+                         "writes at their rung (saturating) and escalate "
+                         "one rung when overflow pressure crosses the "
+                         "threshold (requires --policy fp32)")
+    ap.add_argument("--escalate-of-threshold", type=int, default=8,
+                    help="per-request overflow-flag count that triggers "
+                         "escalation one rung up the ladder")
+    ap.add_argument("--fault-overflow", default=None,
+                    help="comma-separated decode rounds whose K/V writes "
+                         "are scaled by --overflow-scale before write-time "
+                         "quantization (drives the escalation path)")
+    ap.add_argument("--overflow-scale", type=float, default=65536.0,
+                    help="multiplier applied to K/V writes at "
+                         "--fault-overflow rounds")
+    ap.add_argument("--fault-corrupt-swap", default=None,
+                    help="comma-separated swap-out event indices (0-based) "
+                         "whose host payloads get one bit flipped — the "
+                         "swap-in checksum must detect and re-ingest")
+    ap.add_argument("--burst-cap", type=int, default=64,
+                    help="max decode rounds per compiled burst (escalation "
+                         "acts between bursts; smaller reacts faster)")
     ap.add_argument("--slots", type=int, default=4,
                     help="batch slots of the continuous engine")
     ap.add_argument("--requests", type=int, default=16,
@@ -233,15 +271,25 @@ def main(argv=None):
         plan = None
         rounds = lambda s: tuple(int(x) for x in s.split(",")) if s else ()
         if (args.fault_exhaust or args.fault_poison or args.fault_slow
+                or args.fault_overflow or args.fault_corrupt_swap
                 or args.soak):
             plan = ServeFaultPlan(
                 exhaust_at=rounds(args.fault_exhaust) or
                 ((args.gen,) if args.soak else ()),
                 slow_at=rounds(args.fault_slow),
                 poison_at=rounds(args.fault_poison),
-                mask_poison=True)
+                mask_poison=True,
+                overflow_at=rounds(args.fault_overflow),
+                overflow_scale=args.overflow_scale,
+                corrupt_swap_at=rounds(args.fault_corrupt_swap))
         if args.degrade_fmt is not None:
             args.preempt = "swap"       # degradation rides the swap store
+        esc = None
+        if args.escalate is not None:
+            from ..core.policy import EscalationPolicy
+            esc = EscalationPolicy(
+                ladder=tuple(args.escalate.split(",")),
+                of_threshold=args.escalate_of_threshold)
         max_len = max(r.prompt_len + r.max_new for r in reqs)
         eng = ContinuousEngine(model, params, slots=args.slots,
                                max_len=max_len, chunk=args.chunk,
@@ -249,12 +297,13 @@ def main(argv=None):
                                stop_token=args.stop_token,
                                temperature=args.temperature,
                                top_k=args.top_k, top_p=args.top_p,
-                               seed=args.seed,
+                               seed=args.seed, burst_cap=args.burst_cap,
                                repetition_penalty=args.repetition_penalty,
                                presence_penalty=args.presence_penalty,
                                preempt=args.preempt,
                                degrade_fmt=args.degrade_fmt,
-                               shed=args.shed, fault_plan=plan)
+                               shed=args.shed, fault_plan=plan,
+                               escalate=esc)
         fin, stats = eng.run(reqs)      # compile + warm
         t0 = time.time()
         fin, stats = eng.run(reqs)
@@ -273,6 +322,8 @@ def main(argv=None):
                 trail += f" shed x{f.sheds}"
             if f.degraded:
                 trail += " degraded"
+            if f.escalated:
+                trail += f" escalated L{f.escalated}"
             if f.deadline is not None:
                 trail += (" DEADLINE MISS" if f.deadline_miss
                           else f" met r{f.deadline}")
@@ -294,6 +345,13 @@ def main(argv=None):
               f"{stats['poisoned_rounds']} poisoned rounds masked, "
               f"{stats['stragglers']} stragglers, "
               f"{stats['faults_exhaust']} exhaustion episodes")
+        if esc is not None or plan is not None:
+            print(f"numerical health: {stats.get('escalations', 0)} "
+                  f"escalations ({stats.get('esc_deferred', 0)} deferred, "
+                  f"{stats.get('esc_refused', 0)} refused), "
+                  f"{stats.get('sdc_injected', 0)} SDC injected / "
+                  f"{stats.get('sdc_detected', 0)} detected / "
+                  f"{stats.get('sdc_reingest', 0)} recovered by reingest")
         if plan is not None and plan.events:
             kinds = {}
             for k, _ in plan.events:

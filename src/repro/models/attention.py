@@ -66,6 +66,40 @@ def _len_rows(kv_len):
     return jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
 
 
+def quantize_kv_rows(x, esc_fmts, levels):
+    """Write-time per-row KV quantization for precision escalation.
+
+    ``x`` [B, ...] is a freshly computed K or V tensor about to land in a
+    shared f32 pool; ``levels`` [B] int32 picks each row's rung in the
+    static ``esc_fmts`` ladder (narrow -> wide).  Every rung is snapped to
+    its grid with the SATURATING cast (overflow clamps to ±max_normal
+    instead of ±Inf — the stored value stays finite so attention never
+    poisons, while the OF flag still fires and feeds the escalation
+    pressure).  Returns ``(y, counts)`` with ``counts`` [B, 2] the per-row
+    OF / UF flag totals of this write (FPnew fflags at the CONV stage,
+    §II.B) — the select over rungs is traced, so changing a row's level
+    never retraces."""
+    from ..kernels.quant_common import quantize_flag_masks
+    x = x.astype(jnp.float32)
+    ys, ofs, ufs = [], [], []
+    for fmt in esc_fmts:
+        y, of, uf, _, _ = quantize_flag_masks(x, fmt, saturate=True)
+        ys.append(y)
+        ofs.append(of)
+        ufs.append(uf)
+    lvl = levels.reshape((-1,) + (1,) * (x.ndim - 1))
+    y, of, uf = ys[-1], ofs[-1], ufs[-1]
+    for i in range(len(esc_fmts) - 2, -1, -1):
+        sel = lvl == i
+        y = jnp.where(sel, ys[i], y)
+        of = jnp.where(sel, ofs[i], of)
+        uf = jnp.where(sel, ufs[i], uf)
+    red = tuple(range(1, x.ndim))
+    counts = jnp.stack([jnp.sum(of.astype(jnp.int32), axis=red),
+                        jnp.sum(uf.astype(jnp.int32), axis=red)], axis=-1)
+    return y, counts
+
+
 def update_cache_rows(buf, new, pos, *, axis: int):
     """Write ``new`` into the cache ``buf`` at slot ``pos`` along ``axis``
     (both batch-leading).  A scalar ``pos`` writes one shared index (the
@@ -253,8 +287,10 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   windowed_slice: bool = False,
                   decode_backend: str = "dense",
                   prefill_backend: str = "dense",
-                  kv_len=None):
-    """Returns (out [B,S,D], new_cache).
+                  kv_len=None, esc_fmts=None, kv_levels=None,
+                  kv_scale=None):
+    """Returns (out [B,S,D], new_cache) — or (out, new_cache, kv_flags)
+    when ``esc_fmts`` is given (the arity is static per trace).
 
     Train/prefill: cache None.  Decode: x is [B,1,D], cache holds Smax slots,
     cache_pos is the write index.  Cross-attention: kv_states provides
@@ -275,6 +311,15 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     through the table, so a chunked continuation (``cache_pos`` = the
     chunk's start offset, ``kv_len`` = prefix + chunk live length) is the
     same code path as a fresh prompt.
+
+    Escalation write path: ``esc_fmts`` (static tuple of FPFormat rungs,
+    narrow -> wide) + ``kv_levels`` ([B] int32 per-row rung) route every
+    self-attention cache write through ``quantize_kv_rows`` — K/V are
+    snapped to each row's rung with the saturating cast before landing in
+    the (f32) pool, and the per-row OF/UF write-flag counts come back as a
+    third return value ``kv_flags`` [B, 2].  ``kv_scale`` (traced scalar,
+    default off) multiplies K/V pre-quantization — the fault-injection
+    hook that forces narrow-rung overflow on demand.
     """
     b, s, d = x.shape
     q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
@@ -299,6 +344,7 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     v = shard(v.swapaxes(1, 2), bspec("model", None, None))
 
     new_cache = None
+    kv_flags = jnp.zeros((b, 2), jnp.int32)  # OF, UF write counts per row
     if kv_states is not None:
         # cross-attention: optionally persist the encoder K/V into the
         # cache (prefill), attend non-causally over all encoder states.
@@ -314,6 +360,13 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                                      q_offset=0, chunk=chunk)
     elif cache is not None:
         paged = isinstance(cache, PagedKVCache)
+        if esc_fmts is not None:
+            if kv_scale is not None:
+                k = k * kv_scale
+                v = v * kv_scale
+            k, kf = quantize_kv_rows(k, esc_fmts, kv_levels)
+            v, vf = quantize_kv_rows(v, esc_fmts, kv_levels)
+            kv_flags = kf + vf
         if paged:
             # paged cache: K/V scatter through the block table into the
             # shared page pool instead of a per-row contiguous strip
@@ -388,7 +441,10 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
 
     out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
     proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
-    return shard(proj, residual_spec()), new_cache
+    proj = shard(proj, residual_spec())
+    if esc_fmts is not None:
+        return proj, new_cache, kv_flags
+    return proj, new_cache
 
 
 def _decode_attend(q, ck, cv, policy, *, kv_len, window, cap,

@@ -323,12 +323,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
                 policy: PrecisionPolicy, *, positions, mesh=None,
                 cache=None, cache_pos=None, enc_states=None,
-                shared_params=None, decode: bool = False, kv_len=None):
-    """Returns (x, new_cache, aux_loss).  ``kv_len``/``cache_pos`` may be
+                shared_params=None, decode: bool = False, kv_len=None,
+                esc_fmts=None, kv_levels=None, kv_scale=None):
+    """Returns (x, new_cache, aux_loss) — with a fourth element
+    ``kv_flags`` [B, 2] (per-row OF/UF write-flag counts) when
+    ``esc_fmts`` is given (escalation write path; GQA mixers only, other
+    mixers contribute zeros).  ``kv_len``/``cache_pos`` may be
     per-sequence [B] vectors (ragged batches) — attention mixers mask and
     write per row; SSM mixers have no length axis and ignore them."""
     aux = jnp.zeros((), F32)
     new_cache: dict = {}
+    kv_flags = None
     rs = cfg.residual_scale
 
     ap = shared_params if spec.mixer == "shared_attn" else p
@@ -336,7 +341,10 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
     kv_cache = cache.get("kv") if cache else None
 
     if spec.mixer in ("gqa", "shared_attn"):
-        mix, nc = attn.gqa_attention(
+        esc_kw = ({} if esc_fmts is None else
+                  dict(esc_fmts=esc_fmts, kv_levels=kv_levels,
+                       kv_scale=kv_scale))
+        r = attn.gqa_attention(
             h, ap["attn"], policy, n_heads=cfg.n_heads,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
             positions=positions, causal=True, window=spec.window,
@@ -345,7 +353,11 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
             chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
             decode_backend=cfg.decode_backend,
-            prefill_backend=cfg.prefill_backend, kv_len=kv_len)
+            prefill_backend=cfg.prefill_backend, kv_len=kv_len, **esc_kw)
+        if esc_fmts is not None:
+            mix, nc, kv_flags = r
+        else:
+            mix, nc = r
     elif spec.mixer == "mla":
         mix, nc = attn.mla_attention(
             h, ap["attn"], policy, n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
@@ -412,6 +424,10 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
         if spec.post_norms:
             f = _norm(f, p["post2"], cfg)
         x = x + rs * f
+    if esc_fmts is not None:
+        if kv_flags is None:
+            kv_flags = jnp.zeros((x.shape[0], 2), jnp.int32)
+        return x, (new_cache if new_cache else None), aux, kv_flags
     return x, (new_cache if new_cache else None), aux
 
 
@@ -553,10 +569,14 @@ class Model:
     # -- stacks ------------------------------------------------------------
     def _run_stack(self, params, x, *, positions, mesh=None, caches=None,
                    cache_pos=None, enc_states=None, remat: bool = False,
-                   decode: bool = False, kv_len=None):
+                   decode: bool = False, kv_len=None, esc_fmts=None,
+                   kv_levels=None, kv_scale=None):
         cfg = self.cfg
         shared = params.get("shared")
+        esc = esc_fmts is not None
         aux_total = jnp.zeros((), F32)
+        flags_total = (jnp.zeros((x.shape[0], 2), jnp.int32) if esc
+                       else None)
         new_prefix, new_suffix = [], []
 
         def run_one(x, p, c, spec):
@@ -564,24 +584,35 @@ class Model:
                                positions=positions, mesh=mesh, cache=c,
                                cache_pos=cache_pos, enc_states=enc_states,
                                shared_params=shared, decode=decode,
-                               kv_len=kv_len)
+                               kv_len=kv_len, esc_fmts=esc_fmts,
+                               kv_levels=kv_levels, kv_scale=kv_scale)
 
         for i, spec in enumerate(cfg.prefix):
             c = caches.prefix[i] if caches else None
-            x, nc, aux = run_one(x, params["prefix"][i], c, spec)
+            r = run_one(x, params["prefix"][i], c, spec)
+            x, nc, aux = r[:3]
             new_prefix.append(nc)
             aux_total += aux
+            if esc:
+                flags_total += r[3]
 
         def group_body(carry, xs):
-            h, aux_acc = carry
+            if esc:
+                h, aux_acc, fl_acc = carry
+            else:
+                h, aux_acc = carry
             gp, gc = xs
             new_gc = []
             for j, spec in enumerate(cfg.pattern):
                 c = gc[j] if gc is not None else None
-                h, nc, aux = run_one(h, gp[j], c, spec)
+                r = run_one(h, gp[j], c, spec)
+                h, nc, aux = r[:3]
                 new_gc.append(nc)
-            return (h, aux_acc + aux), (tuple(new_gc)
-                                        if caches is not None else None)
+                if esc:
+                    fl_acc = fl_acc + r[3]
+            carry = ((h, aux_acc + aux, fl_acc) if esc
+                     else (h, aux_acc + aux))
+            return carry, (tuple(new_gc) if caches is not None else None)
 
         if remat and cfg.remat_policy == "full":
             body = jax.checkpoint(group_body)
@@ -592,18 +623,29 @@ class Model:
         else:  # "none" or remat=False: save everything
             body = group_body
         pat_caches = caches.pattern if caches is not None else None
-        (x, aux_total), new_pat = jax.lax.scan(
-            body, (x, aux_total), (params["pattern"], pat_caches),
+        carry0 = ((x, aux_total, flags_total) if esc
+                  else (x, aux_total))
+        fc, new_pat = jax.lax.scan(
+            body, carry0, (params["pattern"], pat_caches),
             unroll=True if cfg.unroll_scan else 1)
+        if esc:
+            x, aux_total, flags_total = fc
+        else:
+            x, aux_total = fc
 
         for i, spec in enumerate(cfg.suffix):
             c = caches.suffix[i] if caches else None
-            x, nc, aux = run_one(x, params["suffix"][i], c, spec)
+            r = run_one(x, params["suffix"][i], c, spec)
+            x, nc, aux = r[:3]
             new_suffix.append(nc)
             aux_total += aux
+            if esc:
+                flags_total += r[3]
 
         new_caches = (Caches(tuple(new_prefix), new_pat, tuple(new_suffix))
                       if caches is not None else None)
+        if esc:
+            return x, new_caches, aux_total, flags_total
         return x, new_caches, aux_total
 
     # -- entry points -------------------------------------------------------
@@ -968,29 +1010,40 @@ class Model:
         return out
 
     def decode_step(self, params, token, caches: Caches, pos, *, mesh=None,
-                    kv_len=None):
+                    kv_len=None, esc_fmts=None, kv_levels=None,
+                    kv_scale=None):
         """One decode step: token [B,1], pos scalar -> (logits [B,1,V],
         caches).  ``pos`` may be a per-sequence [B] vector (ragged batch):
         each row writes its K/V at — and takes its rope position from — its
         OWN index.  ``kv_len`` overrides the attended live length
         (scalar-or-vector; default ``pos + 1``) so EOS-frozen rows keep
-        writing into dead cache slots without growing their live window."""
+        writing into dead cache slots without growing their live window.
+
+        ``esc_fmts``/``kv_levels``/``kv_scale`` (escalation write path, see
+        ``attention.quantize_kv_rows``) append the per-row OF/UF write-flag
+        counts ``kv_flags`` [B, 2] to the return."""
         cfg = self.cfg
         x = self.embed(params, token, pos_offset=pos if cfg.max_seq else 0)
         if getattr(pos, "ndim", 0) >= 1:
             positions = pos[:, None, None]     # broadcastable to [B, H, 1]
         else:
             positions = pos + jnp.arange(1)
-        x, caches, _ = self._run_stack(params, x, positions=positions,
-                                       mesh=mesh, caches=caches,
-                                       cache_pos=pos, decode=True,
-                                       kv_len=kv_len)
+        r = self._run_stack(params, x, positions=positions,
+                            mesh=mesh, caches=caches,
+                            cache_pos=pos, decode=True,
+                            kv_len=kv_len, esc_fmts=esc_fmts,
+                            kv_levels=kv_levels, kv_scale=kv_scale)
+        x, caches = r[0], r[1]
         x = _norm(x, params["norm_f"], cfg)
-        return self.logits(params, x).astype(F32), caches
+        lg = self.logits(params, x).astype(F32)
+        if esc_fmts is not None:
+            return lg, caches, r[3]
+        return lg, caches
 
     # -- continuous-batching steps (launch/engine.py drives these) ---------
     def prefill_chunk(self, params, tokens, caches: Caches, *,
-                      q_offset: int, row=None, chunk_lens=None, mesh=None):
+                      q_offset: int, row=None, chunk_lens=None, mesh=None,
+                      esc_fmts=None, kv_levels=None):
         """Consume ONE prompt chunk into EXISTING caches — the chunked-
         prefill half of continuous batching (paged archs only: the chunk
         must read every EARLIER chunk's K/V back through the page pool,
@@ -1014,7 +1067,11 @@ class Model:
 
         Returns ``(logits [b, 1, V], caches)`` — each row's logits at its
         last live chunk position (the final chunk's logits seed the first
-        generated token)."""
+        generated token).  ``esc_fmts`` + ``kv_levels`` ([b] int32 rungs
+        aligned to ``tokens`` rows — the caller gathers per-slot levels to
+        the wave) route the chunk's cache writes through the escalation
+        quantizer and append the per-row OF/UF flag counts [b, 2] to the
+        return — a reingested row re-prefills AT its escalated rung."""
         cfg = self.cfg
         if not cfg.paged_kv:
             raise ValueError(
@@ -1032,10 +1089,12 @@ class Model:
         positions = q_offset + jnp.arange(s)
         live = jnp.reshape(jnp.asarray(
             s if chunk_lens is None else chunk_lens, jnp.int32), (-1,))
-        x, run, _ = self._run_stack(params, x, positions=positions,
-                                    mesh=mesh, caches=run,
-                                    cache_pos=q_offset,
-                                    kv_len=q_offset + live)
+        r = self._run_stack(params, x, positions=positions,
+                            mesh=mesh, caches=run,
+                            cache_pos=q_offset,
+                            kv_len=q_offset + live,
+                            esc_fmts=esc_fmts, kv_levels=kv_levels)
+        x, run = r[0], r[1]
         x = _norm(x, params["norm_f"], cfg)
         last = (jnp.maximum(jnp.broadcast_to(live, (b,)), 1) - 1)[:, None,
                                                                   None]
@@ -1043,6 +1102,8 @@ class Model:
                                                      axis=1)).astype(F32)
         if row is not None:
             run = _caches_adopt_tables(run, caches)
+        if esc_fmts is not None:
+            return lg, run, r[3]
         return lg, run
 
     def decode_round(self, params, tok, caches: Caches, pos, *, lens, done,
@@ -1051,7 +1112,8 @@ class Model:
                      top_p: Optional[float] = None, key=None, mesh=None,
                      counts=None, repetition_penalty: Optional[float] = None,
                      presence_penalty: Optional[float] = None,
-                     poison=None, guard: bool = False):
+                     poison=None, guard: bool = False, esc_fmts=None,
+                     kv_levels=None, kv_scale=None):
         """ONE decode round over every batch slot of a continuous batch:
         ``decode_step`` at per-row write index ``pos``, attending each
         row's live window (``lens`` for done/idle rows, ``pos + 1`` for
@@ -1067,13 +1129,18 @@ class Model:
         ``poison`` (traced bool, fault injection) overwrites the round's
         logits with NaN; ``guard=True`` routes sampling through
         ``sanitize_logits`` — bit-identical on finite logits — and appends
-        the per-row ``bad`` flag to the return.  Returns ``(next_tok
-        [B,1], logits, caches, key[, bad])``; the SCHEDULER owns
+        the per-row ``bad`` flag to the return.  ``esc_fmts``/``kv_levels``
+        /``kv_scale`` (escalation write path) append the per-row OF/UF
+        write-flag counts [B, 2].  Returns ``(next_tok [B,1], logits,
+        caches, key[, bad][, kv_flags])``; the SCHEDULER owns
         pos/lens/done advancement (see decode_burst for the compiled
         multi-round form)."""
         attend = jnp.where(done, lens, pos + 1)
-        lg, caches = self.decode_step(params, tok, caches, pos, mesh=mesh,
-                                      kv_len=attend)
+        r = self.decode_step(params, tok, caches, pos, mesh=mesh,
+                             kv_len=attend, esc_fmts=esc_fmts,
+                             kv_levels=kv_levels, kv_scale=kv_scale)
+        lg, caches = r[0], r[1]
+        kv_flags = r[2] if esc_fmts is not None else None
         lgv = lg[:, -1]
         if poison is not None:
             lgv = jnp.where(jnp.asarray(poison), jnp.nan, lgv)
@@ -1093,9 +1160,12 @@ class Model:
             nxt = jnp.argmax(lgv, -1).astype(jnp.int32)[:, None]
         if stop_token is not None:
             nxt = jnp.where(done[:, None], stop_token, nxt)
+        ret = (nxt, lg, caches, key)
         if guard:
-            return nxt, lg, caches, key, bad
-        return nxt, lg, caches, key
+            ret += (bad,)
+        if esc_fmts is not None:
+            ret += (kv_flags,)
+        return ret
 
     def decode_burst(self, params, tok, caches: Caches, pos, lens, done,
                      limit, *, max_len: int, out_width: int, n_max,
@@ -1104,7 +1174,8 @@ class Model:
                      top_p: Optional[float] = None, key=None, mesh=None,
                      counts=None, repetition_penalty: Optional[float] = None,
                      presence_penalty: Optional[float] = None,
-                     poison_at=None, guard: bool = False):
+                     poison_at=None, guard: bool = False, esc_fmts=None,
+                     kv_levels=None, ovf_at=None, ovf_scale=None):
         """Up to ``n_max`` continuous-batching decode rounds as ONE
         compiled ``lax.while_loop`` — the engine's steady-state dispatch
         cost amortizes like the scan path's.
@@ -1134,9 +1205,19 @@ class Model:
         ``guard=True`` masks non-finite logits before sampling and counts
         each live row's poisoned rounds.
 
+        Numerical-health hooks: ``esc_fmts`` + ``kv_levels`` ([B] int32,
+        constant within a burst — the host escalates between bursts) route
+        every round's cache writes through the escalation quantizer; the
+        per-row OF/UF write-flag counts accumulate in the carry (rounds a
+        row is done contribute zero — same attribution rule as ``bad``)
+        and ride back as ``kv_flags`` [B, 2].  ``ovf_at`` (traced int,
+        ``-1`` = never) + ``ovf_scale`` multiply that relative round's K/V
+        pre-quantization — deterministic overflow injection, the write-side
+        twin of ``poison_at``.
+
         Returns ``(out [B, out_width], n_steps, tok, caches, pos, lens,
-        done, key[, bad][, counts])`` — ``out[:, :n_steps]`` holds each
-        round's emitted token per row (rows already done emit
+        done, key[, bad][, counts][, kv_flags])`` — ``out[:, :n_steps]``
+        holds each round's emitted token per row (rows already done emit
         ``stop_token``/pad); ``bad`` [B] int32 (when ``guard``) counts
         rounds a live row's logits went non-finite; ``counts`` (when
         penalties are active) is the advanced histogram."""
@@ -1154,6 +1235,8 @@ class Model:
         zero = jnp.zeros((), jnp.int32)
         poison_at = (None if poison_at is None
                      else jnp.asarray(poison_at, jnp.int32))
+        esc = esc_fmts is not None
+        ovf_at = None if ovf_at is None else jnp.asarray(ovf_at, jnp.int32)
 
         wave = jnp.asarray(exit_on_finish, jnp.int32)
 
@@ -1168,6 +1251,9 @@ class Model:
             extra = list(c[7:])
             cnt = extra.pop(0) if use_pen else None
             badc = extra.pop(0) if guard else None
+            flacc = extra.pop(0) if esc else None
+            scale = (jnp.where(i == ovf_at, ovf_scale, 1.0)
+                     if ovf_at is not None else None)
             r = self.decode_round(
                 params, tok, caches, pos, lens=lens, done=done,
                 stop_token=stop_token, temperature=temperature,
@@ -1177,7 +1263,8 @@ class Model:
                 repetition_penalty=repetition_penalty,
                 presence_penalty=presence_penalty,
                 poison=(i == poison_at) if poison_at is not None else None,
-                guard=guard)
+                guard=guard, esc_fmts=esc_fmts, kv_levels=kv_levels,
+                kv_scale=scale)
             nxt, _, caches, ky = r[:4]
             out = jax.lax.dynamic_update_slice(out, nxt, (zero, i))
             fin = done | (pos + 1 >= limit)
@@ -1192,6 +1279,9 @@ class Model:
             if guard:
                 # attribute poisoned rounds to rows live entering the round
                 nc += (badc + (r[4] & ~done).astype(jnp.int32),)
+            if esc:
+                fl = r[4 + (1 if guard else 0)]
+                nc += (flacc + fl * (~done).astype(jnp.int32)[:, None],)
             return nc + ((ky,) if do_sample else ())
 
         init = (zero, out0, tok, caches, pos, lens, done)
@@ -1199,6 +1289,8 @@ class Model:
             init += (counts,)
         if guard:
             init += (jnp.zeros((b,), jnp.int32),)
+        if esc:
+            init += (jnp.zeros((b, 2), jnp.int32),)
         if do_sample:
             init += (key,)
         fin = jax.lax.while_loop(cond, body, init)
@@ -1206,10 +1298,13 @@ class Model:
         extra = list(fin[7:])
         cnt_out = extra.pop(0) if use_pen else None
         bad_out = extra.pop(0) if guard else None
+        fl_out = extra.pop(0) if esc else None
         ret = (out, n, tok, caches, pos, lens, done,
                extra.pop(0) if do_sample else key)
         if guard:
             ret += (bad_out,)
         if use_pen:
             ret += (cnt_out,)
+        if esc:
+            ret += (fl_out,)
         return ret

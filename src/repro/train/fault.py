@@ -108,6 +108,15 @@ class ServeFaultPlan:
     mask-and-count them, ``False`` makes the engine raise
     :class:`PoisonedLogitsError` (fail-fast mode).
 
+    Numerical-health injections (PR 7): ``overflow_at`` lists decode
+    rounds whose K/V writes are scaled by ``overflow_scale`` before
+    write-time quantization — values that overflow the narrow KV rung and
+    drive the escalation path (the write-side twin of ``poison_at``).
+    ``corrupt_swap_at`` lists swap-out EVENTS (0-based, in the order the
+    engine swaps victims out) whose host page payloads get one
+    deterministic bit flipped — a silent-data-corruption the checksum
+    verification at swap-in must catch and recover from via reingest.
+
     The plan is reusable: the engine calls :meth:`reset` at run start, so
     replaying the same plan object is deterministic.  ``events`` logs
     every injection actually fired (round, kind, payload)."""
@@ -117,6 +126,9 @@ class ServeFaultPlan:
     slow_s: float = 0.05
     poison_at: tuple = ()
     mask_poison: bool = True
+    overflow_at: tuple = ()
+    overflow_scale: float = 65536.0
+    corrupt_swap_at: tuple = ()
 
     def __post_init__(self):
         self.reset()
@@ -124,6 +136,7 @@ class ServeFaultPlan:
     def reset(self) -> None:
         self._fired_exhaust: set = set()
         self._fired_slow: set = set()
+        self._swap_seen: int = 0
         self.events: list = []
 
     def note(self, kind: str, **kw) -> None:
@@ -155,6 +168,21 @@ class ServeFaultPlan:
         hits = [r for r in self.poison_at if lo <= r < hi]
         return min(hits) if hits else None
 
+    def next_overflow(self, lo: int, hi: int) -> Optional[int]:
+        """First overflow-injection round in ``[lo, hi)`` (stateless
+        window scan, same contract as :meth:`next_poison`)."""
+        hits = [r for r in self.overflow_at if lo <= r < hi]
+        return min(hits) if hits else None
+
+    def take_corrupt(self) -> bool:
+        """True when the CURRENT swap-out event (0-based, counted per
+        call) is listed in ``corrupt_swap_at`` — the engine flips one bit
+        in that victim's host payload.  Stateful: each call consumes one
+        swap-event index, so the plan replays exactly."""
+        idx = self._swap_seen
+        self._swap_seen += 1
+        return idx in self.corrupt_swap_at
+
 
 class ServeWatchdog:
     """Turns scheduler livelock into a clean abort: ``tick(False)`` for
@@ -185,10 +213,21 @@ def run_with_restarts(make_runner: Callable[[], "object"],
                       max_restarts: int = 3):
     """Supervisor: build a runner (which restores from the latest
     checkpoint), run it; on failure rebuild and continue.  Returns the
-    final runner and the number of restarts consumed."""
+    final runner and the number of restarts consumed.
+
+    A restarted attempt must not inherit the previous attempt's health
+    baselines: a pre-crash straggler EWMA would mis-flag the restart's
+    warm-up steps, and stale watchdog stall counts would trip spuriously.
+    ``make_runner`` usually builds a fresh runner, but factories that
+    (re)use a long-lived runner object are common in restore-from-latest
+    setups — so the supervisor explicitly calls the runner's
+    ``reset_monitors()`` (when it has one) before every attempt."""
     restarts = 0
     while True:
         runner = make_runner()
+        reset = getattr(runner, "reset_monitors", None)
+        if callable(reset):
+            reset()
         try:
             runner.run()
             return runner, restarts

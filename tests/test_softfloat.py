@@ -182,6 +182,80 @@ def test_overflow_modes(fmt_name):
 
 
 # ---------------------------------------------------------------------------
+# saturating casts (PR 7): overflow clamps to max-normal instead of Inf
+# ---------------------------------------------------------------------------
+def test_fp8_saturation_max_normal_boundary():
+    """e5m2 saturation edges: max_normal = 1.75 * 2^15 = 57344, the RNE
+    overflow boundary is the midpoint to the next (absent) binade,
+    57344 + 8192/2 * ... -> 61440."""
+    fmt = get_format("fp8")
+    mx = F32(fmt.max_normal)                       # 57344
+    assert mx == F32(57344.0)
+    # exactly max normal: representable, both modes identical
+    assert q(mx, fmt, saturate=True) == mx
+    assert q(mx, fmt) == mx
+    # strictly inside the rounding boundary: rounds DOWN to max normal in
+    # both modes (saturation must not change non-overflowing results)
+    below = np.nextafter(F32(61440.0), F32(0.0), dtype=F32)
+    assert q(below, fmt) == mx
+    assert q(below, fmt, saturate=True) == mx
+    # well above: Inf without saturation, clamp with
+    for big in (F32(61441.0), F32(1e38)):
+        assert q(big, fmt) == np.inf
+        assert q(-big, fmt) == -np.inf
+        assert q(big, fmt, saturate=True) == mx
+        assert q(-big, fmt, saturate=True) == -mx
+
+
+def test_fp8_saturation_rne_tie():
+    """61440 is EXACTLY halfway between max normal (1.11 x 2^15, odd
+    mantissa) and the overflowed 2^16 (even) — ties-to-even rounds UP,
+    so the tie overflows under RNE and must clamp under saturation."""
+    fmt = get_format("fp8")
+    tie = F32(61440.0)
+    assert q(tie, fmt) == np.inf
+    assert q(-tie, fmt) == -np.inf
+    assert q(tie, fmt, saturate=True) == F32(fmt.max_normal)
+    assert q(-tie, fmt, saturate=True) == -F32(fmt.max_normal)
+
+
+@pytest.mark.parametrize("fmt_name", ["fp16", "fp16alt", "fp8", "fp8_e4m3"])
+def test_saturation_preserves_specials(fmt_name):
+    """Saturation clamps OVERFLOWED finite inputs only: true infinities
+    pass through as infinities and NaN stays (canonical quiet) NaN."""
+    assert q(np.inf, fmt_name, saturate=True) == np.inf
+    assert q(-np.inf, fmt_name, saturate=True) == -np.inf
+    got = q(np.float32(np.nan), fmt_name, saturate=True)
+    assert np.isnan(got)
+    # canonical quiet NaN: payloads are not preserved (hardware-style
+    # canonicalization, FPnew §II.B) — both modes agree
+    payload = np.uint32(0x7FC00001).view(F32)
+    assert np.isnan(q(payload, fmt_name, saturate=True))
+    assert np.isnan(q(payload, fmt_name))
+
+
+@pytest.mark.parametrize("fmt_name,ref_dtype", NATIVE_FMTS)
+@given(x=any_f32)
+@settings(max_examples=300, deadline=None)
+def test_saturating_cast_vs_mldtypes(fmt_name, ref_dtype, x):
+    """Both cast modes vs the ml_dtypes oracle: non-saturating matches the
+    reference conversion bit for bit; saturating matches the reference
+    with finite-input overflows clamped to signed max-normal."""
+    fmt = get_format(fmt_name)
+    want = np.asarray(F32(x)).astype(ref_dtype).astype(F32)
+    got_inf = q(x, fmt_name)
+    got_sat = q(x, fmt_name, saturate=True)
+    if np.isnan(want):
+        assert np.isnan(got_inf) and np.isnan(got_sat)
+        return
+    assert got_inf == want and np.signbit(got_inf) == np.signbit(want)
+    if np.isinf(want) and np.isfinite(x):
+        want = F32(math.copysign(fmt.max_normal, x))
+    assert got_sat == want and np.signbit(got_sat) == np.signbit(want), (
+        fmt_name, x, got_sat, want)
+
+
+# ---------------------------------------------------------------------------
 # stochastic rounding
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("fmt_name", ["fp16", "fp8", "fp8_e4m3"])
