@@ -218,9 +218,131 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     row.update(numerical_health_soak(arch, prompt_len=prompt_len,
                                      quick=quick))
 
+    # -- mesh-sharded serving A/B + simulated-fleet dryrun stats ------------
+    # (the PR-8 tensor-parallel machinery: head-sharded attention + paged
+    # pools over the `model` axis, psum'd output projections.  Runs in a
+    # SUBPROCESS with 8 forced host devices — the parent must keep its
+    # single real CPU device for every other timing column.)
+    row.update(shard_ab(arch, prompt_len=prompt_len, quick=quick))
+
     # -- scan + fused Pallas decode kernel over an fp8 KV cache -------------
     row["scan_pallas_kv8_tok_s"] = scan_tok_s(*build("tp_bf16_kv8", "pallas"))
     return row
+
+
+def shard_probe(arch: str, *, prompt_len: int, gen: int = 64,
+                slots: int = 4, n_req: int = 12) -> dict:
+    """Tensor-parallel vs single-device continuous serving, INSIDE the
+    multi-device subprocess (both legs share the 8-device process so the
+    A/B is apples-to-apples).  The tp leg head-shards attention + the
+    paged KV pools over a ``("model",)`` mesh; tokens must match the
+    unsharded leg exactly (per-head attention is bitwise, the psum'd
+    projection snaps once after an fp32 reduction — see
+    docs/ARCHITECTURE.md).  On simulated CPU devices the shard_map
+    overhead usually LOSES to single-device — ``shard_speedup`` tracks
+    the honest ratio; the column exists so the TPU rerun lands in it."""
+    import jax
+    from repro.launch.engine import ContinuousEngine, synthetic_trace
+    from repro.launch.mesh import make_serving_mesh, replica_meshes
+    from repro.models.registry import build_model
+
+    model = build_model(arch, policy="tp_bf16", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    nulls = {"shard_devices": None, "shard_decode_tok_s": None,
+             "shard_base_tok_s": None, "shard_speedup": None,
+             "shard_token_parity": None}
+    if why is not None:
+        return dict(nulls, shard_unsupported=why)
+    h, hkv = model.cfg.n_heads, model.cfg.n_kv_heads
+    tp = next((t for t in (8, 4, 2)
+               if t <= jax.device_count() and h % t == 0 and hkv % t == 0),
+              1)
+    if tp < 2:
+        return dict(nulls,
+                    shard_unsupported=f"no head split: h={h} hkv={hkv} "
+                                      f"devices={jax.device_count()}")
+    model_pg = model.with_cfg(paged_kv=True, page_size=16)
+    params = model_pg.init(jax.random.key(0))
+    max_len = prompt_len + gen
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen, model.cfg.vocab)
+    useful = sum(r.max_new for r in reqs)
+
+    def leg(mesh):
+        eng = ContinuousEngine(model_pg, params, slots=slots,
+                               max_len=max_len, chunk=16, burst_cap=256,
+                               mesh=mesh)
+        eng.run(reqs)                              # compile + warm
+        t0 = time.perf_counter()
+        fin, _ = eng.run(reqs)
+        return useful / (time.perf_counter() - t0), fin
+
+    base_rate, fin_a = leg(None)
+    mesh = replica_meshes(make_serving_mesh(1, tp))[0]
+    shard_rate, fin_b = leg(mesh)
+    return {
+        "shard_devices": tp,
+        "shard_decode_tok_s": shard_rate,
+        "shard_base_tok_s": base_rate,
+        "shard_speedup": shard_rate / base_rate,
+        "shard_token_parity": all(a.tokens == b.tokens
+                                  for a, b in zip(fin_a, fin_b)),
+    }
+
+
+def shard_ab(arch: str, *, prompt_len: int, quick: bool = False) -> dict:
+    """Drive ``shard_probe`` in a subprocess with 8 forced host devices,
+    then collect dryrun cost/memory stats for the production serving
+    shape at 256 (single-pod) and 512 (multi-pod) simulated devices.
+    Skipped entirely under ``--quick`` (CI smoke keeps one device)."""
+    import subprocess
+    import sys
+    import tempfile
+
+    if quick:
+        return {}
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_decode",
+         "--shard-probe", arch, "--prompt-len", str(prompt_len)],
+        capture_output=True, text=True, env=env)
+    out = None
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARD_JSON "):
+            out = json.loads(line[len("SHARD_JSON "):])
+    if out is None:
+        raise RuntimeError(
+            f"shard probe subprocess failed for {arch} "
+            f"(rc={r.returncode}):\n{(r.stderr or '')[-2000:]}")
+    assert out.get("shard_token_parity") in (True, None), \
+        f"sharded serving changed tokens for {arch}"
+
+    # dryrun leg: lower + compile the decode cell on the 256- and
+    # 512-device production meshes and record the per-device footprint
+    devs, peak, flops = [], [], []
+    for mp in (False, True):
+        with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", "decode_32k",
+                   "--json", tmp.name] + (["--multi-pod"] if mp else [])
+            rr = subprocess.run(cmd, capture_output=True, text=True,
+                                env={**os.environ})
+            try:
+                with open(tmp.name) as f:
+                    rec = json.load(f)
+            except (OSError, ValueError):
+                rec = {}
+        if not rec.get("ok"):
+            raise RuntimeError(
+                f"dryrun decode_32k {'pod2' if mp else 'pod1'} failed for "
+                f"{arch} (rc={rr.returncode}):\n"
+                f"{rec.get('error', (rr.stderr or '')[-2000:])}")
+        devs.append(rec["n_devices"])
+        peak.append(rec["memory"]["peak_bytes"])
+        flops.append(rec["hlo"]["flops"])
+    out.update(shard_dryrun_devices=devs, shard_dryrun_peak_bytes=peak,
+               shard_dryrun_flops=flops)
+    return out
 
 
 def continuous_ab(arch: str, *, prompt_len: int, quick: bool = False,
@@ -547,8 +669,16 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="one arch, short generation (CI smoke)")
+    ap.add_argument("--shard-probe", default=None, metavar="ARCH",
+                    help="internal re-entry: run the tensor-parallel A/B "
+                         "in THIS process (expects forced host devices) "
+                         "and print SHARD_JSON instead of benchmarking")
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args(argv)
+    if args.shard_probe:
+        out = shard_probe(args.shard_probe, prompt_len=args.prompt_len)
+        print("SHARD_JSON " + json.dumps(out))
+        return out
     if args.quick:
         args.archs, args.gen, args.repeats = args.archs[:1], 16, 1
 
@@ -600,6 +730,18 @@ def main(argv=None):
         print(f"  flag telemetry {row['flag_telemetry_overhead']:.2f}x "
               f"({row['flag_decode_ms']:.1f} -> "
               f"{row['flag_decode_flags_ms']:.1f} ms)", flush=True)
+        if row.get("shard_devices") is not None:
+            print(f"  shard tp={row['shard_devices']}: "
+                  f"{row['shard_decode_tok_s']:.1f} tok/s vs base "
+                  f"{row['shard_base_tok_s']:.1f} tok/s "
+                  f"({row['shard_speedup']:.2f}x), "
+                  f"parity={row['shard_token_parity']} | dryrun "
+                  f"{row.get('shard_dryrun_devices')} devices, peak "
+                  f"{[f'{b/2**30:.1f}G' for b in row.get('shard_dryrun_peak_bytes', [])]}",
+                  flush=True)
+        elif not args.quick:
+            print(f"  shard n/a ({row.get('shard_unsupported')})",
+                  flush=True)
         if row.get("esc_soak_drained") is not None:
             print(f"  health esc drained={row['esc_soak_drained']} "
                   f"({row['esc_soak_escalations']} escalations, "

@@ -41,6 +41,18 @@ echo "== numerical-health tests =="
 # fresh-monitor state across restarts
 python -m pytest -q tests/test_numerical_health.py
 
+echo "== mesh-sharded serving tests (8 simulated devices) =="
+# the PR-8 gate, run on an 8-way forced-host-platform mesh: head-sharded
+# attention bit-identical per head to single-device on EVERY route
+# (dense/pallas x prefill/decode x contiguous/paged), fp32-psum row-
+# parallel projections allclose (bitwise under the tp_bf16 output snap),
+# full-model logits parity, engine + data-parallel replica token parity,
+# version-gate shims (both branches, monkeypatched), divisibility
+# fallback warnings, per-replica allocator isolation, and the shipped
+# pre-warmed autotuner cache loader
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -q tests/test_sharded_serving.py tests/test_autotune.py
+
 echo "== docs: link + module-coverage check =="
 # every public kernels/ and models/ module must be mentioned in the docs
 # surface (README.md + docs/), and every relative markdown link must
@@ -100,6 +112,7 @@ REQUIRED = [
     "flag_telemetry_overhead", "esc_soak_drained", "esc_soak_escalations",
     "esc_soak_poisoned_rounds", "sdc_soak_injected", "sdc_soak_detected",
     "sdc_soak_reingest", "sdc_soak_token_parity",
+    "shard_decode_tok_s", "shard_devices", "shard_speedup",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -191,9 +204,29 @@ for arch, row in report["archs"].items():
         if row["sdc_soak_token_parity"] is not True:
             sys.exit(f"BENCH_serve.json: {arch} SDC recovery broke token "
                      f"parity with the uncorrupted run")
+    # mesh-sharded serving A/B: for archs whose heads split over the
+    # model axis, the probe must have run on a real multi-device mesh
+    # with token parity; the dryrun legs must cover the production scale
+    sd = row["shard_devices"]
+    if sd is not None:
+        if not (isinstance(sd, int) and sd >= 2):
+            sys.exit(f"BENCH_serve.json: {arch} shard_devices must be an "
+                     f"int >= 2 (a 1-way mesh proves nothing), got {sd!r}")
+        for col in ("shard_decode_tok_s", "shard_speedup"):
+            v = row[col]
+            if not (isinstance(v, (int, float)) and v > 0):
+                sys.exit(f"BENCH_serve.json: {arch} {col} must be a "
+                         f"positive number, got {v!r}")
+        if row.get("shard_token_parity") is not True:
+            sys.exit(f"BENCH_serve.json: {arch} sharded decode broke "
+                     f"token parity with the single-device engine")
+        devs = row.get("shard_dryrun_devices")
+        if devs is not None and (not devs or min(devs) < 256):
+            sys.exit(f"BENCH_serve.json: {arch} shard dryrun must cover "
+                     f">= 256 devices, got {devs!r}")
 print(f"schema OK ({len(report['archs'])} arch rows x "
       f"{len(REQUIRED)} required columns, paged + continuous + soak + "
-      f"numerical-health fields validated)")
+      f"numerical-health + shard fields validated)")
 EOF
 
 echo "CI OK"

@@ -16,7 +16,14 @@ winner in a JSON cache keyed by (op, shape, dtype, backend):
 
 The cache file lives at ``$REPRO_AUTOTUNE_CACHE`` (default
 ``~/.cache/repro/autotune.json``); entries from different backends never
-collide, so a cache warmed on TPU is inert on CPU and vice versa.  Entries
+collide, so a cache warmed on TPU is inert on CPU and vice versa.  The
+repo additionally SHIPS a pre-warmed cache (``kernels/pretuned.json``,
+``$REPRO_PRETUNED_CACHE`` to override) holding swept winners for the
+shipped arch configs' common shapes — loaded AFTER the user cache, so a
+locally-tuned winner always beats the shipped one, and only for entries
+whose recorded jax version matches the running install (a stale shipped
+entry silently falls back to the heuristic, same as any other version
+mismatch).  Entries
 are additionally keyed by the jax version that timed them — a jax upgrade
 changes Mosaic/XLA codegen, so pre-upgrade winners silently invalidate and
 ``best_block`` falls back to the heuristic until re-tuned.  Legacy
@@ -49,6 +56,7 @@ import jax.numpy as jnp
 __all__ = [
     "best_block", "lookup", "record", "candidates", "default_block",
     "autotune_matmul", "autotune_attention", "autotune_decode",
+    "pretuned_path",
 ]
 
 _MEM: Dict[str, List[int]] = {}     # in-process cache (file mirror + new wins)
@@ -109,6 +117,38 @@ def _migrate_key(k: str) -> Optional[str]:
     return "|".join(["v2"] + parts)
 
 
+def pretuned_path() -> str:
+    return os.environ.get(
+        "REPRO_PRETUNED_CACHE",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "pretuned.json"))
+
+
+def _load_pretuned() -> None:
+    """Adopt the shipped warm cache.  Called after the user's disk cache
+    (``setdefault``: local winners beat shipped ones).  Only v2 entries
+    whose key carries the RUNNING jax version are adopted — a pretuned
+    file generated under another jax is a silent no-op (heuristic
+    fallback), because codegen changed under the timed winners."""
+    try:
+        with open(pretuned_path()) as f:
+            ship = json.load(f)
+    except (OSError, ValueError):
+        return
+    if not isinstance(ship, dict):
+        return
+    tag = f"jax-{jax.__version__}"
+    for k, v in ship.get("entries", {}).items():
+        try:
+            block = [int(x) for x in v]
+        except (TypeError, ValueError):
+            continue
+        parts = k.split("|")
+        if parts[0] != "v2" or len(parts) != 6 or parts[5] != tag:
+            continue                     # stale version / malformed: skip
+        _MEM.setdefault(k, block)
+
+
 def _load_file() -> None:
     global _FILE_LOADED
     if _FILE_LOADED:
@@ -119,7 +159,7 @@ def _load_file() -> None:
         with open(path) as f:
             disk = json.load(f)
     except (OSError, ValueError):
-        return
+        disk = {}
     for k, v in disk.items():
         try:
             block = [int(x) for x in v]
@@ -128,6 +168,7 @@ def _load_file() -> None:
         k = _migrate_key(k)
         if k is not None:                # first entry per bucket wins
             _MEM.setdefault(k, block)
+    _load_pretuned()
 
 
 def reset(clear_env_cache: bool = False) -> None:

@@ -362,6 +362,25 @@ class ContinuousEngine:
         self.caches = init_caches(cfg, slots, max_len, model.policy,
                                   page_table=self._table,
                                   n_pages=self.n_pages)
+        # tensor-parallel placement: with a model axis > 1, pin the params
+        # (Megatron col/row rules) and the paged pools (head-sharded) to
+        # the mesh up front — the jitted burst/chunk programs then keep
+        # those shardings through every donated carry instead of
+        # rediscovering them per dispatch.  batch_axes=() because ONE
+        # engine is one data replica: its slots never batch-shard, and
+        # its block tables stay host-managed and model-replicated.
+        self.tp = (mesh.shape["model"]
+                   if mesh is not None
+                   and "model" in getattr(mesh, "axis_names", ()) else 1)
+        if self.tp > 1:
+            from ..models.sharding import cache_specs, named, param_specs
+            self.params = jax.device_put(
+                params, named(mesh, param_specs(params,
+                                                model_size=self.tp)))
+            self.caches = jax.device_put(
+                self.caches,
+                named(mesh, cache_specs(cfg, self.caches, batch=slots,
+                                        mesh=mesh, batch_axes=())))
         # per-slot host state (the scheduler's view; device state mirrors
         # it through the traced burst arguments)
         self.pos = np.full((slots,), max_len - 1, np.int32)
@@ -1206,4 +1225,86 @@ class ContinuousEngine:
             "straggler_ewma_s": monitor.ewma,
             **counters,
         }
+        return [results[r.rid] for r in requests], stats
+
+
+class ReplicatedEngine:
+    """Data-parallel engine replicas over a ``(data, model)`` serving mesh.
+
+    Each ``data`` row of the mesh becomes ONE ``ContinuousEngine`` running
+    tensor-parallel attention over its own ``("model",)`` sub-mesh
+    (``launch/mesh.py: replica_meshes``), with its OWN ``PageAllocator``
+    over a disjoint page pool and its own block tables — replicas share
+    no state and no collective, so the data axis is pure throughput.
+
+    The request queue is partitioned host-side: arrivals round-robin over
+    replicas in ``(arrival, rid)`` order, so each replica sees the same
+    heavy-tail mix and admission waves split ``~1/dp`` per replica.
+    ``run`` merges the ``Finished`` records back into input order and
+    aggregates stats — counters sum, occupancy is decode-round-weighted,
+    and the pool story is ``models.paged.aggregate_stats`` over the
+    per-replica allocators (disjoint pools: totals are plain sums).
+
+    The host loop drives replicas sequentially — each replica owns its
+    devices outright, so on real hardware the per-replica ``run`` loops
+    are embarrassingly parallel; serializing them here changes wall-clock
+    on a simulated mesh, never tokens or accounting."""
+
+    def __init__(self, model, params, *, mesh, **kw):
+        from .mesh import replica_meshes
+        subs = replica_meshes(mesh)
+        self.mesh = mesh
+        self.engines = [ContinuousEngine(model, params, mesh=m, **kw)
+                        for m in subs]
+
+    @property
+    def allocators(self):
+        return [e.alloc for e in self.engines]
+
+    def partition(self, requests: Sequence[Request]) -> List[List[Request]]:
+        """Round-robin split in ``(arrival, rid)`` order — deterministic,
+        and each replica's sub-queue preserves the arrival ordering the
+        single-engine admission loop expects."""
+        parts: List[List[Request]] = [[] for _ in self.engines]
+        for i, r in enumerate(sorted(requests,
+                                     key=lambda r: (r.arrival, r.rid))):
+            parts[i % len(parts)].append(r)
+        return parts
+
+    def run(self, requests: Sequence[Request]):
+        """Serve ``requests`` across all replicas.  Returns
+        ``(finished, stats)`` with ``finished`` in input order;
+        ``stats["replicas"]`` keeps each replica's own record and
+        ``stats["pool"]`` the aggregated allocator view."""
+        from ..models.paged import aggregate_stats
+        parts = self.partition(requests)
+        results: Dict[int, Finished] = {}
+        per = []
+        for eng, part in zip(self.engines, parts):
+            fin, st = eng.run(part)
+            for f in fin:
+                results[f.rid] = f
+            per.append(st)
+        dr = sum(s["decode_rounds"] for s in per)
+        stats = {
+            "replicas_n": len(self.engines),
+            "rounds": max((s["rounds"] for s in per), default=0),
+            "decode_rounds": dr,
+            "bursts": sum(s["bursts"] for s in per),
+            "occupancy": (sum(s["occupancy"] * s["decode_rounds"]
+                              for s in per) / dr if dr else 0.0),
+            "peak_live_pages": sum(s["peak_live_pages"] for s in per),
+            "n_pages": sum(s["n_pages"] for s in per),
+            "fixed_equiv_pages": sum(s["fixed_equiv_pages"] for s in per),
+            "deadline_total": sum(s["deadline_total"] for s in per),
+            "deadline_misses": sum(s["deadline_misses"] for s in per),
+            "pool": aggregate_stats(self.allocators),
+            "replicas": per,
+        }
+        dl = stats["deadline_total"]
+        stats["deadline_miss_rate"] = (stats["deadline_misses"] / dl
+                                       if dl else 0.0)
+        for k in per[0] if per else ():
+            if k not in stats and isinstance(per[0][k], (int, np.integer)):
+                stats[k] = sum(s[k] for s in per)
         return [results[r.rid] for r in requests], stats

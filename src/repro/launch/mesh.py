@@ -1,12 +1,37 @@
-"""Production mesh definitions.
+"""Production and serving mesh definitions.
 
-``make_production_mesh`` is a FUNCTION (not a module constant) so importing
-this module never touches jax device state — mandatory because the dry-run
-must set XLA_FLAGS before any jax initialization.
+``make_production_mesh`` / ``make_serving_mesh`` are FUNCTIONS (not module
+constants) so importing this module never touches jax device state —
+mandatory because the dry-run must set XLA_FLAGS before any jax
+initialization.
+
+Version gates (both paths unit-tested by monkeypatching, not just the
+installed version's branch):
+  * ``jax.make_mesh`` (new in 0.4.35ish) vs. hand-reshaping
+    ``jax.devices()`` into ``jax.sharding.Mesh`` — ``_mk_mesh``.
+  * ``jax.sharding.AxisType`` (jax >= 0.5 explicit-sharding types) —
+    probed with ``hasattr``; 0.4.x meshes take no ``axis_types``.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
+
+
+def _mk_mesh(shape, axes, **kw):
+    """Build a Mesh over the first ``prod(shape)`` devices, via
+    ``jax.make_mesh`` when this jax has it, else the classic
+    ``jax.sharding.Mesh(np.reshape(devices), axes)`` construction."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, **kw)
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"mesh {shape} needs {n} devices, "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,7 +43,33 @@ def make_production_mesh(*, multi_pod: bool = False):
     kw = {}
     if hasattr(jax.sharding, "AxisType"):   # jax >= 0.5 (Auto is the
         kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, **kw)  # 0.4.x default)
+    return _mk_mesh(shape, axes, **kw)      # 0.4.x default)
+
+
+def make_serving_mesh(dp: int, tp: int):
+    """Serving mesh ``(data=dp, model=tp)`` over the first ``dp * tp``
+    devices: the ``model`` axis tensor-parallelizes attention heads and
+    the paged KV pools inside each engine replica; the ``data`` axis
+    indexes data-parallel engine replicas (request queues are partitioned
+    host-side — see ``launch/engine.py: ReplicatedEngine``)."""
+    if dp < 1 or tp < 1:
+        raise ValueError(f"mesh axes must be >= 1, got dp={dp} tp={tp}")
+    return _mk_mesh((dp, tp), ("data", "model"))
+
+
+def replica_meshes(mesh) -> list:
+    """One single-axis ``("model",)`` sub-mesh per ``data`` row of a
+    serving mesh — each data-parallel engine replica runs its
+    tensor-parallel attention over its OWN row of devices, so replicas
+    never share a collective."""
+    devs = np.asarray(mesh.devices)
+    if mesh.axis_names == ("model",):
+        return [mesh]
+    if mesh.axis_names != ("data", "model"):
+        raise ValueError(f"expected a (data, model) serving mesh, got "
+                         f"axes {mesh.axis_names}")
+    return [jax.sharding.Mesh(devs[i], ("model",))
+            for i in range(devs.shape[0])]
 
 
 def dp_axes_of(mesh) -> tuple:

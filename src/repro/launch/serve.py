@@ -209,6 +209,16 @@ def main(argv=None):
                     help="prefill chunk width of the continuous engine")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serving mesh dp,tp: tp-way tensor-parallel "
+                         "attention heads + paged KV pools per replica, "
+                         "dp data-parallel engine replicas (dp > 1 "
+                         "requires --continuous)")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="simulate N host devices (prepends "
+                         "--xla_force_host_platform_device_count=N to "
+                         "XLA_FLAGS before jax initializes — CPU bring-up "
+                         "for --mesh; no effect on real accelerators)")
     args = ap.parse_args(argv)
     if ((args.ragged or args.paged or args.stop_token is not None
          or args.continuous) and args.loop != "scan"):
@@ -224,6 +234,26 @@ def main(argv=None):
     if pen and args.loop != "scan":
         ap.error("--repetition-penalty / --presence-penalty apply to the "
                  "scan/while generate() and continuous-engine paths only")
+    mesh_dims = None
+    if args.mesh is not None:
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error("--mesh expects DP,TP (e.g. --mesh 2,4)")
+        if dp < 1 or tp < 1:
+            ap.error(f"--mesh axes must be >= 1, got {dp},{tp}")
+        if dp > 1 and not args.continuous:
+            ap.error("--mesh with dp > 1 requires --continuous (the data "
+                     "axis is engine replication)")
+        if args.mesh is not None and args.loop != "scan":
+            ap.error("--mesh requires --loop scan")
+        mesh_dims = (dp, tp)
+    if args.devices is not None:
+        # must land in the environment BEFORE jax initializes its backend
+        import os
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = \
+            (flag + " " + os.environ.get("XLA_FLAGS", "")).strip()
 
     import jax
     import jax.numpy as jnp
@@ -238,11 +268,23 @@ def main(argv=None):
         model = model.with_cfg(paged_kv=True, page_size=args.page_size)
     params = model.init(jax.random.key(0))
 
+    mesh = rmesh = None
+    dp = 1
+    if mesh_dims is not None:
+        from .mesh import make_serving_mesh, replica_meshes
+        dp, tp = mesh_dims
+        mesh = make_serving_mesh(dp, tp)
+        rmesh = replica_meshes(mesh)[0]     # one replica's ("model",) row
+        print(f"serving mesh: {dp} data-parallel replica(s) x {tp}-way "
+              f"tensor parallel over {dp * tp} of {jax.device_count()} "
+              f"devices")
+
     if args.continuous:
         import dataclasses as _dc
 
         from ..train.fault import ServeFaultPlan
-        from .engine import ContinuousEngine, Request, synthetic_trace
+        from .engine import (ContinuousEngine, ReplicatedEngine, Request,
+                             synthetic_trace)
         dl_rounds = (None if args.deadline_ms is None
                      else max(1, int(args.deadline_ms / args.round_ms)))
         if args.arrival_trace:
@@ -291,19 +333,19 @@ def main(argv=None):
                 ladder=tuple(args.escalate.split(",")),
                 of_threshold=args.escalate_of_threshold)
         max_len = max(r.prompt_len + r.max_new for r in reqs)
-        eng = ContinuousEngine(model, params, slots=args.slots,
-                               max_len=max_len, chunk=args.chunk,
-                               n_pages=args.pool_pages,
-                               stop_token=args.stop_token,
-                               temperature=args.temperature,
-                               top_k=args.top_k, top_p=args.top_p,
-                               seed=args.seed, burst_cap=args.burst_cap,
-                               repetition_penalty=args.repetition_penalty,
-                               presence_penalty=args.presence_penalty,
-                               preempt=args.preempt,
-                               degrade_fmt=args.degrade_fmt,
-                               shed=args.shed, fault_plan=plan,
-                               escalate=esc)
+        eng_kw = dict(slots=args.slots, max_len=max_len, chunk=args.chunk,
+                      n_pages=args.pool_pages, stop_token=args.stop_token,
+                      temperature=args.temperature,
+                      top_k=args.top_k, top_p=args.top_p,
+                      seed=args.seed, burst_cap=args.burst_cap,
+                      repetition_penalty=args.repetition_penalty,
+                      presence_penalty=args.presence_penalty,
+                      preempt=args.preempt, degrade_fmt=args.degrade_fmt,
+                      shed=args.shed, fault_plan=plan, escalate=esc)
+        if dp > 1:
+            eng = ReplicatedEngine(model, params, mesh=mesh, **eng_kw)
+        else:
+            eng = ContinuousEngine(model, params, mesh=rmesh, **eng_kw)
         fin, stats = eng.run(reqs)      # compile + warm
         t0 = time.time()
         fin, stats = eng.run(reqs)
@@ -313,7 +355,9 @@ def main(argv=None):
               f"{len(reqs)} requests, pool {stats['n_pages']} pages, "
               f"preempt={args.preempt}"
               + (f", degrade={args.degrade_fmt}" if args.degrade_fmt
-                 else ""))
+                 else "")
+              + (f", mesh {mesh_dims[0]}x{mesh_dims[1]}"
+                 if mesh_dims else ""))
         for f in fin:
             trail = ""
             if f.preemptions:
@@ -424,7 +468,7 @@ def main(argv=None):
             stop_token=args.stop_token, page_table=tb, n_pages=n_pages,
             repetition_penalty=args.repetition_penalty,
             presence_penalty=args.presence_penalty,
-            guard_nonfinite=True)[::2])
+            guard_nonfinite=True, mesh=rmesh)[::2])
         gen, bad = jax.block_until_ready(
             gen_fn(params, prompts, prompt_lens, page_table))
         t0 = time.time()

@@ -278,6 +278,80 @@ class KVCache(NamedTuple):
     v: jnp.ndarray
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel head sharding (mesh "model" axis)
+# ---------------------------------------------------------------------------
+def _head_shard_size(mesh, n_heads, n_kv_heads, axis: str = "model"):
+    """Tensor-parallel degree for head-sharded attention, or ``None`` for
+    the single-device path: requires a mesh with a ``model`` axis of size
+    > 1 that divides BOTH the query and KV head counts (every shard gets
+    whole heads of each — GQA groups never straddle a shard)."""
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return None
+    size = mesh.shape[axis]
+    if size <= 1 or n_heads % size or n_kv_heads % size:
+        return None
+    return size
+
+
+def _headshard_call(mesh, fn, q, head_ops=(), rep_ops=(),
+                    axis: str = "model"):
+    """Run ``fn(q, *head_ops, *rep_ops)`` under ``shard_map`` with the
+    head axis (axis 1 of q and of every ``head_ops`` operand — q, K/V,
+    caches and page pools all carry heads there) partitioned over the
+    mesh ``axis``; ``rep_ops`` (block tables, kv_len vectors) are
+    replicated.  Per-head attention outputs are independent, so the
+    out-spec concatenation over heads is BIT-IDENTICAL to the unsharded
+    call — the kernel bodies run unchanged on their head slice.
+
+    Every traced operand must be passed explicitly (shard_map closures
+    must not capture tracers); ``fn`` may capture only static
+    configuration (policy, window, softcap, static q_offset...)."""
+    from ..core.compat import shard_map_compat
+    hs = P(None, axis, None, None)
+    in_specs = (hs,) * (1 + len(head_ops)) + (P(),) * len(rep_ops)
+    f = shard_map_compat(fn, mesh=mesh, in_specs=in_specs, out_specs=hs,
+                         axis_names=set(mesh.axis_names))
+    return f(q, *head_ops, *rep_ops)
+
+
+def _row_parallel_wo(mesh, out, wo, policy, axis: str = "model"):
+    """Row-parallel output projection: ``out`` [B, S, H*Dv] arrives
+    head-major from the head-sharded attend (shard k owns the contiguous
+    feature block of its heads), ``wo`` [H*Dv, D] is split over the same
+    rows, and the partial products ``psum`` over ``axis``.  This is the
+    bit-exactness boundary: per-head attend outputs are bitwise, the
+    psum's reduction order is not — projections match the single-device
+    path to fp32 allclose.
+
+    Each shard's partial product stays fp32 through the psum; the
+    policy's accumulate/output format snap is applied ONCE to the full
+    sum (exactly where the single-device ``tp_einsum`` applies it) — a
+    per-shard snap would quantize the partials themselves and drift by a
+    whole output-format ulp instead of fp32 reduction-order noise."""
+    from ..core.compat import shard_map_compat
+
+    def body(o, w):
+        return jax.lax.psum(
+            tp.tp_einsum("bse,ed->bsd", o, w, policy, out_fmt="fp32"), axis)
+
+    f = shard_map_compat(body, mesh=mesh,
+                         in_specs=(P(None, None, axis), P(axis, None)),
+                         out_specs=P(),
+                         axis_names=set(mesh.axis_names))
+    r = f(out, wo)
+    pol = tp.get_policy(policy)
+    mp = pol.matmul
+    out_f = mp.resolved_out()
+    if pol.mode == "native":
+        return r.astype(out_f.native_dtype)
+    if mp.acc_fmt.name != "fp32":
+        r = tp.quantize_ste(r, mp.acc_fmt, pol.rounding)
+    if out_f.name != "fp32":
+        r = tp.quantize_ste(r, out_f, pol.rounding)
+    return r
+
+
 def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   positions, causal=True, window=None, attn_softcap=None,
                   rope_theta=1e4, qk_norm=False, norm_eps=1e-6,
@@ -288,7 +362,7 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   decode_backend: str = "dense",
                   prefill_backend: str = "dense",
                   kv_len=None, esc_fmts=None, kv_levels=None,
-                  kv_scale=None):
+                  kv_scale=None, mesh=None, return_attend: bool = False):
     """Returns (out [B,S,D], new_cache) — or (out, new_cache, kv_flags)
     when ``esc_fmts`` is given (the arity is static per trace).
 
@@ -320,6 +394,18 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     third return value ``kv_flags`` [B, 2].  ``kv_scale`` (traced scalar,
     default off) multiplies K/V pre-quantization — the fault-injection
     hook that forces narrow-rung overflow on demand.
+
+    Tensor parallelism: ``mesh`` with a ``model`` axis whose size divides
+    both head counts runs every attend (dense AND Pallas, prefill AND
+    decode, contiguous AND paged) under ``shard_map`` on its head slice —
+    bit-identical per head to the single-device path — and the output
+    projection row-parallel with a ``psum`` (fp32-allclose; see
+    ``_row_parallel_wo``).  Cache writes stay outside the shard_map
+    regions (the pool arrays carry their own shardings); block tables and
+    ``kv_len`` are replicated.  An absent/size-1/indivisible axis falls
+    back to the unsharded path.  ``return_attend=True`` (debug/test hook)
+    returns the pre-projection per-head attend output [B, H, S, Dv]
+    instead of the projected residual contribution.
     """
     b, s, d = x.shape
     q = tp.tp_einsum("bsd,de->bse", x, params["wq"], policy)
@@ -343,6 +429,13 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     k = shard(k.swapaxes(1, 2), bspec("model", None, None))
     v = shard(v.swapaxes(1, 2), bspec("model", None, None))
 
+    tp_size = _head_shard_size(mesh, n_heads, n_kv_heads)
+
+    def _attend(fn, head_ops=(), rep_ops=()):
+        if tp_size is None:
+            return fn(q, *head_ops, *rep_ops)
+        return _headshard_call(mesh, fn, q, head_ops, rep_ops)
+
     new_cache = None
     kv_flags = jnp.zeros((b, 2), jnp.int32)  # OF, UF write counts per row
     if kv_states is not None:
@@ -355,9 +448,11 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                                              (0, 0, 0, 0)),
                 jax.lax.dynamic_update_slice(cache.v, v.astype(cdt),
                                              (0, 0, 0, 0)))
-        out = _masked_softmax_attend(q, k, v, policy, causal=False,
-                                     window=None, cap=attn_softcap,
-                                     q_offset=0, chunk=chunk)
+        out = _attend(
+            lambda q_, k_, v_: _masked_softmax_attend(
+                q_, k_, v_, policy, causal=False, window=None,
+                cap=attn_softcap, q_offset=0, chunk=chunk),
+            head_ops=(k, v))
     elif cache is not None:
         paged = isinstance(cache, PagedKVCache)
         if esc_fmts is not None:
@@ -391,56 +486,91 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
             # keeps the indirection down to the kernel's index maps; the
             # dense fallback gathers the pool (pure data movement, so it
             # is bit-identical to attending the contiguous values).
-            live = kv_len if kv_len is not None else cache_pos + s
+            live = jnp.asarray(
+                kv_len if kv_len is not None else cache_pos + s, jnp.int32)
             if _use_pallas_prefill(prefill_backend, cache_pos):
-                out = _flash_attend_paged(q, new_cache, policy,
-                                          causal=causal, window=window,
-                                          cap=attn_softcap,
-                                          q_offset=cache_pos, kv_len=live)
+                out = _attend(
+                    lambda q_, kp, vp, bt, lv: _flash_attend_paged(
+                        q_, PagedKVCache(kp, vp, bt), policy, causal=causal,
+                        window=window, cap=attn_softcap, q_offset=cache_pos,
+                        kv_len=lv),
+                    head_ops=(new_cache.k_pool, new_cache.v_pool),
+                    rep_ops=(new_cache.block_table, live))
             else:
-                out = _masked_softmax_attend(
-                    q,
-                    gather_paged_kv(new_cache.k_pool, new_cache.block_table),
-                    gather_paged_kv(new_cache.v_pool, new_cache.block_table),
-                    policy, causal=causal, window=window, cap=attn_softcap,
-                    q_offset=cache_pos, chunk=chunk, kv_len=live,
-                    windowed_slice=windowed_slice)
+                out = _attend(
+                    lambda q_, kp, vp, bt, lv: _masked_softmax_attend(
+                        q_, gather_paged_kv(kp, bt), gather_paged_kv(vp, bt),
+                        policy, causal=causal, window=window,
+                        cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
+                        kv_len=lv, windowed_slice=windowed_slice),
+                    head_ops=(new_cache.k_pool, new_cache.v_pool),
+                    rep_ops=(new_cache.block_table, live))
         elif s > 1:
             # prefill: the prompt itself is the entire live cache content —
             # attend over the *current* k/v, not the cache buffer (kv_len
             # carries the per-row prompt lengths of a ragged batch).
+            lv_ops = (() if kv_len is None
+                      else (jnp.asarray(kv_len, jnp.int32),))
             if _use_pallas_prefill(prefill_backend, cache_pos):
-                out = _flash_attend(q, k, v, policy, causal=causal,
-                                    window=window, cap=attn_softcap,
-                                    q_offset=cache_pos, kv_len=kv_len)
+                out = _attend(
+                    lambda q_, k_, v_, *lv: _flash_attend(
+                        q_, k_, v_, policy, causal=causal, window=window,
+                        cap=attn_softcap, q_offset=cache_pos,
+                        kv_len=lv[0] if lv else None),
+                    head_ops=(k, v), rep_ops=lv_ops)
             else:
-                out = _masked_softmax_attend(
-                    q, k, v, policy, causal=causal, window=window,
-                    cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
-                    kv_len=kv_len, windowed_slice=windowed_slice)
+                out = _attend(
+                    lambda q_, k_, v_, *lv: _masked_softmax_attend(
+                        q_, k_, v_, policy, causal=causal, window=window,
+                        cap=attn_softcap, q_offset=cache_pos, chunk=chunk,
+                        kv_len=lv[0] if lv else None,
+                        windowed_slice=windowed_slice),
+                    head_ops=(k, v), rep_ops=lv_ops)
         else:
             if kv_len is None:
                 kv_len = cache_pos + s     # [B] vector when cache_pos is one
+            kvl = jnp.asarray(kv_len, jnp.int32)
             if paged:
-                out = _decode_attend_paged(q, new_cache, policy,
-                                           kv_len=kv_len, window=window,
-                                           cap=attn_softcap,
-                                           backend=decode_backend)
+                out = _attend(
+                    lambda q_, kp, vp, bt, lv: _decode_attend_paged(
+                        q_, PagedKVCache(kp, vp, bt), policy, kv_len=lv,
+                        window=window, cap=attn_softcap,
+                        backend=decode_backend),
+                    head_ops=(new_cache.k_pool, new_cache.v_pool),
+                    rep_ops=(new_cache.block_table, kvl))
             else:
-                out = _decode_attend(q, ck, cv, policy, kv_len=kv_len,
-                                     window=window, cap=attn_softcap,
-                                     backend=decode_backend)
-    elif _use_pallas_prefill(prefill_backend):
-        out = _flash_attend(q, k, v, policy, causal=causal, window=window,
-                            cap=attn_softcap, q_offset=0, kv_len=kv_len)
+                out = _attend(
+                    lambda q_, k_, v_, lv: _decode_attend(
+                        q_, k_, v_, policy, kv_len=lv, window=window,
+                        cap=attn_softcap, backend=decode_backend),
+                    head_ops=(ck, cv), rep_ops=(kvl,))
     else:
-        out = _masked_softmax_attend(
-            q, k, v, policy, causal=causal,
-            window=window, cap=attn_softcap, q_offset=0, chunk=chunk,
-            kv_len=kv_len, windowed_slice=windowed_slice)
+        lv_ops = (() if kv_len is None
+                  else (jnp.asarray(kv_len, jnp.int32),))
+        if _use_pallas_prefill(prefill_backend):
+            out = _attend(
+                lambda q_, k_, v_, *lv: _flash_attend(
+                    q_, k_, v_, policy, causal=causal, window=window,
+                    cap=attn_softcap, q_offset=0,
+                    kv_len=lv[0] if lv else None),
+                head_ops=(k, v), rep_ops=lv_ops)
+        else:
+            out = _attend(
+                lambda q_, k_, v_, *lv: _masked_softmax_attend(
+                    q_, k_, v_, policy, causal=causal, window=window,
+                    cap=attn_softcap, q_offset=0, chunk=chunk,
+                    kv_len=lv[0] if lv else None,
+                    windowed_slice=windowed_slice),
+                head_ops=(k, v), rep_ops=lv_ops)
+
+    if return_attend:
+        return out, new_cache
 
     out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
-    proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
+    if tp_size is None:
+        proj = tp.tp_einsum("bse,ed->bsd", out, params["wo"], policy)
+    else:
+        proj = _row_parallel_wo(mesh, out, params["wo"], policy)
     proj = shard(proj, residual_spec())
     if esc_fmts is not None:
         return proj, new_cache, kv_flags

@@ -168,7 +168,10 @@ def moe_block(x, params, cfg: MoEConfig, policy, *, mesh=None,
     xf = x.reshape(b * s, d)
     routed = {k: v for k, v in params.items() if k != "shared"}
 
-    ba = batch_axes()
+    # under an explicit mesh the specs may only name ITS axes: a serving
+    # replica's ("model",) sub-mesh has no "data" axis to batch-shard over
+    ba = tuple(a for a in batch_axes()
+               if mesh is None or a in mesh.axis_names)
     if mesh is not None and ep_axis in mesh.axis_names and \
             mesh.shape[ep_axis] > 1:
         ep = mesh.shape[ep_axis]
@@ -184,7 +187,7 @@ def moe_block(x, params, cfg: MoEConfig, policy, *, mesh=None,
 
         y, aux = shard_map(
             body, mesh=mesh,
-            in_specs=(P(ba), pspec),
+            in_specs=(P(ba if ba else None), pspec),
             out_specs=(P(ba), P(*ba) if ba else P()),
             check_vma=False,
         )(xf, routed)

@@ -11,6 +11,7 @@ xlstm's 8-wide gate projection on a 16-way model axis).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -92,7 +93,15 @@ def param_specs(params, model_axis: str = "model", model_size: int = 16,
                 name = entry.key
                 break
         role = rules.get(name, "rep")
-        return _spec_for_role(role, leaf.shape, model_axis, model_size)
+        spec = _spec_for_role(role, leaf.shape, model_axis, model_size)
+        if role != "rep" and spec == P():
+            # the divisibility fallback used to be silent — a 16-way mesh
+            # quietly replicating a "sharded" tensor is a memory surprise
+            warnings.warn(
+                f"sharding: {name!r} {tuple(leaf.shape)} (role {role!r}) "
+                f"does not divide the {model_size}-way {model_axis!r} axis "
+                f"— replicated instead", stacklevel=3)
+        return spec
 
     return jax.tree_util.tree_map_with_path(visit, params)
 
@@ -129,6 +138,18 @@ def cache_specs(cfg: ModelConfig, caches, *, batch: int, mesh,
         def m(dim):
             return model_axis if body[dim] % msize == 0 else None
 
+        if field in ("k_pool", "v_pool"):
+            # paged pool [n_pages, Hkv, page, Dh] — NO batch dim: pages
+            # replicate across data replicas (each engine replica owns a
+            # whole pool), heads shard over model when divisible
+            hkv = shape[len(lead) + 1]
+            return P(*lead, None,
+                     model_axis if hkv % msize == 0 else None, None, None)
+        if field == "block_table":                   # [B, max_pages]
+            # host-managed page indirection: replicated over model (every
+            # shard dereferences the same table), batch-sharded like the
+            # rows it indexes
+            return P(*lead, ba, None)
         if field in ("k", "v"):                      # KVCache [B,Hkv,S,Dh]
             if body[0] % msize == 0:
                 return spec(model_axis, None, None)

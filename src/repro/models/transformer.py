@@ -353,7 +353,8 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             cache=kv_cache, cache_pos=cache_pos, use_rope=spec.use_rope,
             chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
             decode_backend=cfg.decode_backend,
-            prefill_backend=cfg.prefill_backend, kv_len=kv_len, **esc_kw)
+            prefill_backend=cfg.prefill_backend, kv_len=kv_len, mesh=mesh,
+            **esc_kw)
         if esc_fmts is not None:
             mix, nc, kv_flags = r
         else:
@@ -395,7 +396,8 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
                 n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
                 positions=positions, causal=False, use_rope=False,
                 kv_states=enc_states,
-                cache=cache.get("xkv") if cache else None, cache_pos=0)
+                cache=cache.get("xkv") if cache else None, cache_pos=0,
+                mesh=mesh)
         else:
             # decode: attend against the cached cross K/V
             mixx = attn.cross_attend_cached(

@@ -112,3 +112,98 @@ def test_recorded_block_drives_tp_matmul(tuner_cache):
     got = kops.tp_matmul(a, b, policy="fp32")
     want = ref.tp_matmul_ref(a, b, out_dtype=jnp.float32, bk=128)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# shipped pre-warmed cache (kernels/pretuned.json)
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def pretuned(tmp_path, monkeypatch):
+    """Isolated disk cache AND a writable pretuned path; returns a helper
+    that writes a pretuned file and reloads the tuner."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "user.json"))
+    path = tmp_path / "pretuned.json"
+    monkeypatch.setenv("REPRO_PRETUNED_CACHE", str(path))
+
+    def ship(entries, **hdr):
+        path.write_text(json.dumps({"jax": "x", "backend": "cpu",
+                                    "entries": entries, **hdr}))
+        autotune.reset()
+
+    autotune.reset()
+    yield ship
+    autotune.reset()
+
+
+def _pkey(op, shape, version=None):
+    k = autotune._key(op, shape, jnp.float32, backend="cpu")
+    if version is not None:
+        k = k.rsplit("|", 1)[0] + f"|jax-{version}"
+    return k
+
+
+def test_pretuned_warm_hit(pretuned):
+    shape, block = (64, 256, 128), (32, 128, 128)
+    pretuned({_pkey("matmul", shape): block})
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") == tuple(block)
+    assert autotune.best_block("matmul", shape, jnp.float32,
+                               backend="cpu") == tuple(block)
+
+
+def test_pretuned_cold_miss_falls_back_to_heuristic(pretuned):
+    # no pretuned file at all: loader is silent, heuristics serve
+    autotune.reset()
+    shape = (64, 256, 128)
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") is None
+    assert autotune.best_block("matmul", shape, jnp.float32, backend="cpu") \
+        == autotune.default_block("matmul", shape)
+    # file present but the key is for a different shape: still a miss
+    pretuned({_pkey("matmul", (128, 64, 64)): [128, 128, 128]})
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") is None
+
+
+def test_pretuned_stale_version_not_adopted(pretuned):
+    shape = (64, 256, 128)
+    pretuned({_pkey("matmul", shape, version="0.0.0"): [32, 128, 128]})
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") is None
+    assert autotune.best_block("matmul", shape, jnp.float32, backend="cpu") \
+        == autotune.default_block("matmul", shape)
+
+
+def test_pretuned_user_cache_wins(pretuned, tmp_path):
+    shape = (64, 256, 128)
+    (tmp_path / "user.json").write_text(json.dumps(
+        {_pkey("matmul", shape): [64, 128, 128]}))
+    pretuned({_pkey("matmul", shape): [32, 128, 128]})
+    # setdefault order: the user's locally-swept winner beats the shipped one
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") == (64, 128, 128)
+
+
+def test_pretuned_malformed_entries_skipped(pretuned):
+    shape = (64, 256, 128)
+    pretuned({_pkey("matmul", shape): "not-a-block",
+              "v2|matmul|truncated": [8, 128, 128],
+              _pkey("attn", (256, 512, 64)): [64, 256]})
+    assert autotune.lookup("matmul", shape, jnp.float32,
+                           backend="cpu") is None
+    assert autotune.lookup("attn", (256, 512, 64), jnp.float32,
+                           backend="cpu") == (64, 256)
+
+
+def test_shipped_pretuned_file_is_wellformed():
+    """The repo's own kernels/pretuned.json: valid JSON, v2 keys, integer
+    blocks — so the loader adopts it wholesale when versions match."""
+    with open(os.path.join(os.path.dirname(autotune.__file__),
+                           "pretuned.json")) as f:
+        ship = json.load(f)
+    assert ship["entries"]
+    for k, v in ship["entries"].items():
+        parts = k.split("|")
+        assert parts[0] == "v2" and len(parts) == 6
+        assert parts[1] in ("matmul", "attn", "decode_attn")
+        assert all(isinstance(x, int) and x > 0 for x in v)
