@@ -49,6 +49,13 @@ queue mid-generation; ``peak_live_pages`` tracks the pool high-water mark
 against the ``slots x max_pages`` a fixed paged batch pins for the whole
 run.  Archs that cannot page carry null continuous columns.
 
+Speculative A/B (``spec_decode_tok_s`` / ``spec_accept_rate`` /
+``spec_token_parity``): the PR-9 transprecision speculative decoder — a
+shallow layer-skip draft proposes k tokens per row, one chunk-scoring
+verify call at target precision accepts the longest matching prefix —
+against the plain greedy engine on the same trace.  Parity must be TRUE:
+speculation is only allowed to change speed, never a token.
+
 Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
 tracked PR-over-PR.
 
@@ -203,6 +210,14 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     # slots.  Archs that cannot page carry null columns.)
     cont = continuous_ab(arch, prompt_len=prompt_len, quick=quick)
     row.update(cont)
+
+    # -- speculative-vs-plain A/B on the same engine + trace ----------------
+    # (the PR-9 transprecision speculative decoder: a layer-skip draft
+    # proposes k tokens per row, one chunk-scoring verify at target
+    # precision accepts the longest matching prefix.  The accepted stream
+    # must be BIT-IDENTICAL to plain greedy serving — ``spec_token_parity``
+    # gates it — so the only thing speculation may change is speed.)
+    row.update(speculative_ab(arch, prompt_len=prompt_len, quick=quick))
 
     # -- robustness soak: overload + injected faults must drain -------------
     # (the PR-6 backpressure machinery: bursty over-committed arrivals on a
@@ -442,6 +457,71 @@ def continuous_ab(arch: str, *, prompt_len: int, quick: bool = False,
         "continuous_useful_tokens": useful,
         "continuous_rounds": st["rounds"],
         "continuous_bursts": st["bursts"],
+    }
+
+
+def speculative_ab(arch: str, *, prompt_len: int, quick: bool = False,
+                   slots: int = 4, gen: int = 64, n_req: int = 12,
+                   spec_k: int = 3, draft_repeats: int = 1) -> dict:
+    """Speculative-vs-plain continuous serving on one arrival trace.
+
+    Both engines serve the SAME deterministic trace on the same slots;
+    the speculative leg drafts ``spec_k`` tokens per row with a
+    ``draft_repeats``-deep layer-skip pass and verifies the chunk in one
+    target-precision call.  ``spec_token_parity`` asserts the headline
+    guarantee — every request's accepted stream equals the plain greedy
+    engine's bit for bit — and ``spec_accept_rate`` (emitted tokens over
+    ``live-row-rounds x (k+1)``) tracks how much of each draft survives.
+    On CPU the draft pass is real compute on the critical path, so the
+    speedup is honest-but-pessimistic; on accelerators the narrow-format
+    draft is where the transprecision energy story cashes out.  Archs
+    that cannot page carry nulls."""
+    import jax
+    from repro.launch.engine import ContinuousEngine, synthetic_trace
+    from repro.models.registry import build_model
+
+    if quick:
+        slots, gen, n_req = 2, 16, 6
+    keys = ("spec_decode_tok_s", "spec_plain_tok_s", "spec_speedup",
+            "spec_accept_rate", "spec_token_parity")
+    model = build_model(arch, policy="tp_bf16", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    if why is not None:
+        out = {k: None for k in keys}
+        out["spec_unsupported"] = why
+        return out
+    model_pg = model.with_cfg(paged_kv=True, page_size=16)
+    params = model_pg.init(jax.random.key(0))
+    max_len = prompt_len + gen + spec_k        # draft lookahead headroom
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen, model.cfg.vocab)
+    useful = sum(r.max_new for r in reqs)
+
+    def leg(**kw):
+        eng = ContinuousEngine(model_pg, params, slots=slots,
+                               max_len=max_len, chunk=16, burst_cap=64,
+                               **kw)
+        eng.run(reqs)                              # compile + warm
+        ts = []
+        for _ in range(1 if quick else 3):
+            t0 = time.perf_counter()
+            fin, st = eng.run(reqs)
+            ts.append(time.perf_counter() - t0)
+        return useful / _median(ts), fin, st
+
+    plain_rate, fin_p, _ = leg()
+    spec_rate, fin_s, st = leg(spec_k=spec_k, draft_repeats=draft_repeats)
+    return {
+        "spec_decode_tok_s": spec_rate,
+        "spec_plain_tok_s": plain_rate,
+        "spec_speedup": spec_rate / plain_rate,
+        "spec_accept_rate": st["spec_accept_rate"],
+        "spec_token_parity": (
+            len(fin_s) == len(fin_p) == n_req
+            and all(a.tokens == b.tokens for a, b in zip(fin_s, fin_p))),
+        "spec_k": spec_k,
+        "spec_draft_repeats": draft_repeats,
+        "spec_rounds": st["spec_rounds"],
+        "spec_emitted": st["spec_emitted"],
     }
 
 
@@ -715,6 +795,16 @@ def main(argv=None):
         else:
             print(f"  continuous n/a "
                   f"({row.get('continuous_unsupported')})", flush=True)
+        if row.get("spec_decode_tok_s") is not None:
+            print(f"  speculative {row['spec_decode_tok_s']:.1f} tok/s "
+                  f"vs plain {row['spec_plain_tok_s']:.1f} tok/s "
+                  f"({row['spec_speedup']:.2f}x) | accept "
+                  f"{row['spec_accept_rate']:.2f} (k={row['spec_k']}, "
+                  f"draft_repeats={row['spec_draft_repeats']}) | "
+                  f"parity={row['spec_token_parity']}", flush=True)
+        else:
+            print(f"  speculative n/a "
+                  f"({row.get('spec_unsupported')})", flush=True)
         if row.get("soak_drained") is not None:
             print(f"  soak drained={row['soak_drained']} "
                   f"({row['soak_requests']} reqs, "

@@ -17,7 +17,8 @@ echo "== tier-1 tests (engine + fault modules gated separately below) =="
 # vs the paged oracles, allocator misuse errors, preemption-batch frees,
 # prefix sharing) — all kernel tests run in Pallas interpret mode on CPU
 python -m pytest -x -q --ignore=tests/test_engine.py \
-    --ignore=tests/test_engine_faults.py
+    --ignore=tests/test_engine_faults.py \
+    --ignore=tests/test_speculative.py
 
 echo "== continuous-batching engine tests =="
 # the PR-5 serving engine gate, run once as its own named step so a
@@ -31,6 +32,18 @@ echo "== serving fault / robustness tests =="
 # determinism, deadline accounting, poisoned-logits fail-fast, watchdog
 # abort, and the overload soak draining under injected faults
 python -m pytest -q tests/test_engine_faults.py
+
+echo "== speculative decoding tests =="
+# the PR-9 gate: draft/verify parity — chunk-form verify bitwise equals
+# sequential decode (logits AND cache bytes, contiguous + paged, across
+# KV formats), the accepted stream equals plain greedy decode under
+# layer-skip and narrow-format drafts, rollback leaves the live cache
+# bit-identical, EOS-mid-chunk / forced-0%-accept accounting, and engine
+# composition with per-request caps, preemption and escalation.
+# -p no:randomly pins declaration order if pytest-randomly is ever
+# installed: the module-scoped engine fixture and probe-derived stop
+# tokens assume a stable order within this file.
+python -m pytest -q -p no:randomly tests/test_speculative.py
 
 echo "== numerical-health tests =="
 # the PR-7 gate: IEEE flag casts vs an ml_dtypes oracle (exhaustive
@@ -113,6 +126,7 @@ REQUIRED = [
     "esc_soak_poisoned_rounds", "sdc_soak_injected", "sdc_soak_detected",
     "sdc_soak_reingest", "sdc_soak_token_parity",
     "shard_decode_tok_s", "shard_devices", "shard_speedup",
+    "spec_decode_tok_s", "spec_accept_rate", "spec_token_parity",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -204,6 +218,24 @@ for arch, row in report["archs"].items():
         if row["sdc_soak_token_parity"] is not True:
             sys.exit(f"BENCH_serve.json: {arch} SDC recovery broke token "
                      f"parity with the uncorrupted run")
+    # speculative decoding A/B: for archs that can page, the draft/verify
+    # engine must have kept BIT-IDENTICAL tokens vs plain greedy serving
+    # (speculation may only change speed) and the accept rate must be a
+    # real measurement — the bonus token makes (0, 1] the only legal range
+    sp = row["spec_decode_tok_s"]
+    if sp is not None:
+        if not (isinstance(sp, (int, float)) and sp > 0):
+            sys.exit(f"BENCH_serve.json: {arch} spec_decode_tok_s must be "
+                     f"null or a positive number, got {sp!r}")
+        ar = row["spec_accept_rate"]
+        if not (isinstance(ar, (int, float)) and 0.0 < ar <= 1.0):
+            sys.exit(f"BENCH_serve.json: {arch} spec_accept_rate must be "
+                     f"in (0, 1] — every verify round accepts at least "
+                     f"the bonus token — got {ar!r}")
+        if row["spec_token_parity"] is not True:
+            sys.exit(f"BENCH_serve.json: {arch} speculative decoding "
+                     f"changed tokens vs plain greedy serving — the "
+                     f"draft/verify contract is broken")
     # mesh-sharded serving A/B: for archs whose heads split over the
     # model axis, the probe must have run on a real multi-device mesh
     # with token parity; the dryrun legs must cover the production scale
@@ -226,7 +258,7 @@ for arch, row in report["archs"].items():
                      f">= 256 devices, got {devs!r}")
 print(f"schema OK ({len(report['archs'])} arch rows x "
       f"{len(REQUIRED)} required columns, paged + continuous + soak + "
-      f"numerical-health + shard fields validated)")
+      f"numerical-health + shard + speculative fields validated)")
 EOF
 
 echo "CI OK"

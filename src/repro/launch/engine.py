@@ -122,7 +122,11 @@ class Request:
     fp8 swap-store degradation (it is swapped at full width instead).
     ``no_escalate`` refuses flag-driven KV-precision escalation (a
     latency-sensitive request that prefers saturated-but-cheap KV over a
-    reingest pause keeps its admission rung)."""
+    reingest pause keeps its admission rung).  ``spec_k`` caps this
+    request's speculative draft depth below the engine's (``None`` =
+    engine default) and ``no_speculate`` opts the request out of
+    drafting entirely — it still rides the speculative burst program,
+    but with a per-row cap of 0 its every round is plain greedy decode."""
     rid: int
     tokens: Sequence[int]          # prompt token ids (>= 1)
     max_new: int                   # generation budget incl. the first token
@@ -131,6 +135,8 @@ class Request:
     deadline: Optional[int] = None
     no_degrade: bool = False
     no_escalate: bool = False
+    spec_k: Optional[int] = None
+    no_speculate: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -286,7 +292,10 @@ class ContinuousEngine:
                  min_resident: int = 2,
                  fault_plan: Optional[ServeFaultPlan] = None,
                  watchdog_patience: int = 200,
-                 escalate: Optional[EscalationPolicy] = None):
+                 escalate: Optional[EscalationPolicy] = None,
+                 spec_k: int = 0,
+                 draft_repeats: Optional[int] = None,
+                 draft_policy=None):
         import functools
 
         import jax
@@ -350,6 +359,27 @@ class ContinuousEngine:
                     f"inside a shared wide container); policy "
                     f"{model.policy.name!r} stores KV as {pool_dt}")
             self._esc_fmts = escalate.formats
+        self.spec_k = int(spec_k)
+        self.draft_repeats = draft_repeats
+        if draft_policy is not None and isinstance(draft_policy, str):
+            from ..core.policy import get_policy
+            draft_policy = get_policy(draft_policy)
+        self.draft_policy = draft_policy
+        if self.spec_k:
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            model.speculate_check()
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only (acceptance is "
+                    "defined against the verify argmax); temperature "
+                    f"{temperature} would change the sampled stream")
+            if self._use_pen:
+                raise ValueError(
+                    "speculative decoding does not compose with "
+                    "repetition/presence penalties yet: the verify chunk "
+                    "scores k+1 positions against ONE histogram snapshot, "
+                    "so mid-chunk accepts would see stale counts")
         self._num_pages = num_pages
         self._jnp, self._jax = jnp, jax
 
@@ -405,6 +435,9 @@ class ContinuousEngine:
         # telemetry the burst carries back)
         self.kv_levels = np.zeros((slots,), np.int32)
         self.flag_pressure = np.zeros((slots, 2), np.int64)
+        # per-slot speculative draft cap (min(engine spec_k, request
+        # spec_k); 0 = plain decode row inside the speculative batch)
+        self._spec_rows = np.zeros((slots,), np.int32)
         self._pending: List[_QEntry] = []
         self._held: List[int] = []      # fault-plan page grab
         self._release_at: Optional[int] = None
@@ -444,11 +477,38 @@ class ContinuousEngine:
                     jnp.stack([tok[:, 0], pos, lens, done.astype(jnp.int32)]),
                     caches, key, bad, fl)
 
+        spec_k_, dr_, dpol_ = self.spec_k, draft_repeats, self.draft_policy
+
+        def spec_burst(params, caches, table, state, counts, key):
+            # the speculative twin: state grows row 10 (per-row draft
+            # caps) and the packed-contiguous out layout means the host
+            # accounting below consumes it exactly like the plain burst
+            caches = caches_with_table(caches, table)
+            esc_kw = ({} if esc_fmts is None else
+                      dict(esc_fmts=esc_fmts, kv_levels=state[8],
+                           ovf_at=state[9, 0], ovf_scale=ovf_scale))
+            r = model.speculate_burst(
+                params, state[0][:, None], caches, state[1], state[2],
+                state[4] != 0, state[3], spec_k=spec_k_,
+                draft_repeats=dr_, k_rows=state[10], max_len=max_len,
+                out_width=burst_cap * (spec_k_ + 1), n_max=state[5, 0],
+                exit_on_finish=state[6, 0], stop_token=stop_token,
+                key=key, mesh=mesh, guard=True, poison_at=state[7, 0],
+                draft_policy=dpol_, **esc_kw)
+            out, n, tok, caches, pos, lens, done, key = r[:8]
+            bad = r[8]
+            fl = (r[9] if esc_fmts is not None
+                  else jnp.zeros((slots, 2), jnp.int32))
+            return (out, n,
+                    jnp.stack([tok[:, 0], pos, lens, done.astype(jnp.int32)]),
+                    caches, key, bad, fl, r[-1])
+
         # donate the caches operand: the page pools flow through every
         # burst/chunk as pure carries and the host never reuses the
         # pre-call object, so XLA aliases them in place instead of
         # holding two full pools across each dispatch
-        self._burst = jax.jit(burst, donate_argnums=(1,))
+        self._burst = jax.jit(spec_burst if self.spec_k else burst,
+                              donate_argnums=(1,))
         self._sample = functools.partial(
             sample_token, temperature=temperature, top_k=top_k, top_p=top_p)
         self._with_table = caches_with_table
@@ -508,8 +568,12 @@ class ContinuousEngine:
         """Worst-case pages of every admitted-but-unfinished request —
         the admission guard that keeps lazy mid-burst allocation from
         failing in steady state (injected exhaustion can still race it;
-        ``try_alloc`` is the ground truth and preemption the recovery)."""
-        return sum(self._num_pages(r.prompt_len + r.max_new, self.page)
+        ``try_alloc`` is the ground truth and preemption the recovery).
+        With speculation on, every resident row's verify chunk writes up
+        to ``spec_k`` slots past its budget (dead until accepted), so
+        the worst case grows by the draft lookahead."""
+        return sum(self._num_pages(r.prompt_len + r.max_new + self.spec_k,
+                                   self.page)
                    for r in self._req if r is not None)
 
     def _ensure_pages(self, b: int, last_idx: int) -> bool:
@@ -727,6 +791,7 @@ class ContinuousEngine:
         self.pos[b], self.lens[b] = self.max_len - 1, 0
         self.done[b], self.limit[b] = True, 0
         self.kv_levels[b], self.flag_pressure[b] = 0, 0
+        self._spec_rows[b] = 0
         if self._use_pen:
             self._cnt[b] = 0
         e.not_before = max(e.not_before, round_no)
@@ -753,6 +818,11 @@ class ContinuousEngine:
         self._req[b], self._entry[b] = req, e
         self._admit_round[b] = round_no
         self._resume_tok[b] = None
+        k = 0
+        if self.spec_k and not req.no_speculate:
+            k = (self.spec_k if req.spec_k is None
+                 else max(0, min(self.spec_k, req.spec_k)))
+        self._spec_rows[b] = k
         self.kv_levels[b] = e.esc_level
         self.flag_pressure[b] = np.asarray(e.esc_pressure, np.int64)
         rs, e.resume = e.resume, None
@@ -802,7 +872,8 @@ class ContinuousEngine:
             e.req.arrival, e.req.rid))
         for e in vis:
             req = e.req
-            worst = self._num_pages(req.prompt_len + req.max_new, self.page)
+            worst = self._num_pages(
+                req.prompt_len + req.max_new + self.spec_k, self.page)
             need = self._pending_need(e)
 
             def fits():
@@ -869,6 +940,7 @@ class ContinuousEngine:
         self.pos[b], self.lens[b] = self.max_len - 1, 0
         self.done[b], self.limit[b] = True, 0
         self.kv_levels[b], self.flag_pressure[b] = 0, 0
+        self._spec_rows[b] = 0
         if self._use_pen:
             self._cnt[b] = 0
 
@@ -924,16 +996,20 @@ class ContinuousEngine:
         for r in requests:
             if r.prompt_len < 1 or r.max_new < 1:
                 raise ValueError(f"request {r.rid}: empty prompt or budget")
-            if r.prompt_len + r.max_new > self.max_len:
+            if r.prompt_len + r.max_new + self.spec_k > self.max_len:
+                hint = (f" (+{self.spec_k} speculative lookahead: the "
+                        f"verify chunk writes spec_k slots past the "
+                        f"budget)" if self.spec_k else "")
                 raise ValueError(
                     f"request {r.rid}: prompt {r.prompt_len} + budget "
-                    f"{r.max_new} exceeds max_len {self.max_len}")
-            if (self._num_pages(r.prompt_len + r.max_new, self.page)
-                    > self.n_pages - 1):
+                    f"{r.max_new}{hint} exceeds max_len {self.max_len}")
+            worst = self._num_pages(r.prompt_len + r.max_new + self.spec_k,
+                                    self.page)
+            if worst > self.n_pages - 1:
                 raise ValueError(
                     f"request {r.rid} can never fit the pool: needs "
-                    f"{self._num_pages(r.prompt_len + r.max_new, self.page)}"
-                    f" pages, pool has {self.n_pages - 1} (+1 scratch)")
+                    f"{worst} pages, pool has {self.n_pages - 1} "
+                    f"(+1 scratch)")
         order = sorted(requests, key=lambda r: (r.arrival, r.rid))
         self._pending = [_QEntry(req=r, not_before=r.arrival) for r in order]
         results: Dict[int, Finished] = {}
@@ -950,7 +1026,8 @@ class ContinuousEngine:
             "shed_events", "poisoned_rounds", "nonfinite_prefill",
             "stragglers", "faults_exhaust", "faults_slow",
             "escalations", "esc_deferred", "esc_refused",
-            "sdc_injected", "sdc_detected", "sdc_reingest")}
+            "sdc_injected", "sdc_detected", "sdc_reingest",
+            "spec_rounds", "spec_emitted")}
         key = jax.random.key(self.seed)
         caches = self.caches
         round_no = decode_rounds = occ_accum = bursts = 0
@@ -1087,11 +1164,16 @@ class ContinuousEngine:
                         n_max = max(1, min(n_max, rem[k] + 1))
                 # page pressure: a failed lazy alloc preempts a weaker
                 # resident; if none exists the row itself yields its slot
+                look = self.spec_k
                 for b in list(active):
                     if b not in active:
                         continue
-                    tgt = min(int(self.pos[b]) + n_max - 1,
-                              int(self.limit[b]) - 1)
+                    # each speculative round advances up to spec_k+1
+                    # tokens and its verify chunk writes spec_k slots
+                    # past the accepted frontier (dead until accepted)
+                    tgt = min(int(self.pos[b]) + n_max * (look + 1) - 1
+                              + look,
+                              int(self.limit[b]) - 1 + look)
                     while not self._ensure_pages(b, tgt):
                         vs = self._victims_for(
                             self._eff_resident(b, round_no), round_no,
@@ -1121,7 +1203,8 @@ class ContinuousEngine:
                         counters["faults_slow"] += 1
                         plan.note("slow", round=round_no, seconds=stall)
                         time.sleep(stall)
-                state = np.zeros((10, self.slots), np.int32)
+                state = np.zeros((11 if self.spec_k else 10, self.slots),
+                                 np.int32)
                 state[0, :] = self.tok[:, 0]
                 state[1], state[2], state[3] = self.pos, self.lens, self.limit
                 state[4] = self.done
@@ -1129,13 +1212,24 @@ class ContinuousEngine:
                 state[7, 0] = poison_rel
                 state[8] = self.kv_levels
                 state[9, 0] = ovf_rel
+                if self.spec_k:
+                    state[10] = self._spec_rows
                 cnts = jnp.asarray(self._cnt) if self._use_pen else None
-                out, n, state_d, caches, key2, bad_d, fl_d = self._burst(
-                    self.params, caches, self._table_device(),
-                    jnp.asarray(state), cnts, key)
+                res = self._burst(self.params, caches, self._table_device(),
+                                  jnp.asarray(state), cnts, key)
+                out, n, state_d, caches, key2, bad_d, fl_d = res[:7]
                 n = int(n)                    # blocks on the burst
-                outs = np.asarray(out[:, :n])  # download only executed cols
                 new_state = np.array(state_d)
+                if self.spec_k:
+                    # packed layout: row b's accepted tokens fill
+                    # out[b, :lens-growth]; download up to the widest row
+                    sp = np.asarray(res[7])
+                    counters["spec_rounds"] += int(sp[0])
+                    counters["spec_emitted"] += int(sp[1])
+                    w = int(max(1, (new_state[2] - self.lens).max()))
+                    outs = np.asarray(out[:, :w])
+                else:
+                    outs = np.asarray(out[:, :n])  # only executed cols
                 bad = np.asarray(bad_d)
                 dt = time.perf_counter() - t_start
                 if monitor.record(bursts, dt):
@@ -1225,6 +1319,15 @@ class ContinuousEngine:
             "straggler_ewma_s": monitor.ewma,
             **counters,
         }
+        if self.spec_k:
+            lr = counters["spec_rounds"]
+            stats["spec_k"] = self.spec_k
+            # emitted / (live-row-rounds * chunk width): the bonus token
+            # keeps every live row's per-round yield >= 1, so the rate
+            # lives in (0, 1] whenever any speculative round ran
+            stats["spec_accept_rate"] = (
+                counters["spec_emitted"] / (lr * (self.spec_k + 1))
+                if lr else 0.0)
         return [results[r.rid] for r in requests], stats
 
 
@@ -1304,6 +1407,12 @@ class ReplicatedEngine:
         dl = stats["deadline_total"]
         stats["deadline_miss_rate"] = (stats["deadline_misses"] / dl
                                        if dl else 0.0)
+        if any("spec_accept_rate" in s for s in per):
+            sr = sum(s.get("spec_rounds", 0) for s in per)
+            se = sum(s.get("spec_emitted", 0) for s in per)
+            k1 = max(s.get("spec_k", 0) for s in per) + 1
+            stats["spec_rounds"], stats["spec_emitted"] = sr, se
+            stats["spec_accept_rate"] = se / (sr * k1) if sr else 0.0
         for k in per[0] if per else ():
             if k not in stats and isinstance(per[0][k], (int, np.integer)):
                 stats[k] = sum(s[k] for s in per)

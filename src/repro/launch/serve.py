@@ -53,6 +53,16 @@ after the run.  Non-finite logits abort serving with
 ``PoisonedLogitsError`` unless a masking fault plan is active — the
 solo path enables the same guard via ``generate(guard_nonfinite=)``.
 
+``--speculate K`` (requires ``--continuous``) turns on self-speculative
+decoding: every burst round drafts K tokens per row with a cheap pass
+(``--draft-layers N`` runs only the first N repeats of the scanned layer
+stack; ``--draft-fmt tp_bf16_kv8`` drafts under a narrower precision
+policy — the FPnew energy-proportionality move applied to decoding),
+then ONE chunk-scoring call at the serving policy verifies all K+1
+positions and accepts the longest matching prefix.  Greedy-only: the
+accepted stream is bit-identical to plain decode, a wrong draft can
+only cost speed, never tokens.  The accept rate prints after the run.
+
 Numerical health (requires ``--policy fp32``, the wide-container pool):
 ``--escalate fp8,fp16,fp16alt`` turns on flag-driven KV-precision
 escalation — every row's K/V is quantized at write time to its current
@@ -201,6 +211,21 @@ def main(argv=None):
     ap.add_argument("--burst-cap", type=int, default=64,
                     help="max decode rounds per compiled burst (escalation "
                          "acts between bursts; smaller reacts faster)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "row with the cheap pass, verify the whole chunk "
+                         "at target precision in ONE call, accept the "
+                         "longest matching prefix (greedy-only; accepted "
+                         "tokens are bit-identical to plain decode)")
+    ap.add_argument("--draft-layers", type=int, default=None, metavar="N",
+                    help="layer-skip draft: run only the first N repeats "
+                         "of the scanned layer pattern in the draft pass "
+                         "(default: full depth — the draft is then the "
+                         "target model and every proposal is accepted)")
+    ap.add_argument("--draft-fmt", default=None, metavar="POLICY",
+                    help="precision-policy preset the DRAFT pass runs "
+                         "under (e.g. tp_bf16_kv8: fp8 KV reads for "
+                         "proposals; verify stays at the serving policy)")
     ap.add_argument("--slots", type=int, default=4,
                     help="batch slots of the continuous engine")
     ap.add_argument("--requests", type=int, default=16,
@@ -234,6 +259,13 @@ def main(argv=None):
     if pen and args.loop != "scan":
         ap.error("--repetition-penalty / --presence-penalty apply to the "
                  "scan/while generate() and continuous-engine paths only")
+    if args.speculate:
+        if not args.continuous:
+            ap.error("--speculate requires --continuous (the draft/verify "
+                     "rounds live in the engine's burst program)")
+        if args.temperature > 0.0 or pen:
+            ap.error("--speculate is greedy-only: temperature and "
+                     "penalties would change the verified stream")
     mesh_dims = None
     if args.mesh is not None:
         try:
@@ -332,8 +364,12 @@ def main(argv=None):
             esc = EscalationPolicy(
                 ladder=tuple(args.escalate.split(",")),
                 of_threshold=args.escalate_of_threshold)
-        max_len = max(r.prompt_len + r.max_new for r in reqs)
+        # speculative headroom: the verify chunk writes spec_k slots
+        # past each row's budget, so the cache rows grow by K
+        max_len = max(r.prompt_len + r.max_new for r in reqs) + args.speculate
         eng_kw = dict(slots=args.slots, max_len=max_len, chunk=args.chunk,
+                      spec_k=args.speculate, draft_repeats=args.draft_layers,
+                      draft_policy=args.draft_fmt,
                       n_pages=args.pool_pages, stop_token=args.stop_token,
                       temperature=args.temperature,
                       top_k=args.top_k, top_p=args.top_p,
@@ -356,6 +392,12 @@ def main(argv=None):
               f"preempt={args.preempt}"
               + (f", degrade={args.degrade_fmt}" if args.degrade_fmt
                  else "")
+              + (f", speculate k={args.speculate}"
+                 + (f" draft_layers={args.draft_layers}"
+                    if args.draft_layers is not None else "")
+                 + (f" draft_fmt={args.draft_fmt}"
+                    if args.draft_fmt else "")
+                 if args.speculate else "")
               + (f", mesh {mesh_dims[0]}x{mesh_dims[1]}"
                  if mesh_dims else ""))
         for f in fin:
@@ -389,6 +431,12 @@ def main(argv=None):
               f"{stats['poisoned_rounds']} poisoned rounds masked, "
               f"{stats['stragglers']} stragglers, "
               f"{stats['faults_exhaust']} exhaustion episodes")
+        if args.speculate:
+            print(f"speculative: accept rate "
+                  f"{stats['spec_accept_rate']:.2f} over "
+                  f"{stats['spec_rounds']} draft/verify row-rounds "
+                  f"({stats['spec_emitted']} tokens emitted, chunk "
+                  f"k+1={args.speculate + 1})")
         if esc is not None or plan is not None:
             print(f"numerical health: {stats.get('escalations', 0)} "
                   f"escalations ({stats.get('esc_deferred', 0)} deferred, "

@@ -362,7 +362,8 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
                   decode_backend: str = "dense",
                   prefill_backend: str = "dense",
                   kv_len=None, esc_fmts=None, kv_levels=None,
-                  kv_scale=None, mesh=None, return_attend: bool = False):
+                  kv_scale=None, mesh=None, return_attend: bool = False,
+                  verify: bool = False):
     """Returns (out [B,S,D], new_cache) — or (out, new_cache, kv_flags)
     when ``esc_fmts`` is given (the arity is static per trace).
 
@@ -394,6 +395,21 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
     third return value ``kv_flags`` [B, 2].  ``kv_scale`` (traced scalar,
     default off) multiplies K/V pre-quantization — the fault-injection
     hook that forces narrow-rung overflow on demand.
+
+    Speculative verify: ``verify=True`` with ``s > 1`` and a cache is the
+    multi-query verify read mode.  The chunk's K/V is written first
+    (chunk-form writes are bit-identical to the step-form writes plain
+    decode performs), then the s query positions FOLD INTO THE BATCH
+    dimension — ``kv_len`` must be a [B, S] matrix of per-query live
+    lengths (query i of row b attends ``kv_len[b, i]`` slots) — and the
+    folded [B*S] pseudo-batch takes the EXACT decode attend path
+    (``_decode_attend`` / ``_decode_attend_paged``, dense or Pallas).
+    Decode attend is per-row independent, so each folded query's output
+    is bitwise what a sequential decode step at that position would
+    produce: speculative verification inherits bit-parity with plain
+    decode by construction instead of by numerical accident.  Block
+    tables are tiled per query (the pool is shared); contiguous caches
+    are repeated along batch.
 
     Tensor parallelism: ``mesh`` with a ``model`` axis whose size divides
     both head counts runs every attend (dense AND Pallas, prefill AND
@@ -431,10 +447,11 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
 
     tp_size = _head_shard_size(mesh, n_heads, n_kv_heads)
 
-    def _attend(fn, head_ops=(), rep_ops=()):
+    def _attend(fn, head_ops=(), rep_ops=(), q_op=None):
+        qq = q if q_op is None else q_op
         if tp_size is None:
-            return fn(q, *head_ops, *rep_ops)
-        return _headshard_call(mesh, fn, q, head_ops, rep_ops)
+            return fn(qq, *head_ops, *rep_ops)
+        return _headshard_call(mesh, fn, qq, head_ops, rep_ops)
 
     new_cache = None
     kv_flags = jnp.zeros((b, 2), jnp.int32)  # OF, UF write counts per row
@@ -475,7 +492,37 @@ def gqa_attention(x, params, policy, *, n_heads, n_kv_heads, head_dim,
             ck = update_cache_rows(cache.k, k, cache_pos, axis=2)
             cv = update_cache_rows(cache.v, v, cache_pos, axis=2)
             new_cache = KVCache(ck, cv)
-        if s > 1 and paged:
+        if verify and s > 1:
+            # speculative verify: fold the s chunk queries into the batch
+            # dimension and take the exact decode read path — query i of
+            # row b becomes pseudo-row b*s+i attending kv_len[b, i] slots
+            # of row b's (just-updated) cache.  Decode attend is per-row
+            # independent, so every folded query is bitwise identical to
+            # the sequential decode step at its position; slots at or past
+            # a query's kv_len (later chunk positions, rejected drafts)
+            # are masked dead exactly as in plain decode.
+            kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (b * s,))
+            qv = q.swapaxes(1, 2).reshape(b * s, n_heads, head_dim)[
+                :, :, None, :]
+            if paged:
+                bt = jnp.repeat(new_cache.block_table, s, axis=0)
+                out = _attend(
+                    lambda q_, kp, vp, bt_, lv: _decode_attend_paged(
+                        q_, PagedKVCache(kp, vp, bt_), policy, kv_len=lv,
+                        window=window, cap=attn_softcap,
+                        backend=decode_backend),
+                    head_ops=(new_cache.k_pool, new_cache.v_pool),
+                    rep_ops=(bt, kvl), q_op=qv)
+            else:
+                ckr = jnp.repeat(ck, s, axis=0)
+                cvr = jnp.repeat(cv, s, axis=0)
+                out = _attend(
+                    lambda q_, k_, v_, lv: _decode_attend(
+                        q_, k_, v_, policy, kv_len=lv, window=window,
+                        cap=attn_softcap, backend=decode_backend),
+                    head_ops=(ckr, cvr), rep_ops=(kvl,), q_op=qv)
+            out = out.reshape(b, s, n_heads, head_dim).swapaxes(1, 2)
+        elif s > 1 and paged:
             # paged prefill attends THROUGH the pool just written
             # (write-then-read) instead of the freshly computed k/v: the
             # same read path a chunked continuation takes, so chunk

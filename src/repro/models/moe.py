@@ -5,7 +5,11 @@ one-hot tensors):
 
   1. router top-k -> flat (token, slot) -> expert assignments,
   2. stable argsort by expert, per-expert rank via run-starts,
-  3. scatter into an [E, C, D] buffer (assignments over capacity dropped),
+  3. scatter into an [E, C, D] buffer — with the default drop-free
+     capacity (``capacity_factor=None``) every assignment fits, so
+     per-token outputs are batch-composition-invariant (serving needs
+     this: chunked verify must equal sequential decode bitwise); an
+     explicit finite factor restores training-style over-capacity drops,
   4. expert-parallel all_to_all over the ``model`` mesh axis (each data row
      exchanges expert slabs within itself; expert weights are sharded over
      ``model`` and replicated over ``data`` like every other weight),
@@ -39,7 +43,14 @@ class MoEConfig:
     top_k: int
     d_expert: int
     n_shared: int = 0
-    capacity_factor: float = 1.25
+    # None = drop-free dispatch (capacity >= n_tokens, so no expert can
+    # overflow and no token is ever dropped).  Serving REQUIRES drop-free:
+    # capacity scales with the total token count, so with a finite factor a
+    # token's keep/drop decision depends on what else is in the batch — and
+    # then chunked verify (B*(k+1) pseudo-rows) diverges from sequential
+    # decode (B rows).  Set an explicit factor only for training-style
+    # load-balancing experiments.
+    capacity_factor: float | None = None
     router_norm_topk: bool = True   # normalize top-k gates to sum to 1
 
 
@@ -65,6 +76,11 @@ def moe_params(key, d_model, cfg: MoEConfig, dtype):
 
 
 def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    if cfg.capacity_factor is None:
+        # Drop-free: each token assigns an expert at most once, so one
+        # expert receives at most n_tokens rows.  cap >= n_tokens makes
+        # per-token outputs independent of batch composition (bitwise).
+        return max(8, -(-n_tokens // 8) * 8)
     c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
     return max(8, -(-c // 8) * 8)
 

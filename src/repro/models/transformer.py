@@ -324,7 +324,8 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
                 policy: PrecisionPolicy, *, positions, mesh=None,
                 cache=None, cache_pos=None, enc_states=None,
                 shared_params=None, decode: bool = False, kv_len=None,
-                esc_fmts=None, kv_levels=None, kv_scale=None):
+                esc_fmts=None, kv_levels=None, kv_scale=None,
+                verify: bool = False):
     """Returns (x, new_cache, aux_loss) — with a fourth element
     ``kv_flags`` [B, 2] (per-row OF/UF write-flag counts) when
     ``esc_fmts`` is given (escalation write path; GQA mixers only, other
@@ -354,7 +355,7 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig,
             chunk=cfg.attn_chunk, windowed_slice=cfg.windowed_slice,
             decode_backend=cfg.decode_backend,
             prefill_backend=cfg.prefill_backend, kv_len=kv_len, mesh=mesh,
-            **esc_kw)
+            verify=verify, **esc_kw)
         if esc_fmts is not None:
             mix, nc, kv_flags = r
         else:
@@ -540,7 +541,10 @@ class Model:
                 x, frontend_embeds.astype(x.dtype), (0, 0, 0))
         if cfg.max_seq:
             s = tokens.shape[1]
-            if getattr(pos_offset, "ndim", 0) >= 1:
+            if getattr(pos_offset, "ndim", 0) == 2:
+                # speculative verify chunk: per-row, per-position offsets
+                pe = params["pos_embed"][pos_offset]            # [B, S, d]
+            elif getattr(pos_offset, "ndim", 0) >= 1:
                 # ragged decode: each row reads its own learned position
                 pe = params["pos_embed"][pos_offset][:, None]   # [B, 1, d]
             else:
@@ -572,7 +576,7 @@ class Model:
     def _run_stack(self, params, x, *, positions, mesh=None, caches=None,
                    cache_pos=None, enc_states=None, remat: bool = False,
                    decode: bool = False, kv_len=None, esc_fmts=None,
-                   kv_levels=None, kv_scale=None):
+                   kv_levels=None, kv_scale=None, verify: bool = False):
         cfg = self.cfg
         shared = params.get("shared")
         esc = esc_fmts is not None
@@ -587,7 +591,8 @@ class Model:
                                cache_pos=cache_pos, enc_states=enc_states,
                                shared_params=shared, decode=decode,
                                kv_len=kv_len, esc_fmts=esc_fmts,
-                               kv_levels=kv_levels, kv_scale=kv_scale)
+                               kv_levels=kv_levels, kv_scale=kv_scale,
+                               verify=verify)
 
         for i, spec in enumerate(cfg.prefix):
             c = caches.prefix[i] if caches else None
@@ -1310,3 +1315,368 @@ class Model:
         if esc:
             ret += (fl_out,)
         return ret
+
+    # -- speculative decoding (draft k cheap, verify once, accept prefix) --
+    def speculate_check(self):
+        """Raise unless this arch supports speculative decoding: the
+        verify read folds chunk queries through the decode attend path,
+        which exists for GQA-family mixers only (recurrent state cannot
+        roll back rejected tokens, and the MLA latent cache has no
+        multi-query verify read yet)."""
+        cfg = self.cfg
+        bad = sorted({s.mixer for s in cfg.layer_list()
+                      if s.mixer not in ("gqa", "shared_attn", "none")})
+        if bad:
+            raise ValueError(
+                f"speculative decoding is unsupported for {cfg.name}: "
+                f"{'/'.join(bad)} mixers cannot roll back rejected tokens")
+        if cfg.encoder is not None or any(s.cross_attn
+                                          for s in cfg.layer_list()):
+            raise ValueError(
+                f"speculative decoding is unsupported for {cfg.name}: "
+                f"cross-attention decode has no verify read path")
+
+    def draft_view(self, params, caches, draft_repeats,
+                   draft_policy=None):
+        """Layer-skip draft submodel: the SAME weights truncated to the
+        first ``draft_repeats`` pattern groups (prefix/suffix layers kept
+        — they are few and cheap), optionally under a narrower
+        ``draft_policy`` for the matmuls.  Returns ``(model, params,
+        caches)`` views; the stacked pattern leaves are sliced ``[:r]``,
+        so the draft SHARES the target's cache pools for the layers it
+        runs — its writes are discarded by the caller (verify rewrites
+        every drafted position at every layer with target-precision
+        values before any accepted read)."""
+        cfg = self.cfg
+        r = cfg.repeats if draft_repeats is None else draft_repeats
+        r = max(0, min(int(r), cfg.repeats))
+        dm = self
+        dp, dc = params, caches
+        if r < cfg.repeats:
+            n_layers = (len(cfg.prefix) + len(cfg.suffix)
+                        + r * len(cfg.pattern))
+            dm = self.with_cfg(n_layers=n_layers)
+            dp = dict(params)
+            dp["pattern"] = jax.tree.map(lambda x: x[:r], params["pattern"])
+            if caches is not None:
+                dc = Caches(caches.prefix,
+                            jax.tree.map(lambda x: x[:r], caches.pattern),
+                            caches.suffix)
+        if draft_policy is not None:
+            dm = dataclasses.replace(dm, policy=draft_policy)
+        return dm, dp, dc
+
+    def verify_chunk(self, params, tokens, caches: Caches, pos, *,
+                     kv_len, mesh=None, esc_fmts=None, kv_levels=None,
+                     kv_scale=None):
+        """Score a [B, S] candidate chunk at target precision through the
+        DECODE read path — the speculative verify call.
+
+        ``pos`` [B] (or scalar) is each row's write index for the chunk's
+        first token; the chunk's K/V lands at ``pos .. pos+S-1`` (the same
+        bytes S sequential decode steps would write), and ``kv_len``
+        [B, S] gives each query position's live attend length (running
+        rows: ``pos + i + 1``; EOS-frozen rows: their frozen length).
+        Queries fold into the batch dimension inside attention
+        (``gqa_attention(verify=True)``), so ``logits[:, i]`` is BITWISE
+        the logits a plain ``decode_step`` would emit after consuming
+        ``tokens[:, :i+1]`` — parity by construction, not by tolerance.
+        Returns ``(logits [B, S, V], caches[, kv_flags])``."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        posv = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+        offs = posv[:, None] + jnp.arange(s, dtype=jnp.int32)   # [B, S]
+        x = self.embed(params, tokens, pos_offset=offs if cfg.max_seq else 0)
+        r = self._run_stack(params, x, positions=offs[:, None, :],
+                            mesh=mesh, caches=caches, cache_pos=posv,
+                            decode=True, verify=True,
+                            kv_len=jnp.broadcast_to(
+                                jnp.asarray(kv_len, jnp.int32), (b, s)),
+                            esc_fmts=esc_fmts, kv_levels=kv_levels,
+                            kv_scale=kv_scale)
+        x, caches = r[0], r[1]
+        x = _norm(x, params["norm_f"], cfg)
+        lg = self.logits(params, x).astype(F32)
+        if esc_fmts is not None:
+            return lg, caches, r[3]
+        return lg, caches
+
+    def speculate_step(self, params, tok, caches: Caches, pos, *, lens,
+                       done, limit, spec_k: int, draft_repeats=None,
+                       k_rows=None, stop_token: Optional[int] = None,
+                       mesh=None, guard: bool = False, esc_fmts=None,
+                       kv_levels=None, kv_scale=None, poison=None,
+                       draft_policy=None, _draft_fn=None):
+        """ONE speculative round: draft ``spec_k`` tokens with the cheap
+        pass, verify the whole chunk at target precision, accept the
+        longest matching prefix plus the verify model's own next token.
+
+        Greedy only — acceptance compares draft proposals against the
+        verify argmax, so every accepted token (and the bonus token) is
+        exactly what sequential greedy decode would have emitted; a wrong
+        draft can only LOWER the accept count, never change the stream.
+        Rollback is free: rejected positions sit at/past each row's new
+        ``lens``, which every attention mask treats as dead, and the next
+        round's chunk write covers them before they could become live.
+
+        ``k_rows`` [B] (optional) caps each row's accepted DRAFTS
+        (``0`` = that row runs plain single-token decode inside the
+        speculative batch); EOS clamps acceptance at the first emitted
+        ``stop_token``; ``limit`` clamps it at the row's budget.
+        ``_draft_fn(tok, pos) -> [B, spec_k]`` overrides the draft pass —
+        the fault/test hook for adversarial (e.g. never-matching) drafts.
+
+        Returns ``(g [B, spec_k+1], n [B], tok, pos, lens, done,
+        caches[, bad][, kv_flags])`` — ``g[:, :n[b]]`` are row b's
+        emitted tokens this round (``n == 0`` for rows already done),
+        ``bad`` [B] flags rows whose ACCEPTED logits went non-finite."""
+        b = tok.shape[0]
+        k1 = spec_k + 1
+        pos = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+        if _draft_fn is not None:
+            drafts = jnp.asarray(_draft_fn(tok, pos), jnp.int32)
+        elif spec_k == 0:
+            drafts = jnp.zeros((b, 0), jnp.int32)
+        else:
+            dm, dp, dc = self.draft_view(params, caches, draft_repeats,
+                                         draft_policy)
+
+            def dstep(carry, _):
+                dtok, dcc, dpos = carry
+                attend = jnp.where(done, lens, dpos + 1)
+                dlg, dcc = dm.decode_step(dp, dtok, dcc, dpos, mesh=mesh,
+                                          kv_len=attend)
+                nxt = jnp.argmax(dlg[:, -1], -1).astype(jnp.int32)[:, None]
+                return (nxt, dcc, dpos + 1), nxt[:, 0]
+
+            # draft writes ride dcc within the round (step i attends its
+            # own earlier proposals) and are then DISCARDED: verify
+            # rewrites pos..pos+k at every layer below
+            _, dseq = jax.lax.scan(dstep, (tok, dc, pos), None,
+                                   length=spec_k)
+            drafts = dseq.swapaxes(0, 1)                       # [B, k]
+        chunk = jnp.concatenate([tok, drafts], axis=1)         # [B, k+1]
+        offs = pos[:, None] + jnp.arange(k1, dtype=jnp.int32)
+        attend = jnp.where(done[:, None], lens[:, None], offs + 1)
+        r = self.verify_chunk(params, chunk, caches, pos, kv_len=attend,
+                              mesh=mesh, esc_fmts=esc_fmts,
+                              kv_levels=kv_levels, kv_scale=kv_scale)
+        lg, caches = r[0], r[1]
+        kv_flags = r[2] if esc_fmts is not None else None
+        if poison is not None:
+            lg = jnp.where(jnp.asarray(poison), jnp.nan, lg)
+        badm = None
+        if guard:
+            lg, badm = sanitize_logits(lg)                     # bad [B, k+1]
+        g = jnp.argmax(lg, -1).astype(jnp.int32)               # [B, k+1]
+        if spec_k:
+            m = jnp.sum(jnp.cumprod(
+                (drafts == g[:, :-1]).astype(jnp.int32), axis=1), axis=1)
+        else:
+            m = jnp.zeros((b,), jnp.int32)
+        if k_rows is not None:
+            m = jnp.minimum(m, jnp.asarray(k_rows, jnp.int32))
+        n = m + 1
+        if stop_token is not None:
+            is_stop = g == stop_token
+            fs = jnp.where(jnp.any(is_stop, 1),
+                           jnp.argmax(is_stop, 1), k1).astype(jnp.int32)
+            n = jnp.minimum(n, fs + 1)
+        n = jnp.minimum(n, jnp.maximum(limit - pos, 1))
+        n = jnp.where(done, 0, n).astype(jnp.int32)
+        lastix = jnp.maximum(n - 1, 0)[:, None]
+        last = jnp.take_along_axis(g, lastix, axis=1)
+        new_tok = jnp.where(done[:, None], tok, last)
+        new_pos = pos + n
+        new_lens = jnp.where(done, lens, new_pos)
+        new_done = done | (new_pos >= limit)
+        if stop_token is not None:
+            stopped = jnp.take_along_axis(g == stop_token, lastix,
+                                          axis=1)[:, 0]
+            new_done = new_done | (~done & stopped)
+        ret = (g, n, new_tok, new_pos, new_lens, new_done, caches)
+        if guard:
+            # attribute non-finite logits to rows whose ACCEPTED positions
+            # were sanitized (rejected drafts never reach the stream)
+            acc = jnp.arange(k1)[None, :] < n[:, None]
+            ret += (jnp.any(badm & acc, axis=1),)
+        if esc_fmts is not None:
+            ret += (kv_flags,)
+        return ret
+
+    def speculate_decode(self, params, tokens, *, gen_len: int,
+                         spec_k: int, draft_repeats=None,
+                         max_len: Optional[int] = None, prompt_lens=None,
+                         stop_token: Optional[int] = None, page_table=None,
+                         n_pages: Optional[int] = None, mesh=None,
+                         draft_policy=None, _draft_fn=None,
+                         return_stats: bool = False):
+        """Speculative analog of greedy ``generate``: prefill, then a
+        ``while_loop`` of ``speculate_step`` rounds, each emitting 1 to
+        ``spec_k + 1`` tokens per row.  The emitted stream is bit-identical
+        to ``generate(..., temperature=0)`` — same prompts, same
+        ``stop_token`` freezing, same per-row budgets — regardless of how
+        good or bad the draft is (accepted tokens are always the verify
+        model's own argmax chain).
+
+        ``max_len`` must leave ``spec_k`` slots of lookahead headroom past
+        ``prompt + gen_len``: every round writes a full ``spec_k + 1``-wide
+        chunk, and a clamped ``dynamic_update_slice`` near the cache edge
+        would SHIFT the write window onto live slots.  ``return_stats``
+        appends ``(rounds, emitted)`` int32 scalars (accept rate =
+        ``emitted / (rounds * (spec_k + 1))`` over live-row rounds)."""
+        self.speculate_check()
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        b, prompt_len = tokens.shape
+        k1 = spec_k + 1
+        need = prompt_len + gen_len + spec_k
+        max_len = need if max_len is None else max_len
+        if max_len < need:
+            raise ValueError(
+                f"speculative decoding needs max_len >= prompt + gen_len + "
+                f"spec_k = {need} (draft lookahead headroom; a clamped "
+                f"chunk write would corrupt live slots), got {max_len}")
+        lg0, caches = self.prefill(params, tokens, max_len=max_len,
+                                   mesh=mesh, prompt_lens=prompt_lens,
+                                   page_table=page_table, n_pages=n_pages)
+        tok0 = jnp.argmax(lg0[:, -1], -1).astype(jnp.int32)[:, None]
+        pos0 = jnp.broadcast_to(jnp.reshape(jnp.asarray(
+            prompt_lens if prompt_lens is not None else prompt_len,
+            jnp.int32), (-1,)), (b,))
+        limit = pos0 + gen_len - 1
+        done0 = jnp.zeros((b,), bool) if stop_token is None else (
+            tok0[:, 0] == stop_token)
+        if stop_token is not None:
+            tok0 = jnp.where(done0[:, None], stop_token, tok0)
+        done0 = done0 | (pos0 >= limit)        # gen_len == 1: prefill only
+        pad = stop_token if stop_token is not None else 0
+        out0 = jnp.full((b, gen_len + k1), pad,
+                        jnp.int32).at[:, 0].set(tok0[:, 0])
+        rows = jnp.arange(b)[:, None]
+        arange_k = jnp.arange(k1, dtype=jnp.int32)
+
+        def cond(c):
+            return ~jnp.all(c[6])
+
+        def body(c):
+            out, ec, tok, caches, pos, lens, done, rounds, emitted = c
+            g, n, tok, pos, lens, done, caches = self.speculate_step(
+                params, tok, caches, pos, lens=lens, done=done,
+                limit=limit, spec_k=spec_k, draft_repeats=draft_repeats,
+                stop_token=stop_token, mesh=mesh,
+                draft_policy=draft_policy, _draft_fn=_draft_fn)
+            valid = arange_k[None, :] < n[:, None]
+            sidx = jnp.where(valid, ec[:, None] + arange_k[None, :],
+                             gen_len + arange_k[None, :])
+            out = out.at[rows, sidx].set(jnp.where(valid, g, pad))
+            return (out, ec + n, tok, caches, pos, lens, done,
+                    rounds + 1, emitted + jnp.sum(n))
+
+        init = (out0, jnp.ones((b,), jnp.int32), tok0, caches, pos0,
+                pos0, done0, jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32))
+        fin = jax.lax.while_loop(cond, body, init)
+        gen = fin[0][:, :gen_len]
+        if return_stats:
+            return gen, fin[7], fin[8]
+        return gen
+
+    def speculate_burst(self, params, tok, caches: Caches, pos, lens,
+                        done, limit, *, spec_k: int, draft_repeats=None,
+                        k_rows=None, max_len: int, out_width: int, n_max,
+                        exit_on_finish, stop_token: Optional[int] = None,
+                        key=None, mesh=None, guard: bool = False,
+                        esc_fmts=None, kv_levels=None, poison_at=None,
+                        ovf_at=None, ovf_scale=None, draft_policy=None,
+                        _draft_fn=None):
+        """Speculative twin of ``decode_burst``: up to ``n_max``
+        ``speculate_step`` rounds as ONE compiled ``while_loop``, each
+        emitting a VARIABLE number of tokens per row.  Unlike the plain
+        burst's one-column-per-round layout, ``out[b]`` holds row b's
+        accepted tokens PACKED contiguously — exactly ``new_lens[b] -
+        old_lens[b]`` of them, so the engine's existing lens-growth
+        accounting consumes the buffer unchanged.  The loop additionally
+        exits when another full chunk might not fit ``out_width``.
+
+        Greedy only (acceptance is defined against the verify argmax);
+        the ``key`` passes through untouched for signature compatibility.
+        ``k_rows`` [B] is the per-request draft cap (``0`` =
+        ``no_speculate`` rows, which still verify their single next token
+        — same batch, same compiled program, plain-decode results).
+        Hooks mirror ``decode_burst``: ``poison_at``/``guard`` (NaN
+        rounds + sanitize accounting), ``esc_fmts``/``kv_levels`` +
+        ``ovf_at``/``ovf_scale`` (escalation writes; flags attribute the
+        whole verify chunk to the row).  Returns ``(out [B, out_width],
+        n_rounds, tok, caches, pos, lens, done, key[, bad][, kv_flags],
+        stats [2])`` with ``stats = (live_row_rounds, emitted)``."""
+        b = tok.shape[0]
+        k1 = spec_k + 1
+        done0 = done
+        pad = stop_token if stop_token is not None else -1
+        out0 = jnp.full((b, out_width + k1), pad, jnp.int32)
+        n_max = jnp.asarray(n_max, jnp.int32)
+        wave = jnp.asarray(exit_on_finish, jnp.int32)
+        poison_at = (None if poison_at is None
+                     else jnp.asarray(poison_at, jnp.int32))
+        ovf_at = None if ovf_at is None else jnp.asarray(ovf_at, jnp.int32)
+        esc = esc_fmts is not None
+        rows = jnp.arange(b)[:, None]
+        arange_k = jnp.arange(k1, dtype=jnp.int32)
+
+        def cond(c):
+            i, ec, done = c[0], c[2], c[7]
+            more = (i < n_max) & ~jnp.all(done)
+            newly = jnp.sum((done & ~done0).astype(jnp.int32))
+            fits = jnp.max(jnp.where(done, 0, ec)) + k1 <= out_width
+            return more & fits & ((wave == 0) | (newly < wave))
+
+        def body(c):
+            i, out, ec, tok, caches, pos, lens, done, stats = c[:9]
+            extra = list(c[9:])
+            badc = extra.pop(0) if guard else None
+            flacc = extra.pop(0) if esc else None
+            scale = (jnp.where(i == ovf_at, ovf_scale, 1.0)
+                     if ovf_at is not None else None)
+            r = self.speculate_step(
+                params, tok, caches, pos, lens=lens, done=done,
+                limit=limit, spec_k=spec_k, draft_repeats=draft_repeats,
+                k_rows=k_rows, stop_token=stop_token, mesh=mesh,
+                guard=guard, esc_fmts=esc_fmts, kv_levels=kv_levels,
+                kv_scale=scale,
+                poison=(i == poison_at) if poison_at is not None else None,
+                draft_policy=draft_policy, _draft_fn=_draft_fn)
+            g, n, tok, pos, new_lens, new_done, caches = r[:7]
+            valid = arange_k[None, :] < n[:, None]
+            sidx = jnp.where(valid, ec[:, None] + arange_k[None, :],
+                             out_width + arange_k[None, :])
+            out = out.at[rows, sidx].set(jnp.where(valid, g, pad))
+            live = (~done).astype(jnp.int32)
+            stats = stats + jnp.stack([jnp.sum(live), jnp.sum(n)])
+            nc = (i + 1, out, ec + n, tok, caches, pos, new_lens,
+                  new_done, stats)
+            if guard:
+                nc += (badc + (r[7] & ~done).astype(jnp.int32),)
+            if esc:
+                fl = r[7 + (1 if guard else 0)]
+                nc += (flacc + fl * (~done).astype(jnp.int32)[:, None],)
+            return nc
+
+        init = (jnp.zeros((), jnp.int32), out0, jnp.zeros((b,), jnp.int32),
+                tok, caches, pos, lens, done,
+                jnp.zeros((2,), jnp.int32))
+        if guard:
+            init += (jnp.zeros((b,), jnp.int32),)
+        if esc:
+            init += (jnp.zeros((b, 2), jnp.int32),)
+        fin = jax.lax.while_loop(cond, body, init)
+        n, out, _, tok, caches, pos, lens, done, stats = fin[:9]
+        extra = list(fin[9:])
+        ret = (out[:, :out_width], n, tok, caches, pos, lens, done, key)
+        if guard:
+            ret += (extra.pop(0),)
+        if esc:
+            ret += (extra.pop(0),)
+        return ret + (stats,)

@@ -23,23 +23,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import LENS, cached_model, small_batch
 from repro.launch.engine import ContinuousEngine, Request, synthetic_trace
 from repro.models.paged import PageAllocator
 from repro.models.registry import build_model
 from repro.models.transformer import (apply_penalties, init_caches,
                                       token_counts)
 
-LENS = [8, 20, 32]
-
 
 def _setup(policy="tp_bf16", **cfg):
-    model = build_model("gemma2-9b", policy=policy, reduced=True)
-    if cfg:
-        model = model.with_cfg(**cfg)
-    params = model.init(jax.random.key(0))
-    toks = jax.random.randint(jax.random.key(1), (len(LENS), 32), 0,
-                              model.cfg.vocab)
-    return model, params, toks, jnp.asarray(LENS, jnp.int32)
+    model, params = cached_model("gemma2-9b", policy=policy, **cfg)
+    toks, lens = small_batch(model.cfg.vocab)
+    return model, params, toks, lens
 
 
 # ---------------------------------------------------------------------------
@@ -253,9 +248,7 @@ def _mk_requests(vocab, seed=0):
 
 @pytest.fixture(scope="module")
 def engine_run():
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     reqs = _mk_requests(model.cfg.vocab)
     eng = ContinuousEngine(model, params, slots=3, max_len=48, chunk=16)
     fin1, stats1 = eng.run(reqs)
@@ -314,9 +307,7 @@ def test_engine_no_retrace_across_admissions(engine_run):
 def test_engine_stop_token_frees_early():
     """A stop token cuts a row's generation below its budget and the
     tokens match solo generate's EOS semantics (stop kept, then freeze)."""
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     # the rid-4 prompt's greedy rollout changes token mid-run (probed):
     # its first divergent token is a stop that fires mid-decode
     probe = _mk_requests(model.cfg.vocab)[4]
@@ -360,8 +351,7 @@ def test_engine_penalties_match_solo_generate(engine_run):
 
 
 def test_engine_refuses_unpageable_and_unpaged():
-    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b")
     with pytest.raises(ValueError, match="paged_kv"):
         ContinuousEngine(model, params, slots=2, max_len=32)
     zamba = build_model("zamba2-1.2b", policy="tp_bf16",
@@ -372,9 +362,7 @@ def test_engine_refuses_unpageable_and_unpaged():
 
 
 def test_engine_oversized_request_rejected():
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     eng = ContinuousEngine(model, params, slots=2, max_len=32, chunk=16)
     with pytest.raises(ValueError, match="exceeds max_len"):
         eng.run([Request(rid=0, tokens=[1] * 30, max_new=8)])

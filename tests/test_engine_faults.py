@@ -29,7 +29,6 @@ import numpy as np
 import pytest
 
 from repro.launch.engine import ContinuousEngine, Request, synthetic_trace
-from repro.models.registry import build_model
 from repro.train.fault import (EngineStuckError, PoisonedLogitsError,
                                ServeFaultPlan, ServeWatchdog,
                                StragglerMonitor)
@@ -37,10 +36,8 @@ from repro.train.fault import (EngineStuckError, PoisonedLogitsError,
 
 @pytest.fixture(scope="module")
 def setup():
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
-    return model, params
+    from conftest import cached_model
+    return cached_model("gemma2-9b", paged_kv=True, page_size=16)
 
 
 def _solo(model, params, req, **gen_kw):
@@ -88,9 +85,9 @@ def test_degraded_swap_is_exact_on_fp8_pool():
     """Policy tp_bf16_kv8 already stores K/V in fp8 — the degraded swap
     store is the pool's own container, so the round-trip is value-exact
     and the preempted row stays bit-identical to its solo run."""
-    model = build_model("gemma2-9b", policy="tp_bf16_kv8",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    from conftest import cached_model
+    model, params = cached_model("gemma2-9b", policy="tp_bf16_kv8",
+                                 paged_kv=True, page_size=16)
     reqs = _pressure_queue(model.cfg.vocab)
     eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
                            n_pages=5, preempt="swap", degrade_fmt="fp8")

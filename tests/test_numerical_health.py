@@ -44,7 +44,6 @@ from repro.kernels.quant_common import (quantize_flag_masks,
                                         quantize_rne_bits)
 from repro.launch.engine import ContinuousEngine, Request
 from repro.models.attention import quantize_kv_rows
-from repro.models.registry import build_model
 from repro.train.fault import (ServeFaultPlan, ServeWatchdog,
                                SimulatedFailure, StragglerMonitor,
                                run_with_restarts)
@@ -336,10 +335,9 @@ def test_quantize_kv_rows_ladder():
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
 def esc_setup():
-    model = build_model("gemma2-9b", policy="fp32",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
-    return model, params
+    from conftest import cached_model
+    return cached_model("gemma2-9b", policy="fp32", paged_kv=True,
+                        page_size=16)
 
 
 def _mk_reqs(vocab, n=2, plen=12, budget=16, seed=0, **kw):
@@ -415,9 +413,9 @@ def test_escalation_deferred_under_page_pressure(esc_setup):
 def test_escalation_requires_wide_pool(esc_setup):
     """A narrow-container pool policy (kv_fmt set) cannot host the
     write-time rung selection — constructing the engine must refuse."""
-    model8 = build_model("gemma2-9b", policy="tp_bf16_kv8",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params8 = model8.init(jax.random.key(0))
+    from conftest import cached_model
+    model8, params8 = cached_model("gemma2-9b", policy="tp_bf16_kv8",
+                                   paged_kv=True, page_size=16)
     with pytest.raises(ValueError, match="escalat"):
         ContinuousEngine(model8, params8, slots=2, max_len=64, chunk=16,
                          escalate=EscalationPolicy())
@@ -425,9 +423,8 @@ def test_escalation_requires_wide_pool(esc_setup):
 
 @pytest.fixture(scope="module")
 def swap_setup():
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    from conftest import cached_model
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     rng = np.random.RandomState(0)
     mk = lambda n: rng.randint(0, model.cfg.vocab, size=n).tolist()
     reqs = [Request(rid=0, tokens=mk(20), max_new=12, arrival=0),

@@ -342,17 +342,13 @@ def test_build_tables_shared_prefix_layout():
 # ---------------------------------------------------------------------------
 # model-level
 # ---------------------------------------------------------------------------
-LENS = [8, 20, 32]
+from conftest import LENS, cached_model, small_batch
 
 
 def _setup(arch="gemma2-9b", policy="tp_bf16", **cfg):
-    model = build_model(arch, policy=policy, reduced=True)
-    if cfg:
-        model = model.with_cfg(**cfg)
-    params = model.init(jax.random.key(0))
-    toks = jax.random.randint(jax.random.key(1), (len(LENS), 32), 0,
-                              model.cfg.vocab)
-    return model, params, toks, jnp.asarray(LENS, jnp.int32)
+    model, params = cached_model(arch, policy=policy, **cfg)
+    toks, lens = small_batch(model.cfg.vocab)
+    return model, params, toks, lens
 
 
 def test_model_paged_generate_bit_identical_dense():

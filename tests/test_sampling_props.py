@@ -1,0 +1,210 @@
+"""Property suites for the sampling ops (``sample_token``,
+``apply_penalties``, ``token_counts``).
+
+Two tiers: deterministic seeded sweeps that ALWAYS run (wide random
+logits x many PRNG keys, exhaustive over the property), and
+``hypothesis`` variants that fuzz the same invariants with minimized
+counterexamples when the library is present (it is not baked into the
+container, so those gate on import).
+
+Invariants:
+  * temperature <= 0 is exact argmax and ignores the key entirely;
+  * top-k never emits a token outside the k highest logits, and
+    ``top_k=1`` degenerates to greedy even at high temperature;
+  * top-p only emits tokens from the nucleus — the smallest sorted
+    prefix whose mass reaches ``top_p`` — and that set's probability
+    mass is always >= min(top_p, 1);
+  * near-zero temperature converges to greedy on gapped logits;
+  * penalties key off presence, commute with each other, leave unseen
+    tokens untouched, and are identity at neutral knobs;
+  * the count histogram is permutation-invariant and the incremental
+    carry (``_bump_counts``) agrees with a from-scratch recount.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import (_bump_counts, apply_penalties,
+                                      sample_token, token_counts)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+V = 64
+
+
+def _logits(seed, b=8, v=V, scale=4.0):
+    return scale * jax.random.normal(jax.random.key(seed), (b, v))
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweeps — always run
+# ---------------------------------------------------------------------------
+def test_greedy_is_argmax_and_key_free():
+    lg = _logits(0)
+    want = np.asarray(jnp.argmax(lg, -1), np.int32)
+    for seed in range(5):
+        got = sample_token(lg, jax.random.key(seed), temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(
+        np.asarray(sample_token(lg, jax.random.key(9), temperature=-1.0)),
+        want)
+
+
+@pytest.mark.parametrize("k", [1, 4, 13])
+def test_top_k_never_escapes_the_k_set(k):
+    for seed in range(4):
+        lg = _logits(seed)
+        topk = np.asarray(jax.lax.top_k(lg, k)[1])
+        for draw in range(8):
+            tok = np.asarray(sample_token(
+                lg, jax.random.key(100 * seed + draw),
+                temperature=1.5, top_k=k))
+            for r in range(tok.shape[0]):
+                assert tok[r] in topk[r], (k, seed, draw, r)
+
+
+def test_top_k_one_is_greedy_at_any_temperature():
+    lg = _logits(1)
+    want = np.asarray(jnp.argmax(lg, -1), np.int32)
+    for t in (0.5, 1.0, 5.0):
+        got = sample_token(lg, jax.random.key(2), temperature=t, top_k=1)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def _nucleus(lg, top_p, temperature):
+    """Reference nucleus per row: smallest sorted prefix whose exclusive
+    mass is < top_p (first always kept)."""
+    lg = np.asarray(lg, np.float64) / temperature
+    out = []
+    for row in lg:
+        order = np.argsort(-row)
+        p = np.exp(row[order] - row[order].max())
+        p /= p.sum()
+        excl = np.cumsum(p) - p
+        out.append(set(order[excl < top_p].tolist()))
+    return out
+
+
+@pytest.mark.parametrize("p", [0.1, 0.5, 0.9])
+def test_top_p_stays_in_nucleus_with_mass_bound(p):
+    for seed in range(4):
+        lg = _logits(seed)
+        nuc = _nucleus(lg, p, 1.0)
+        prob = np.asarray(jax.nn.softmax(lg, -1), np.float64)
+        for r, keep in enumerate(nuc):
+            assert len(keep) >= 1
+            assert prob[r, sorted(keep)].sum() >= min(p, 1.0) - 1e-6
+        for draw in range(8):
+            tok = np.asarray(sample_token(
+                lg, jax.random.key(7 * seed + draw),
+                temperature=1.0, top_p=p))
+            for r in range(tok.shape[0]):
+                assert int(tok[r]) in nuc[r], (p, seed, draw, r)
+
+
+def test_tiny_temperature_converges_to_greedy():
+    lg = _logits(3, scale=8.0)
+    want = np.asarray(jnp.argmax(lg, -1), np.int32)
+    for seed in range(6):
+        got = sample_token(lg, jax.random.key(seed), temperature=1e-2)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_penalties_neutral_knobs_are_identity():
+    lg, cnt = _logits(4), token_counts(
+        jax.random.randint(jax.random.key(5), (8, 16), 0, V), V)
+    out = apply_penalties(lg, cnt, repetition_penalty=1.0,
+                          presence_penalty=0.0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(lg, np.float32))
+
+
+def test_penalties_touch_only_seen_tokens():
+    """The combined call IS repetition-then-presence (the documented
+    order), both orders leave unseen tokens bit-untouched, and
+    discouraging knobs (>1 rep, >0 pres) never raise a seen logit."""
+    lg = _logits(5)
+    cnt = token_counts(jax.random.randint(
+        jax.random.key(6), (8, 16), 0, V), V)
+    seen = np.asarray(cnt) > 0
+    both = np.asarray(apply_penalties(
+        lg, cnt, repetition_penalty=1.3, presence_penalty=0.7))
+    rep_then_pres = np.asarray(apply_penalties(
+        apply_penalties(lg, cnt, repetition_penalty=1.3),
+        cnt, presence_penalty=0.7))
+    pres_then_rep = np.asarray(apply_penalties(
+        apply_penalties(lg, cnt, presence_penalty=0.7),
+        cnt, repetition_penalty=1.3))
+    np.testing.assert_array_equal(both, rep_then_pres)
+    lgf = np.asarray(lg, np.float32)
+    np.testing.assert_array_equal(both[~seen], lgf[~seen])
+    np.testing.assert_array_equal(pres_then_rep[~seen], lgf[~seen])
+    assert np.all(both[seen] <= lgf[seen] + 1e-6)  # >1 rep, >0 pres: down
+
+
+def test_histogram_is_permutation_invariant_and_carry_matches():
+    toks = jax.random.randint(jax.random.key(8), (4, 24), 0, V)
+    perm = toks[:, jax.random.permutation(jax.random.key(9), 24)]
+    np.testing.assert_array_equal(np.asarray(token_counts(toks, V)),
+                                  np.asarray(token_counts(perm, V)))
+    # incremental carry over a generated suffix == from-scratch recount
+    lens = jnp.asarray([10, 24, 17, 3], jnp.int32)
+    cnt = token_counts(toks, V, prompt_lens=lens)
+    emitted = jax.random.randint(jax.random.key(10), (4, 5), 0, V)
+    for i in range(5):
+        cnt = _bump_counts(cnt, emitted[:, i:i + 1])
+    full = np.asarray(token_counts(toks, V, prompt_lens=lens)) + \
+        np.asarray(token_counts(emitted, V))
+    np.testing.assert_array_equal(np.asarray(cnt), full)
+
+
+def test_histogram_masks_pad_tail():
+    toks = jnp.full((2, 8), 3, jnp.int32)
+    cnt = np.asarray(token_counts(toks, V, prompt_lens=jnp.asarray([8, 2])))
+    assert cnt[0, 3] == 8 and cnt[1, 3] == 2
+    assert cnt.sum() == 10
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants — run only when the library is installed
+# ---------------------------------------------------------------------------
+if HAVE_HYP:
+    _row = st.lists(st.floats(-20.0, 20.0, allow_nan=False, width=32),
+                    min_size=V, max_size=V)
+
+    @settings(max_examples=25, deadline=None)
+    @given(row=_row, k=st.integers(1, V), seed=st.integers(0, 2**31 - 1))
+    def test_hyp_top_k_membership(row, k, seed):
+        lg = jnp.asarray([row], jnp.float32)
+        tok = int(sample_token(lg, jax.random.key(seed),
+                               temperature=1.0, top_k=k)[0])
+        kth = float(np.sort(np.asarray(lg[0], np.float32))[-k])
+        assert float(lg[0, tok]) >= kth
+
+    @settings(max_examples=25, deadline=None)
+    @given(row=_row, p=st.floats(0.01, 0.99), seed=st.integers(0, 2**31 - 1))
+    def test_hyp_top_p_membership(row, p, seed):
+        lg = jnp.asarray([row], jnp.float32)
+        tok = int(sample_token(lg, jax.random.key(seed),
+                               temperature=1.0, top_p=p)[0])
+        assert tok in _nucleus(lg, p, 1.0)[0]
+
+    @settings(max_examples=25, deadline=None)
+    @given(row=_row, rp=st.floats(1.0, 3.0), pp=st.floats(0.0, 2.0))
+    def test_hyp_penalties_order_independent(row, rp, pp):
+        lg = jnp.asarray([row], jnp.float32)
+        cnt = token_counts(jnp.asarray([[1, 5, 5, 9]], jnp.int32), V)
+        both = np.asarray(apply_penalties(
+            lg, cnt, repetition_penalty=rp, presence_penalty=pp))
+        seq = np.asarray(apply_penalties(
+            apply_penalties(lg, cnt, repetition_penalty=rp),
+            cnt, presence_penalty=pp))
+        np.testing.assert_array_equal(both, seq)
+        seen = np.asarray(cnt)[0] > 0
+        np.testing.assert_array_equal(both[0, ~seen],
+                                      np.asarray(lg, np.float32)[0, ~seen])

@@ -156,9 +156,8 @@ def test_projection_allclose_fp32():
 
 @need8
 def test_full_model_logits_allclose():
-    from repro.models.registry import build_model
-    model = build_model("gemma2-9b", policy="tp_bf16", reduced=True)
-    params = model.init(jax.random.key(0))
+    from conftest import cached_model
+    model, params = cached_model("gemma2-9b")
     toks = jax.random.randint(jax.random.key(1), (2, 12), 0,
                               model.cfg.vocab)
     lg0, _ = jax.jit(lambda p, t: model.prefill(p, t, max_len=24))(
@@ -174,11 +173,9 @@ def test_full_model_logits_allclose():
 # engine: tensor-parallel + data-parallel token parity
 # ---------------------------------------------------------------------------
 def _engine_fixture():
+    from conftest import cached_model
     from repro.launch.engine import ContinuousEngine, synthetic_trace
-    from repro.models.registry import build_model
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     reqs = synthetic_trace(6, 3, 16, 16, model.cfg.vocab)
     max_len = max(r.prompt_len + r.max_new for r in reqs)
     mk = lambda mesh: ContinuousEngine(model, params, slots=3,
@@ -196,13 +193,10 @@ def test_engine_tp_token_parity():
 
 @need8
 def test_replicated_engine_token_parity_and_stats():
-    from repro.launch.engine import ContinuousEngine, synthetic_trace
-    from repro.models.registry import build_model
+    from conftest import cached_model
     mk, reqs = _engine_fixture()
     base, _ = mk(None).run(reqs)
-    model = build_model("gemma2-9b", policy="tp_bf16",
-                        reduced=True).with_cfg(paged_kv=True, page_size=16)
-    params = model.init(jax.random.key(0))
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
     max_len = max(r.prompt_len + r.max_new for r in reqs)
     rep = ReplicatedEngine(model, params,
                            mesh=meshmod.make_serving_mesh(2, 2),

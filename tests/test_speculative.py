@@ -1,0 +1,382 @@
+"""Transprecision speculative decoding: the draft/verify parity harness.
+
+Contract under test (the FPnew energy-proportionality move applied to
+decoding itself — spend the cheap format on proposals, pay target
+precision once per chunk to verify):
+
+  * chunk-form == step-form — ``verify_chunk`` scores k+1 positions in
+    ONE call by folding the chunk into the batch axis of the *decode*
+    attend path; its logits AND every cache byte it writes are bitwise
+    identical to k+1 sequential ``decode_step`` calls, across policies
+    (bf16 / fp16 / fp8-KV) and both pool layouts (contiguous + paged).
+  * accepted stream == greedy stream — ``speculate_decode`` emits
+    exactly ``generate(temperature=0)``'s tokens no matter how good or
+    bad the draft is (layer-skip depth, narrow draft policy, or a
+    forced never-matching draft): a wrong proposal costs SPEED only.
+  * rollback is bitwise — rejected positions sit at/past each row's
+    ``lens``; the live cache region after rejected rounds equals a
+    never-drafted run's bit for bit.
+  * accounting — EOS mid-chunk clamps acceptance at the stop token,
+    the forced-0%-accept worst case still terminates in ``gen_len - 1``
+    rounds, and the full-accept self-draft needs ``ceil((gen_len-1)/
+    (k+1))`` rounds.
+  * engine composition — spec-vs-plain token parity on the synthetic
+    trace, per-request ``spec_k``/``no_speculate`` caps, preemption
+    (free-and-reingest AND swap) and flag-driven escalation all
+    compose; ``spec_accept_rate`` lands in (0, 1].
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import cached_model, small_batch
+from repro.core.policy import EscalationPolicy
+from repro.launch.engine import ContinuousEngine, Request, synthetic_trace
+from repro.train.fault import ServeFaultPlan
+
+POLICIES = ["tp_bf16", "tp_fp16", "tp_bf16_kv8"]
+GEN, K = 10, 3
+
+
+def _paged_cfg(paged):
+    return dict(paged_kv=True, page_size=16) if paged else {}
+
+
+def _greedy(model, params, toks, lens=None, **kw):
+    fn = jax.jit(lambda p, t, l: model.generate(
+        p, t, gen_len=GEN, max_len=48, prompt_lens=l, **kw)[0])
+    return np.asarray(fn(params, toks, lens))
+
+
+def _spec(model, params, toks, lens=None, **kw):
+    fn = jax.jit(lambda p, t, l: model.speculate_decode(
+        p, t, gen_len=GEN, spec_k=K, max_len=48, prompt_lens=l, **kw))
+    return np.asarray(fn(params, toks, lens))
+
+
+def _leaf_live_equal(ca, cb, lens):
+    """Bitwise equality of two cache pytrees on the LIVE region: every
+    KV leaf ([..., B, H, S, D] with batch at axis -4 and tokens at axis
+    -2) is compared per row up to that row's length — dead slots past
+    ``lens`` are the rollback scratch space and intentionally differ."""
+    la, lb = jax.tree.leaves(ca), jax.tree.leaves(cb)
+    assert len(la) == len(lb)
+    n_kv = 0
+    for a, b in zip(la, lb):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape
+        if a.ndim < 4:
+            continue
+        n_kv += 1
+        a = np.moveaxis(a, -4, 0)
+        b = np.moveaxis(b, -4, 0)
+        for r, L in enumerate(lens):
+            np.testing.assert_array_equal(a[r, ..., :L, :], b[r, ..., :L, :])
+    assert n_kv > 0
+
+
+# ---------------------------------------------------------------------------
+# chunk-form verify == step-form decode, bitwise (logits AND cache bytes)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_verify_chunk_bitwise_matches_sequential(policy, paged):
+    model, params = cached_model("gemma2-9b", policy=policy,
+                                 **_paged_cfg(paged))
+    toks, lens = small_batch(model.cfg.vocab)
+    b = toks.shape[0]
+    lg0, c_seq = jax.jit(lambda p, t, l: model.prefill(
+        p, t, max_len=48, prompt_lens=l))(params, toks, lens)
+    _, c_chk = jax.jit(lambda p, t, l: model.prefill(
+        p, t, max_len=48, prompt_lens=l))(params, toks, lens)
+    tok = jnp.argmax(lg0[jnp.arange(b), lens - 1], -1).astype(
+        jnp.int32)[:, None]
+    # sequential: 4 greedy decode steps, collecting logits per position
+    chunk, seq_lg = [tok], []
+    pos = jnp.asarray(lens)
+    step = jax.jit(lambda p, t, c, i: model.decode_step(
+        p, t, c, i, kv_len=i + 1))
+    for i in range(4):
+        lg, c_seq = step(params, chunk[-1], c_seq, pos + i)
+        seq_lg.append(lg[:, -1])
+        chunk.append(jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None])
+    # chunk: ONE verify call over the same 4 tokens at the same slots
+    ct = jnp.concatenate(chunk[:4], axis=1)
+    offs = pos[:, None] + jnp.arange(4, dtype=jnp.int32)
+    v_lg, c_chk = jax.jit(lambda p, t, c, i, kl: model.verify_chunk(
+        p, t, c, i, kv_len=kl))(params, ct, c_chk, pos, offs + 1)
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(x, np.float32) for x in seq_lg], 1),
+        np.asarray(v_lg, np.float32))
+    for a, b_ in zip(jax.tree.leaves(c_seq), jax.tree.leaves(c_chk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+# ---------------------------------------------------------------------------
+# accepted stream == plain greedy stream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("stop", [None, 7])
+def test_speculate_decode_matches_generate(paged, stop):
+    model, params = cached_model("gemma2-9b", **_paged_cfg(paged))
+    toks, lens = small_batch(model.cfg.vocab)
+    want = _greedy(model, params, toks, lens, stop_token=stop)
+    got = _spec(model, params, toks, lens, stop_token=stop)
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("dr", [0, 1], ids=["embed-only", "1-repeat"])
+def test_layer_skip_and_narrow_draft_parity(dr):
+    """A shallow draft (down to zero scanned repeats) under a NARROWER
+    policy (fp8 KV reads) changes only the accept rate, never a token."""
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
+    toks, lens = small_batch(model.cfg.vocab)
+    want = _greedy(model, params, toks, lens)
+    got = _spec(model, params, toks, lens, draft_repeats=dr,
+                draft_policy="tp_bf16_kv8")
+    np.testing.assert_array_equal(want, got)
+
+
+def test_speculate_decode_moe_arch_paged():
+    """The MoE arch (qk-norm, 8 experts top-2) through the paged pool."""
+    model, params = cached_model("qwen3-moe-30b-a3b", paged_kv=True,
+                                 page_size=16)
+    toks, lens = small_batch(model.cfg.vocab)
+    want = _greedy(model, params, toks, lens)
+    got = _spec(model, params, toks, lens, draft_repeats=1)
+    np.testing.assert_array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# rollback + accounting
+# ---------------------------------------------------------------------------
+def test_rollback_leaves_live_cache_bitwise_identical():
+    """Rounds of REJECTED drafts (a constant never-matching proposal)
+    must leave the live cache region exactly as a never-drafted run:
+    rejected writes land at/past ``lens`` and the next chunk overwrites
+    them before they can become live."""
+    model, params = cached_model("gemma2-9b")
+    toks, lens = small_batch(model.cfg.vocab)
+    b = toks.shape[0]
+    pre = jax.jit(lambda p, t, l: model.prefill(
+        p, t, max_len=48, prompt_lens=l))
+    lg0, c_spec = pre(params, toks, lens)
+    _, c_plain = pre(params, toks, lens)
+    tok = jnp.argmax(lg0[jnp.arange(b), lens - 1], -1).astype(
+        jnp.int32)[:, None]
+    pos = jnp.asarray(lens)
+    done = jnp.zeros((b,), bool)
+    limit = pos + 100
+    bad_draft = lambda t, p: jnp.full((b, K), model.vocab_out - 1,
+                                      jnp.int32)
+    sstep = jax.jit(lambda p, t, c, i, l, d: model.speculate_step(
+        p, t, c, i, lens=l, done=d, limit=limit, spec_k=K,
+        _draft_fn=bad_draft))
+    s_tok, s_pos, s_lens = tok, pos, pos
+    spec_out = []
+    for _ in range(3):
+        g, n, s_tok, s_pos, s_lens, done, c_spec = sstep(
+            params, s_tok, c_spec, s_pos, s_lens, done)
+        assert np.all(np.asarray(n) == 1)          # 0% accept: bonus only
+        spec_out.append(np.asarray(g[:, 0]))
+    p_tok = tok
+    step = jax.jit(lambda p, t, c, i: model.decode_step(
+        p, t, c, i, kv_len=i + 1))
+    plain_out = []
+    for i in range(3):
+        lg, c_plain = step(params, p_tok, c_plain, pos + i)
+        p_tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        plain_out.append(np.asarray(p_tok[:, 0]))
+    np.testing.assert_array_equal(np.stack(spec_out, 1),
+                                  np.stack(plain_out, 1))
+    _leaf_live_equal(c_spec, c_plain, np.asarray(s_lens))
+
+
+def test_forced_zero_accept_terminates_and_matches():
+    """Worst case: a draft that NEVER matches.  Every round accepts
+    exactly the bonus token, so the run takes ``gen_len - 1`` rounds —
+    and still emits the plain greedy stream."""
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
+    toks, lens = small_batch(model.cfg.vocab)
+    b = toks.shape[0]
+    bad = lambda t, p: jnp.full((b, K), model.vocab_out - 1, jnp.int32)
+    got, rounds, emitted = jax.jit(lambda p, t, l: model.speculate_decode(
+        p, t, gen_len=GEN, spec_k=K, max_len=48, prompt_lens=l,
+        _draft_fn=bad, return_stats=True))(params, toks, lens)
+    np.testing.assert_array_equal(_greedy(model, params, toks, lens),
+                                  np.asarray(got))
+    assert int(rounds) == GEN - 1
+    assert int(emitted) == b * (GEN - 1)
+
+
+def test_full_accept_round_count_and_rate():
+    """The full-depth self-draft proposes the verify argmax chain, so
+    every draft is accepted: ``ceil((gen_len-1)/(k+1))`` rounds."""
+    model, params = cached_model("gemma2-9b")
+    toks, lens = small_batch(model.cfg.vocab)
+    b = toks.shape[0]
+    got, rounds, emitted = jax.jit(lambda p, t, l: model.speculate_decode(
+        p, t, gen_len=GEN, spec_k=K, max_len=48, prompt_lens=l,
+        return_stats=True))(params, toks, lens)
+    np.testing.assert_array_equal(_greedy(model, params, toks, lens),
+                                  np.asarray(got))
+    assert int(rounds) == -(-(GEN - 1) // (K + 1))
+    assert int(emitted) == b * (GEN - 1)
+
+
+def test_eos_mid_chunk_accounting():
+    """A stop token that fires MID-CHUNK clamps acceptance there: the
+    emitted stream (stop kept, tail frozen at the pad) matches plain
+    EOS decode, and the emitted count stops at each row's stop."""
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
+    toks, lens = small_batch(model.cfg.vocab)
+    plain = _greedy(model, params, toks, lens)
+    # any mid-stream token works as the stop: rows that happen to open
+    # with it just freeze immediately (live contribution 0)
+    stop = int(plain[0, GEN // 2])
+    want = _greedy(model, params, toks, lens, stop_token=stop)
+    got, rounds, emitted = jax.jit(lambda p, t, l: model.speculate_decode(
+        p, t, gen_len=GEN, spec_k=K, max_len=48, prompt_lens=l,
+        stop_token=stop, return_stats=True))(params, toks, lens)
+    np.testing.assert_array_equal(want, np.asarray(got))
+    # emitted == sum of live tokens past each row's first (frozen rows
+    # pad with the stop token and contribute nothing further)
+    live = [(np.where(want[r] == stop)[0][0] if stop in want[r]
+             else GEN - 1) for r in range(want.shape[0])]
+    assert int(emitted) == int(sum(live))
+
+
+def test_speculate_headroom_and_gating():
+    """No silent cache corruption: missing draft lookahead raises at the
+    model layer AND the engine layer; sampling/penalty engines refuse
+    ``spec_k`` outright (acceptance is argmax-defined)."""
+    model, params = cached_model("gemma2-9b", paged_kv=True, page_size=16)
+    toks, _ = small_batch(model.cfg.vocab)
+    with pytest.raises(ValueError, match="headroom"):
+        model.speculate_decode(params, toks, gen_len=8, spec_k=K,
+                               max_len=toks.shape[1] + 8)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ContinuousEngine(model, params, slots=2, max_len=64,
+                         spec_k=K, temperature=0.7)
+    with pytest.raises(ValueError, match="penalties"):
+        ContinuousEngine(model, params, slots=2, max_len=64,
+                         spec_k=K, repetition_penalty=1.3)
+    eng = ContinuousEngine(model, params, slots=2, max_len=32, spec_k=K)
+    with pytest.raises(ValueError, match="speculative lookahead"):
+        eng.run([Request(rid=0, tokens=[1] * 24, max_new=8)])
+
+
+# ---------------------------------------------------------------------------
+# engine composition
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def eng_setup():
+    return cached_model("gemma2-9b", paged_kv=True, page_size=16)
+
+
+def _trace(model, n=10):
+    return synthetic_trace(n, 4, 6, 10, model.vocab_out, seed=3)
+
+
+def _run(model, params, reqs, **kw):
+    eng = ContinuousEngine(model, params, slots=4, max_len=48, chunk=8,
+                           stop_token=7, burst_cap=16, **kw)
+    fin, st = eng.run(reqs)
+    return {f.rid: f.tokens for f in fin}, st
+
+
+def test_engine_spec_vs_plain_token_parity(eng_setup):
+    """THE acceptance gate: the speculative engine serves the synthetic
+    trace with bit-identical tokens, fewer decode rounds, and an accept
+    rate in (0, 1]."""
+    model, params = eng_setup
+    reqs = _trace(model)
+    plain, st0 = _run(model, params, reqs)
+    spec, st1 = _run(model, params, reqs, spec_k=K)
+    assert all(plain[r.rid] == spec[r.rid] for r in reqs)
+    assert 0.0 < st1["spec_accept_rate"] <= 1.0
+    assert st1["decode_rounds"] <= st0["decode_rounds"]
+    assert st1["spec_emitted"] >= st1["spec_rounds"]  # bonus >= 1/round
+
+
+def test_engine_per_request_caps_and_no_speculate(eng_setup):
+    """``no_speculate`` rows (cap 0) and per-request ``spec_k`` caps ride
+    the SAME burst program as full-speculation rows, all at parity."""
+    model, params = eng_setup
+    reqs = _trace(model)
+    plain, _ = _run(model, params, reqs)
+    mix = [dataclasses.replace(r, no_speculate=(i % 3 == 0),
+                               spec_k=(1 if i % 3 == 1 else None))
+           for i, r in enumerate(reqs)]
+    spec, st = _run(model, params, mix, spec_k=K)
+    assert all(plain[r.rid] == spec[r.rid] for r in reqs)
+    assert 0.0 < st["spec_accept_rate"] <= 1.0
+
+
+@pytest.mark.parametrize("mode", ["free", "swap"])
+def test_engine_spec_composes_with_preemption(eng_setup, mode):
+    """A speculating victim preempted under page pressure resumes to its
+    exact un-preempted stream on both mechanisms (the swap path stores
+    only ``lens`` tokens — rejected-slot scratch is recomputed)."""
+    model, params = eng_setup
+    rng = np.random.RandomState(0)
+    mk = lambda n: rng.randint(0, model.cfg.vocab, size=n).tolist()
+    # budgets long enough that the residents are still mid-generation
+    # when the priority arrival lands (speculation finishes rows up to
+    # (k+1)x faster, so the plain-engine pressure recipe is too short);
+    # the pool fits both residents' +spec_k reservations but not the
+    # arrival's, forcing the preemption path rather than a free admit
+    reqs = [Request(rid=0, tokens=mk(20), max_new=24, arrival=0),
+            Request(rid=1, tokens=mk(20), max_new=24, arrival=0),
+            Request(rid=2, tokens=mk(16), max_new=8, arrival=4, priority=2)]
+    solo = jax.jit(lambda p, t, n: model.generate(
+        p, t, gen_len=n, max_len=48)[0], static_argnums=2)
+    eng = ContinuousEngine(model, params, slots=2, max_len=48, chunk=16,
+                           n_pages=7, preempt=mode, spec_k=K)
+    fin, stats = eng.run(reqs)
+    assert stats["preemptions"] >= 1 and stats["resumed"] >= 1
+    for r, f in zip(reqs, fin):
+        want = np.asarray(solo(params, jnp.asarray(
+            r.tokens, jnp.int32)[None], r.max_new))[0].tolist()
+        assert f.tokens == want, (mode, r.rid)
+
+
+def test_engine_spec_composes_with_escalation():
+    """Flag-driven KV escalation under an injected overflow storm: the
+    speculating engine drains every budget, escalates at least one row,
+    and keeps all logits finite (saturating chunk writes)."""
+    model, params = cached_model("gemma2-9b", policy="fp32",
+                                 paged_kv=True, page_size=16)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, tokens=rng.randint(
+        0, model.cfg.vocab, size=12).tolist(), max_new=16, arrival=0)
+        for i in range(2)]
+    plan = ServeFaultPlan(overflow_at=(2,), overflow_scale=65536.0)
+    eng = ContinuousEngine(model, params, slots=2, max_len=64, chunk=16,
+                           n_pages=12, burst_cap=4, spec_k=K,
+                           escalate=EscalationPolicy(of_threshold=4),
+                           fault_plan=plan)
+    fin, stats = eng.run(reqs)
+    assert stats["escalations"] >= 1
+    assert stats["poisoned_rounds"] == 0
+    assert any(f.escalated >= 1 for f in fin)
+    for r, f in zip(reqs, fin):
+        assert len(f.tokens) == r.max_new
+    assert 0.0 < stats["spec_accept_rate"] <= 1.0
+
+
+def test_engine_spec_replay_deterministic(eng_setup):
+    """Same queue, same speculative engine, twice: same tokens, same
+    accept-rate accounting (the whole draft/verify path is replayable)."""
+    model, params = eng_setup
+    reqs = _trace(model, n=6)
+    eng = ContinuousEngine(model, params, slots=4, max_len=48, chunk=8,
+                           stop_token=7, burst_cap=16, spec_k=K)
+    fin1, st1 = eng.run(reqs)
+    fin2, st2 = eng.run(reqs)
+    assert [f.tokens for f in fin1] == [f.tokens for f in fin2]
+    assert st1["spec_rounds"] == st2["spec_rounds"]
+    assert st1["spec_emitted"] == st2["spec_emitted"]
