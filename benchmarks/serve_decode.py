@@ -56,6 +56,15 @@ verify call at target precision accepts the longest matching prefix —
 against the plain greedy engine on the same trace.  Parity must be TRUE:
 speculation is only allowed to change speed, never a token.
 
+Replica-HA soak (``ha_drained`` / ``ha_kills`` / ``ha_migrations`` /
+``ha_token_parity`` / ``ha_replay_parity``): the PR-10 fault-tolerance
+machinery on a multi-turn ``flavor="session"`` trace — a 2-replica fleet
+loses one replica to an injected kill and must drain with tokens identical
+to the unfailed fleet, then a single-replica journaled fleet is killed
+outright and ``run_with_restarts`` + the request journal must recover the
+same streams.  Both parity columns gate TRUE; archs that cannot page carry
+nulls.
+
 Writes BENCH_serve.json at the repo root so the serving-perf trajectory is
 tracked PR-over-PR.
 
@@ -225,6 +234,10 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen: int,
     # logits.  The gate is DRAINAGE — every request finishes its full
     # budget — with the preempt/shed/degrade/deadline counters recorded.)
     row.update(robustness_soak(arch, prompt_len=prompt_len, quick=quick))
+
+    # -- replica HA soak: kill one replica, migrate, drain; replay a full
+    # -- fleet loss from the request journal (the PR-10 machinery) ----------
+    row.update(ha_soak(arch, prompt_len=prompt_len, quick=quick))
 
     # -- numerical health: flag-telemetry overhead + escalation/SDC soak ----
     # (the PR-7 machinery: IEEE flag counters in the decode kernel, flag-
@@ -596,6 +609,85 @@ def robustness_soak(arch: str, *, prompt_len: int, quick: bool = False,
     }
 
 
+def ha_soak(arch: str, *, prompt_len: int, quick: bool = False,
+            slots: int = 3, gen: int = 16, n_req: int = 12) -> dict:
+    """Replica-HA soak: fleet survives a kill; a full loss replays.
+
+    Two legs over ONE multi-turn ``flavor="session"`` trace (later turns
+    re-send the whole conversation as a growing shared prefix, so a
+    migrated session resumes mid-conversation):
+
+    * **kill leg** — a 2-replica meshless fleet loses one replica to an
+      injected kill mid-run; the survivor adopts the victim's in-flight
+      requests by free-and-reingest and the fleet must DRAIN (every
+      budget honored) with tokens identical to the unfailed fleet
+      (``ha_token_parity``).
+    * **replay leg** — a single-replica journaled fleet is killed with
+      NO survivor; ``run_with_restarts`` restarts it and the journal
+      replays every unfinished request from its last journaled token —
+      ``ha_replay_parity`` gates the recovered streams against the same
+      oracle.
+
+    Archs that cannot page carry nulls, like the other serving legs."""
+    import jax
+    from repro.launch.engine import ReplicatedEngine, synthetic_trace
+    from repro.launch.journal import RequestJournal
+    from repro.models.registry import build_model
+    from repro.train.fault import ReplicaFaultPlan, run_with_restarts
+
+    if quick:
+        slots, n_req = 2, 8
+    keys = ("ha_drained", "ha_requests", "ha_kills", "ha_migrations",
+            "ha_token_parity", "ha_replay_parity", "ha_tok_s",
+            "ha_journal_records")
+    model = build_model(arch, policy="tp_bf16", reduced=True)
+    why = model.cfg.paged_unsupported_reason()
+    if why is not None:
+        out = {k: None for k in keys}
+        out["ha_unsupported"] = why
+        return out
+    page = 16
+    model_pg = model.with_cfg(paged_kv=True, page_size=page)
+    params = model_pg.init(jax.random.key(0))
+    reqs = synthetic_trace(n_req, slots, prompt_len, gen, model.cfg.vocab,
+                           flavor="session")
+    ml = max(r.prompt_len + r.max_new for r in reqs)
+
+    def mk(n, **kw):
+        return ReplicatedEngine(model_pg, params, replicas=n, slots=slots,
+                                max_len=ml, chunk=16, burst_cap=2,
+                                migrate="reingest", **kw)
+
+    base, _ = mk(2).run(reqs)                      # oracle + compile warm
+    t0 = time.perf_counter()
+    fin, st = mk(2, replica_fault=ReplicaFaultPlan(
+        replica=1, at_burst=2, mode="kill")).run(reqs)
+    dt = time.perf_counter() - t0
+    drained = (len(fin) == n_req
+               and all(len(f.tokens) == r.max_new
+                       for f, r in zip(fin, reqs)))
+    parity = all(a.tokens == b.tokens for a, b in zip(fin, base))
+
+    jr = RequestJournal()
+    solo = mk(1, replica_fault=ReplicaFaultPlan(
+        replica=0, at_burst=2, mode="kill"), journal=jr).bind(reqs)
+    _, restarts = run_with_restarts(lambda: solo, max_restarts=2)
+    fin2, _ = solo.run()        # answered from the journal's finish records
+    replay_parity = (restarts >= 1
+                     and all(a.tokens == b.tokens
+                             for a, b in zip(fin2, base)))
+    return {
+        "ha_drained": drained,
+        "ha_requests": n_req,
+        "ha_kills": st["ha_kills"],
+        "ha_migrations": st["ha_migrations"],
+        "ha_token_parity": parity,
+        "ha_replay_parity": replay_parity,
+        "ha_tok_s": sum(len(f.tokens) for f in fin) / dt,
+        "ha_journal_records": sum(jr.counts().values()),
+    }
+
+
 def flag_overhead(repeats: int = 3) -> dict:
     """Flag-telemetry overhead A/B on the fused decode kernel.
 
@@ -817,6 +909,18 @@ def main(argv=None):
                   f"{row['soak_faults_exhaust']} exhaustions", flush=True)
         else:
             print(f"  soak n/a ({row.get('soak_unsupported')})", flush=True)
+        if row.get("ha_drained") is not None:
+            print(f"  ha drained={row['ha_drained']} "
+                  f"({row['ha_requests']} session reqs, "
+                  f"{row['ha_tok_s']:.1f} tok/s) | "
+                  f"{row['ha_kills']} kills, "
+                  f"{row['ha_migrations']} migrations, "
+                  f"parity={row['ha_token_parity']}, "
+                  f"replay_parity={row['ha_replay_parity']} "
+                  f"({row['ha_journal_records']} journal records)",
+                  flush=True)
+        else:
+            print(f"  ha n/a ({row.get('ha_unsupported')})", flush=True)
         print(f"  flag telemetry {row['flag_telemetry_overhead']:.2f}x "
               f"({row['flag_decode_ms']:.1f} -> "
               f"{row['flag_decode_flags_ms']:.1f} ms)", flush=True)

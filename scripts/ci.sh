@@ -18,7 +18,8 @@ echo "== tier-1 tests (engine + fault modules gated separately below) =="
 # prefix sharing) — all kernel tests run in Pallas interpret mode on CPU
 python -m pytest -x -q --ignore=tests/test_engine.py \
     --ignore=tests/test_engine_faults.py \
-    --ignore=tests/test_speculative.py
+    --ignore=tests/test_speculative.py \
+    --ignore=tests/test_replica_ha.py
 
 echo "== continuous-batching engine tests =="
 # the PR-5 serving engine gate, run once as its own named step so a
@@ -44,6 +45,15 @@ echo "== speculative decoding tests =="
 # installed: the module-scoped engine fixture and probe-derived stop
 # tokens assume a stable order within this file.
 python -m pytest -q -p no:randomly tests/test_speculative.py
+
+echo "== replica fault-tolerance / HA tests =="
+# the PR-10 gate: replica loss with token-bit-identical results — kill
+# (reingest migration) and hang (CRC-tagged swap-blob migration) parity,
+# no_degrade and mid-escalation victims surviving migration intact,
+# foreign-blob refusal, journal replay through run_with_restarts with
+# two-recovery determinism, torn-tail recovery + truncation, and the
+# session-flavor HA soak draining through a kill
+python -m pytest -q tests/test_replica_ha.py
 
 echo "== numerical-health tests =="
 # the PR-7 gate: IEEE flag casts vs an ml_dtypes oracle (exhaustive
@@ -127,6 +137,8 @@ REQUIRED = [
     "sdc_soak_reingest", "sdc_soak_token_parity",
     "shard_decode_tok_s", "shard_devices", "shard_speedup",
     "spec_decode_tok_s", "spec_accept_rate", "spec_token_parity",
+    "ha_drained", "ha_kills", "ha_migrations", "ha_token_parity",
+    "ha_replay_parity",
 ]
 report = json.load(open("BENCH_serve.json"))
 bad = [(arch, c) for arch, row in report["archs"].items()
@@ -218,6 +230,33 @@ for arch, row in report["archs"].items():
         if row["sdc_soak_token_parity"] is not True:
             sys.exit(f"BENCH_serve.json: {arch} SDC recovery broke token "
                      f"parity with the uncorrupted run")
+    # replica-HA soak: for archs that can page, the killed fleet must
+    # have DRAINED to zero stuck requests through at least one replica
+    # kill and at least one live-request migration, with token parity
+    # against the unfailed fleet AND journal-replay parity after a full
+    # fleet loss — fault tolerance that changes tokens is data loss
+    ha = row["ha_drained"]
+    if ha is not None:
+        if ha is not True:
+            sys.exit(f"BENCH_serve.json: {arch} ha_drained must be true "
+                     f"— the HA soak lost or stuck requests")
+        if not (isinstance(row["ha_kills"], int) and row["ha_kills"] >= 1):
+            sys.exit(f"BENCH_serve.json: {arch} HA soak never killed a "
+                     f"replica (got {row['ha_kills']!r}) — the fault "
+                     f"plan did not fire")
+        if not (isinstance(row["ha_migrations"], int)
+                and row["ha_migrations"] >= 1):
+            sys.exit(f"BENCH_serve.json: {arch} HA soak never migrated a "
+                     f"request (got {row['ha_migrations']!r}) — the "
+                     f"victim had nothing in flight")
+        if row["ha_token_parity"] is not True:
+            sys.exit(f"BENCH_serve.json: {arch} replica loss changed "
+                     f"tokens vs the unfailed fleet — migration broke "
+                     f"bit parity")
+        if row["ha_replay_parity"] is not True:
+            sys.exit(f"BENCH_serve.json: {arch} journal replay after a "
+                     f"full fleet loss did not reproduce the oracle "
+                     f"streams — the journal lost or reordered tokens")
     # speculative decoding A/B: for archs that can page, the draft/verify
     # engine must have kept BIT-IDENTICAL tokens vs plain greedy serving
     # (speculation may only change speed) and the accept rate must be a
@@ -258,7 +297,8 @@ for arch, row in report["archs"].items():
                      f">= 256 devices, got {devs!r}")
 print(f"schema OK ({len(report['archs'])} arch rows x "
       f"{len(REQUIRED)} required columns, paged + continuous + soak + "
-      f"numerical-health + shard + speculative fields validated)")
+      f"numerical-health + shard + speculative + replica-HA fields "
+      f"validated)")
 EOF
 
 echo "CI OK"

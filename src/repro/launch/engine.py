@@ -85,6 +85,30 @@ preemption and fault release happen at burst boundaries, between compiled
 steps, never inside them — the same boundary the ``PageAllocator``
 already lives at.
 
+Replica-level fault tolerance rides the same boundary.  ``run`` is a thin
+wrapper over a re-entrant ``start()`` / ``step()`` / ``finalize()`` state
+machine, so a fleet host (``ReplicatedEngine``) can interleave replicas
+one scheduler iteration at a time and react to a replica dying MID-RUN:
+
+  * **Failure injection** — a ``ReplicaFaultPlan`` deterministically
+    kills a replica at a chosen burst (``ReplicaLostError`` raised
+    through the burst dispatch: device memory gone) or hangs it (the
+    replica stops stepping; the fleet's heartbeat view declares it dead
+    after missed beats, device memory still readable).
+  * **Live-request migration** — a dead replica's residents are captured
+    by the SAME preemption machinery (``evacuate``): swap-to-host page
+    payloads (CRC32-verified, tagged with their pool's provenance) become
+    portable continuation blobs a survivor ``adopt``s into its own
+    disjoint pool, with free-and-reingest as the fallback when the
+    victim's pages are unreachable — so a migrated request's remaining
+    tokens are bit-identical to the unfailed run.
+  * **Crash-consistent journal** — with a ``launch/journal.py``
+    ``RequestJournal`` attached, every admission, per-burst emitted-token
+    delta, preempt/migrate/escalation event and completion is recorded
+    AFTER it happened; a full restart (``train.fault.run_with_restarts``)
+    replays unfinished requests from their last journaled token through
+    the reingest resume path, bit-parity with the unfailed run.
+
 ``python -m repro.launch.serve --continuous`` drives this end to end.
 """
 from __future__ import annotations
@@ -98,6 +122,7 @@ import numpy as np
 
 from ..core.policy import EscalationPolicy
 from ..train.fault import (EngineStuckError, PoisonedLogitsError,
+                           ReplicaFaultPlan, ReplicaLostError,
                            ServeFaultPlan, ServeWatchdog, StragglerMonitor)
 
 
@@ -175,12 +200,16 @@ class _Resume:
     every subsequent sample reproduces the un-preempted run.
     ``checksums`` (swap path): per-layer CRC32 pairs computed at swap-out,
     verified before swap-in — a mismatch means the host payload was
-    silently corrupted, and the engine falls back to reingest."""
+    silently corrupted, and the engine falls back to reingest.
+    ``tag`` (swap path): the payload's pool provenance
+    (``models.paged.SwapBlobTag``) — checked against the receiving pool
+    before any cross-replica install."""
     emitted: List[int]
     blobs: Optional[list]
     written: int
     degraded: bool
     checksums: Optional[list] = None
+    tag: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -199,6 +228,24 @@ class _QEntry:
     esc_level: int = 0
     esc_pressure: tuple = (0, 0)
     esc_refused: bool = False
+
+
+def _finished_from_record(rec: dict) -> Finished:
+    """Rebuild a ``Finished`` from its journal ``finish`` record — the
+    restart path for a request that completed before the crash (its
+    tokens need no re-serving)."""
+    return Finished(
+        rid=rec["rid"], prompt_len=rec.get("prompt_len", 0),
+        tokens=list(rec["toks"]),
+        admit_round=rec.get("admit_round", 0),
+        finish_round=rec.get("finish_round", 0),
+        slot=rec.get("slot", -1),
+        preemptions=rec.get("preemptions", 0),
+        sheds=rec.get("sheds", 0),
+        degraded=bool(rec.get("degraded", False)),
+        deadline=rec.get("deadline"),
+        deadline_miss=bool(rec.get("deadline_miss", False)),
+        escalated=rec.get("escalated", 0))
 
 
 def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
@@ -221,11 +268,44 @@ def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
     {0,1,2}, deadlines on the priority-2 tier (tight enough to bind under
     faults), and every 11th request quality-sensitive (``no_degrade``).
     Driven with a constrained page pool + a ``ServeFaultPlan``, this is
-    the trace that must drain to completion with zero stuck requests."""
+    the trace that must drain to completion with zero stuck requests.
+
+    ``flavor="session"``: multi-turn chat — requests group into sessions
+    of up to three turns over a GROWING shared prefix: turn ``t``'s
+    prompt is turn ``t-1``'s prompt + its (simulated) answer + a fresh
+    user chunk, and turn ``t`` arrives only after turn ``t-1``'s budget
+    could have drained.  Worst-case prompt length is therefore
+    ``prompt_len + 2 * (gen // 4 + max(1, prompt_len // 4))`` — size
+    ``max_len`` accordingly.  This is the trace the HA soak migrates:
+    a session's later turns re-enter the queue carrying real shared
+    history, so a killed replica's in-flight turn must resume elsewhere
+    mid-conversation."""
     rng = np.random.RandomState(seed)
     fr_len = (0.25, 0.5, 0.75, 1.0)
     shorts = (gen // 16, gen // 8, gen // 4)
     reqs = []
+    if flavor == "session":
+        step_gap = max(2, gen // 8)
+        rid = s = 0
+        while rid < n_req:
+            base_len = max(1, int(prompt_len * fr_len[s % 4]))
+            hist = rng.randint(0, vocab, size=base_len).tolist()
+            arrival = (s // max(1, slots)) * step_gap
+            for t in range(min(3, n_req - rid)):
+                budget = max(2, shorts[(s + t) % 3])
+                reqs.append(Request(
+                    rid=rid, tokens=list(hist), max_new=budget,
+                    arrival=arrival, priority=(1 if t == 2 else 0),
+                    no_degrade=(s % 5 == 3)))
+                rid += 1
+                # the turn's simulated answer + the next user message
+                # extend the shared prefix the following turn re-sends
+                hist += rng.randint(0, vocab, size=budget).tolist()
+                hist += rng.randint(0, vocab,
+                                    size=max(1, prompt_len // 4)).tolist()
+                arrival += budget + step_gap
+            s += 1
+        return reqs
     if flavor == "soak":
         for i in range(n_req):
             plen = (prompt_len if i % 5 == 0
@@ -241,7 +321,7 @@ def synthetic_trace(n_req: int, slots: int, prompt_len: int, gen: int,
                 deadline=deadline, no_degrade=(i % 11 == 7)))
         return reqs
     if flavor != "chat":
-        raise ValueError(f"flavor must be chat|soak, got {flavor!r}")
+        raise ValueError(f"flavor must be chat|soak|session, got {flavor!r}")
     for i in range(n_req):
         is_long = (i % 8 == 0) and i < (3 * n_req) // 4
         budget = gen if is_long else max(2, shorts[i % 3])
@@ -295,7 +375,10 @@ class ContinuousEngine:
                  escalate: Optional[EscalationPolicy] = None,
                  spec_k: int = 0,
                  draft_repeats: Optional[int] = None,
-                 draft_policy=None):
+                 draft_policy=None,
+                 replica_id: int = 0,
+                 replica_fault: Optional[ReplicaFaultPlan] = None,
+                 journal=None):
         import functools
 
         import jax
@@ -344,6 +427,15 @@ class ContinuousEngine:
         self.min_resident = max(0, min_resident)
         self.fault_plan = fault_plan
         self.watchdog_patience = watchdog_patience
+        # replica-level fault tolerance: identity in the fleet, the kill
+        # plan consulted at every burst dispatch, the shared request
+        # journal, and the pool-provenance fields swap blobs are tagged
+        # with (models.paged.SwapBlobTag)
+        self.replica_id = int(replica_id)
+        self.replica_fault = replica_fault
+        self.journal = journal
+        from ..models.attention import kv_store_dtype
+        self._pool_dtype = np.dtype(kv_store_dtype(model.policy))
         self.escalate = escalate
         self._esc_fmts = None
         if escalate is not None:
@@ -441,6 +533,15 @@ class ContinuousEngine:
         self._pending: List[_QEntry] = []
         self._held: List[int] = []      # fault-plan page grab
         self._release_at: Optional[int] = None
+        # run state (armed by start(), advanced by step(), closed by
+        # finalize() — attributes, not locals, so a fleet host can
+        # interleave replicas one step at a time)
+        self._results: Dict[int, Finished] = {}
+        self._requests: List[Request] = []
+        self._counters: Dict[str, int] = {}
+        self._round_no = self._decode_rounds = 0
+        self._occ_accum = self._bursts = 0
+        self._key = None
         self.reset_monitors()
 
         use_pen = self._use_pen
@@ -760,9 +861,13 @@ class ContinuousEngine:
                 counters["sdc_injected"] += 1
                 self.fault_plan.note("sdc_inject", round=round_no,
                                      rid=req.rid, slot=b)
+            from ..models.paged import SwapBlobTag
             e.resume = _Resume(emitted=list(self._emitted[b]), blobs=blobs,
                                written=written, degraded=degrade,
-                               checksums=sums)
+                               checksums=sums,
+                               tag=SwapBlobTag(replica=self.replica_id,
+                                               dtype=str(self._pool_dtype),
+                                               page=self.page))
             if degrade:
                 e.degraded = True
                 counters["degraded"] += 1
@@ -775,12 +880,15 @@ class ContinuousEngine:
         else:
             e.resume = None         # mid-prefill: restart from the prompt
             counters["preempt_restart"] += 1
+        mode = ("swap" if e.resume is not None
+                and e.resume.blobs is not None else "reingest")
         if self.fault_plan is not None:
             self.fault_plan.note("preempt", round=round_no, rid=req.rid,
-                                 slot=b, reason=reason,
-                                 mode=("swap" if e.resume is not None
-                                       and e.resume.blobs is not None
-                                       else "reingest"))
+                                 slot=b, reason=reason, mode=mode)
+        if self.journal is not None:
+            self.journal.append("preempt", rid=req.rid,
+                                replica=self.replica_id, round=round_no,
+                                reason=reason, mode=mode)
         self.alloc.free(self._owned[b])
         self._owned[b] = []
         self._table[b, :] = self.scratch
@@ -826,6 +934,11 @@ class ContinuousEngine:
         self.kv_levels[b] = e.esc_level
         self.flag_pressure[b] = np.asarray(e.esc_pressure, np.int64)
         rs, e.resume = e.resume, None
+        if rs is not None and rs.blobs is not None:
+            # provenance gate before any pool write: a payload whose tag
+            # mismatches this pool's (dtype, page) must never install
+            from ..models.paged import check_blob_tag
+            check_blob_tag(rs.tag, dtype=self._pool_dtype, page=self.page)
         if (rs is not None and rs.blobs is not None
                 and rs.checksums is not None
                 and _crc_blobs(rs.blobs) != rs.checksums):
@@ -856,6 +969,11 @@ class ContinuousEngine:
             self._resume_tok[b] = rs.emitted[-1]
             counters["resumed"] += 1
         self._prompt_hist(b)
+        if self.journal is not None:
+            self.journal.append("admit", rid=req.rid,
+                                replica=self.replica_id, round=round_no,
+                                slot=b, resumed=rs is not None,
+                                emitted=len(self._emitted[b]))
         return caches
 
     def _admission(self, round_no: int, caches, counters: dict):
@@ -921,7 +1039,7 @@ class ContinuousEngine:
         the robustness trail land on the Finished record here."""
         req = self._req[b]
         e = self._entry[b]
-        results[req.rid] = Finished(
+        fin = Finished(
             rid=req.rid, prompt_len=req.prompt_len,
             tokens=list(self._emitted[b]),
             admit_round=int(self._admit_round[b]), finish_round=round_no,
@@ -930,6 +1048,15 @@ class ContinuousEngine:
             deadline_miss=(req.deadline is not None
                            and round_no > req.deadline),
             escalated=int(self.kv_levels[b]))
+        results[req.rid] = fin
+        if self.journal is not None:
+            self.journal.append(
+                "finish", rid=req.rid, replica=self.replica_id,
+                prompt_len=fin.prompt_len, toks=fin.tokens,
+                admit_round=fin.admit_round, finish_round=fin.finish_round,
+                slot=fin.slot, preemptions=fin.preemptions, sheds=fin.sheds,
+                degraded=fin.degraded, deadline=fin.deadline,
+                deadline_miss=fin.deadline_miss, escalated=fin.escalated)
         self.alloc.free(self._owned[b])
         self._owned[b] = []
         self._table[b, :] = self.scratch
@@ -984,15 +1111,27 @@ class ContinuousEngine:
             if plan is not None:
                 plan.note("escalate", round=round_no, rid=rid, slot=b,
                           level=lvl + 1, of=of, uf=uf)
+            if self.journal is not None:
+                self.journal.append("escalate", rid=rid,
+                                    replica=self.replica_id, round=round_no,
+                                    level=lvl + 1)
         return caches
 
-    # -- the loop ---------------------------------------------------------
-    def run(self, requests: Sequence[Request]):
-        """Serve ``requests`` to completion.  Returns ``(finished, stats)``
-        with ``finished`` in input order and ``stats`` covering rounds,
-        mean batch occupancy, the page-pool high-water mark, and the
-        robustness counters (preempt/shed/degrade/deadline/fault)."""
-        jnp, jax = self._jnp, self._jax
+    # -- the serving state machine ----------------------------------------
+    #
+    # ``run`` = ``start`` + ``step`` until drained + ``finalize``.  The
+    # split exists for the fleet host: ``ReplicatedEngine`` interleaves
+    # replicas one ``step`` at a time, so a replica can die (or hang)
+    # mid-run while its survivors keep stepping — ``evacuate``/``adopt``
+    # then move the victim's in-flight requests over.
+    def start(self, requests: Sequence[Request]) -> None:
+        """Validate + enqueue ``requests`` and arm the run state.  With a
+        non-empty journal attached (a restart), unfinished requests
+        re-enter the queue seeded to resume from their last journaled
+        token — the free-and-reingest path, so the recovery run's tokens
+        are bit-identical to the run that never crashed — and finished
+        ones are answered straight from their ``finish`` records."""
+        jax = self._jax
         for r in requests:
             if r.prompt_len < 1 or r.max_new < 1:
                 raise ValueError(f"request {r.rid}: empty prompt or budget")
@@ -1010,303 +1149,451 @@ class ContinuousEngine:
                     f"request {r.rid} can never fit the pool: needs "
                     f"{worst} pages, pool has {self.n_pages - 1} "
                     f"(+1 scratch)")
-        order = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        self._pending = [_QEntry(req=r, not_before=r.arrival) for r in order]
-        results: Dict[int, Finished] = {}
+        self._requests = list(requests)
+        self._results = {}
         self.alloc.reset_peak()
         plan = self.fault_plan
         if plan is not None:
             plan.reset()
         self._held, self._release_at = [], None
         self.reset_monitors()
-        watchdog, monitor = self.watchdog, self.monitor
-        counters = {k: 0 for k in (
+        self._counters = {k: 0 for k in (
             "preemptions", "preempt_swap", "preempt_reingest",
             "preempt_restart", "resumed", "degraded", "swap_out_bytes",
             "shed_events", "poisoned_rounds", "nonfinite_prefill",
             "stragglers", "faults_exhaust", "faults_slow",
             "escalations", "esc_deferred", "esc_refused",
             "sdc_injected", "sdc_detected", "sdc_reingest",
-            "spec_rounds", "spec_emitted")}
-        key = jax.random.key(self.seed)
-        caches = self.caches
-        round_no = decode_rounds = occ_accum = bursts = 0
-
-        def diag():
-            return {"round": round_no,
-                    "pending": [(e.req.rid, e.not_before, e.sheds)
-                                for e in self._pending],
-                    "resident": [r.rid for r in self._req if r is not None],
-                    "pool": self.alloc.stats(),
-                    "held_pages": len(self._held),
-                    "counters": dict(counters)}
-
-        while self._pending or any(r is not None for r in self._req):
-            progress = 0
-
-            # -- fault plan: release expired holds, fire due injections ---
-            if self._held and round_no >= self._release_at:
-                self.alloc.free(self._held)
-                if plan is not None:
-                    plan.note("exhaust_release", round=round_no,
-                              pages=len(self._held))
-                self._held, self._release_at = [], None
-            if plan is not None and not self._held:
-                dur = plan.take_exhaustion(round_no)
-                if dur is not None:
-                    grab = self.alloc.n_free
-                    self._held = self.alloc.alloc(grab) if grab else []
-                    self._release_at = round_no + max(1, dur)
-                    counters["faults_exhaust"] += 1
-                    plan.note("exhaust", round=round_no, pages=grab,
-                              until=self._release_at)
-
-            # -- admission: place queue entries (preempt/degrade/shed) ----
-            admitted, caches = self._admission(round_no, caches, counters)
-            progress += admitted
-
-            # -- one prefill chunk per admitting slot, same-offset slots
-            #    batched into one call (the t=0 admission wave especially)
-            prefilling = [b for b in range(self.slots)
-                          if self._req[b] is not None and self.done[b]]
-            waves: Dict[int, List[int]] = {}
-            for b in prefilling:
-                waves.setdefault(int(self._prog[b]), []).append(b)
-            for off, rows in sorted(waves.items()):
-                m = len(rows)
-                buf = np.zeros((m, self.chunk), np.int32)
-                meta = np.zeros((3, m), np.int32)   # rows/chunk lens/levels
-                meta[0] = rows
-                for i, b in enumerate(rows):
-                    piece = self._ingest[b][off:off + self.chunk]
-                    buf[i, :len(piece)] = piece
-                    meta[1, i] = len(piece)
-                    meta[2, i] = self.kv_levels[b]
-                if self.temperature > 0.0:
-                    key, sk = jax.random.split(key)
-                else:
-                    sk = key
-                cnts = (jnp.asarray(self._cnt[rows]) if self._use_pen
-                        else None)
-                tok0, badp, caches, flp = self._chunk_fn(off, m)(
-                    self.params, caches, self._table_device(),
-                    jnp.asarray(buf), jnp.asarray(meta), cnts, sk)
-                tok0, badp = np.asarray(tok0), np.asarray(badp)
-                if self.escalate is not None:
-                    # prefill write flags feed the same per-slot pressure
-                    self.flag_pressure[rows] += np.asarray(flp, np.int64)
-                progress += 1
-                for i, b in enumerate(rows):
-                    req = self._req[b]
-                    self._prog[b] += int(meta[1, i])
-                    if int(self._prog[b]) != len(self._ingest[b]):
+            "spec_rounds", "spec_emitted",
+            "migrated_in", "journal_replayed")}
+        self._key = jax.random.key(self.seed)
+        self._round_no = self._decode_rounds = 0
+        self._occ_accum = self._bursts = 0
+        jr = self.journal
+        pend: List[_QEntry] = []
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            e = _QEntry(req=r, not_before=r.arrival)
+            if jr is not None and jr.records:
+                fr = jr.finish_record(r.rid)
+                if fr is not None:
+                    self._results[r.rid] = _finished_from_record(fr)
+                    continue
+                em = jr.emitted(r.rid)
+                if em:
+                    whole = (len(em) >= r.max_new
+                             or (self.stop_token is not None
+                                 and em[-1] == self.stop_token))
+                    if whole:
+                        # the crash fell between the final tokens record
+                        # and its finish record: the stream is complete,
+                        # only the completion fact is missing — recover
+                        # it instead of re-serving a finished request
+                        self._results[r.rid] = Finished(
+                            rid=r.rid, prompt_len=r.prompt_len,
+                            tokens=list(em), admit_round=0,
+                            finish_round=0, slot=-1)
+                        jr.append("finish", rid=r.rid,
+                                  replica=self.replica_id,
+                                  prompt_len=r.prompt_len, toks=list(em),
+                                  recovered=True)
                         continue
-                    if badp[i]:
-                        if plan is not None and plan.mask_poison:
-                            counters["nonfinite_prefill"] += 1
-                        else:
-                            raise PoisonedLogitsError(
-                                f"non-finite prefill logits for request "
-                                f"{req.rid} (slot {b}, round {round_no})")
-                    if self._resume_tok[b] is not None:
-                        # reingest resume: the re-fed tokens only rebuild
-                        # K/V; generation continues from the last emitted
-                        # token exactly where the un-preempted run was
-                        self.tok[b, 0] = self._resume_tok[b]
-                        self._resume_tok[b] = None
-                        self.pos[b] = self.lens[b] = len(self._ingest[b])
-                        self.limit[b] = req.prompt_len + req.max_new - 1
-                        self.done[b] = False
-                        continue
-                    t0 = int(tok0[i])
-                    self._emitted[b] = [t0]
-                    if self._use_pen:
-                        self._cnt[b, t0 % self._cnt.shape[1]] += 1
-                    hit_stop = (self.stop_token is not None
-                                and t0 == self.stop_token)
-                    if hit_stop or req.max_new == 1:
-                        self._finish(b, round_no, results)
-                        progress += 1
-                    else:
-                        self.tok[b, 0] = t0
-                        self.pos[b] = self.lens[b] = req.prompt_len
-                        self.limit[b] = req.prompt_len + req.max_new - 1
-                        self.done[b] = False
+                    e.resume = _Resume(emitted=list(em), blobs=None,
+                                       written=0, degraded=False)
+                    e.not_before = 0        # arrived before the crash
+                    self._counters["journal_replayed"] += 1
+                    jr.append("replay", rid=r.rid,
+                              replica=self.replica_id, from_tok=len(em))
+            pend.append(e)
+        self._pending = pend
 
-            # -- decode burst over every slot -----------------------------
-            active = [b for b in range(self.slots) if not self.done[b]]
-            still_prefilling = any(
-                self._req[b] is not None and self.done[b]
-                for b in range(self.slots))
-            n_max = 0
-            if active:
-                # admission wave: with a deep queue, let up to `admit_wave`
-                # finishes accumulate before handing control back — halves
-                # scheduler round-trips vs reacting to every single finish.
-                # n_max is then capped near the wave-th soonest budget
-                # finish so a lone early finisher never waits long.
-                wave = (min(self.admit_wave, len(self._pending))
-                        if self._pending else 0)
-                if still_prefilling:
-                    # interleave: chunk, a few decode rounds, chunk, ... —
-                    # ongoing streams advance while a long prompt prefills
-                    n_max = self.prefill_rounds
-                else:
-                    n_max = self.burst_cap
-                    if self._pending:
-                        till = (min(e.not_before for e in self._pending)
-                                - round_no)
-                        if till > 0:
-                            n_max = max(1, min(n_max, till))
-                        rem = sorted(int(self.limit[b]) - int(self.pos[b])
-                                     + 1 for b in active)
-                        k = min(wave, len(rem)) - 1
-                        n_max = max(1, min(n_max, rem[k] + 1))
-                # page pressure: a failed lazy alloc preempts a weaker
-                # resident; if none exists the row itself yields its slot
-                look = self.spec_k
-                for b in list(active):
-                    if b not in active:
-                        continue
-                    # each speculative round advances up to spec_k+1
-                    # tokens and its verify chunk writes spec_k slots
-                    # past the accepted frontier (dead until accepted)
-                    tgt = min(int(self.pos[b]) + n_max * (look + 1) - 1
-                              + look,
-                              int(self.limit[b]) - 1 + look)
-                    while not self._ensure_pages(b, tgt):
-                        vs = self._victims_for(
-                            self._eff_resident(b, round_no), round_no,
-                            exclude=(b,))
-                        if not vs:
-                            caches = self._preempt(b, round_no, caches,
-                                                   counters, reason="pages")
-                            active.remove(b)
-                            break
-                        caches = self._preempt(vs[0], round_no, caches,
-                                               counters, reason="pages")
-                        if vs[0] in active:
-                            active.remove(vs[0])
-            if active:
-                poison_rel = ovf_rel = -1
-                if plan is not None:
-                    p = plan.next_poison(round_no, round_no + int(n_max))
-                    if p is not None:
-                        poison_rel = p - round_no
-                    o = plan.next_overflow(round_no, round_no + int(n_max))
-                    if o is not None:
-                        ovf_rel = o - round_no
-                t_start = time.perf_counter()
-                if plan is not None:
-                    stall = plan.take_slow(round_no)
-                    if stall > 0.0:
-                        counters["faults_slow"] += 1
-                        plan.note("slow", round=round_no, seconds=stall)
-                        time.sleep(stall)
-                state = np.zeros((11 if self.spec_k else 10, self.slots),
-                                 np.int32)
-                state[0, :] = self.tok[:, 0]
-                state[1], state[2], state[3] = self.pos, self.lens, self.limit
-                state[4] = self.done
-                state[5, 0], state[6, 0] = n_max, wave
-                state[7, 0] = poison_rel
-                state[8] = self.kv_levels
-                state[9, 0] = ovf_rel
-                if self.spec_k:
-                    state[10] = self._spec_rows
-                cnts = jnp.asarray(self._cnt) if self._use_pen else None
-                res = self._burst(self.params, caches, self._table_device(),
-                                  jnp.asarray(state), cnts, key)
-                out, n, state_d, caches, key2, bad_d, fl_d = res[:7]
-                n = int(n)                    # blocks on the burst
-                new_state = np.array(state_d)
-                if self.spec_k:
-                    # packed layout: row b's accepted tokens fill
-                    # out[b, :lens-growth]; download up to the widest row
-                    sp = np.asarray(res[7])
-                    counters["spec_rounds"] += int(sp[0])
-                    counters["spec_emitted"] += int(sp[1])
-                    w = int(max(1, (new_state[2] - self.lens).max()))
-                    outs = np.asarray(out[:, :w])
-                else:
-                    outs = np.asarray(out[:, :n])  # only executed cols
-                bad = np.asarray(bad_d)
-                dt = time.perf_counter() - t_start
-                if monitor.record(bursts, dt):
-                    counters["stragglers"] += 1
-                if bad.sum():
+    def has_work(self) -> bool:
+        """Queued or resident requests remain (the run-loop condition)."""
+        return bool(self._pending
+                    or any(r is not None for r in self._req))
+
+    def _diag(self) -> dict:
+        return {"round": self._round_no,
+                "replica": self.replica_id,
+                "pending": [(e.req.rid, e.not_before, e.sheds)
+                            for e in self._pending],
+                "resident": [r.rid for r in self._req if r is not None],
+                "pool": self.alloc.stats(),
+                "held_pages": len(self._held),
+                "counters": dict(self._counters)}
+
+    # -- migration (the fleet host's dead-replica API) --------------------
+    def evacuate(self, *, readable: bool = True,
+                 mode: str = "swap") -> List[_QEntry]:
+        """Capture EVERY in-flight and queued request as portable queue
+        entries.  Residents leave through the normal preemption capture:
+        with the victim's device memory ``readable`` (a hang) and
+        ``mode="swap"`` their live K/V pages travel as tagged swap blobs
+        a survivor installs into its own pool; otherwise (a kill — pages
+        unreachable — or ``mode="reingest"``) the continuation is the
+        emitted-token list and the survivor recomputes K/V by
+        free-and-reingest.  Either way the migrated request's remaining
+        tokens are bit-identical to the unfailed run.  Queued entries
+        drain as-is (their backoff clocks re-base on the receiver)."""
+        force = (not readable) or mode != "swap"
+        for b in range(self.slots):
+            if self._req[b] is not None:
+                self.caches = self._preempt(
+                    b, self._round_no, self.caches, self._counters,
+                    reason="migrate", force_reingest=force)
+        out, self._pending = self._pending, []
+        return out
+
+    def adopt(self, entries: Sequence[_QEntry]) -> int:
+        """Enqueue another replica's evacuated entries into THIS engine.
+        Swap payloads are provenance-checked against the receiving pool
+        first (``models.paged.check_blob_tag``): a foreign blob —
+        dtype or page-size mismatch — raises ``ValueError`` instead of
+        silently reinterpreting page bytes.  Adopted entries become
+        admissible immediately on the receiver's round clock and then
+        compose with its priority/deadline/backpressure scheduling like
+        any preempted-and-requeued local request."""
+        from ..models.paged import check_blob_tag
+        n = 0
+        for e in entries:
+            if e.resume is not None and e.resume.blobs is not None:
+                check_blob_tag(e.resume.tag, dtype=self._pool_dtype,
+                               page=self.page)
+            e.not_before = self._round_no
+            self._pending.append(e)
+            self._counters["migrated_in"] += 1
+            if self.journal is not None:
+                self.journal.append(
+                    "migrate", rid=e.req.rid, to=self.replica_id,
+                    mode=("swap" if e.resume is not None
+                          and e.resume.blobs is not None else "reingest"),
+                    emitted=(len(e.resume.emitted)
+                             if e.resume is not None else 0))
+            n += 1
+        return n
+
+    def step(self) -> bool:
+        """ONE scheduler iteration: fault release -> admission -> prefill
+        chunks -> at most one decode burst -> finish/escalate accounting.
+        Returns ``has_work()`` — False once drained.  Raises
+        ``ReplicaLostError`` at the burst dispatch when this replica's
+        ``replica_fault`` kill is due (the simulated device loss)."""
+        if not self.has_work():
+            return False
+        jnp, jax = self._jnp, self._jax
+        plan = self.fault_plan
+        counters = self._counters
+        watchdog, monitor = self.watchdog, self.monitor
+        key = self._key
+        progress = 0
+
+        # -- fault plan: release expired holds, fire due injections -------
+        if self._held and self._round_no >= self._release_at:
+            self.alloc.free(self._held)
+            if plan is not None:
+                plan.note("exhaust_release", round=self._round_no,
+                          pages=len(self._held))
+            self._held, self._release_at = [], None
+        if plan is not None and not self._held:
+            dur = plan.take_exhaustion(self._round_no)
+            if dur is not None:
+                grab = self.alloc.n_free
+                self._held = self.alloc.alloc(grab) if grab else []
+                self._release_at = self._round_no + max(1, dur)
+                counters["faults_exhaust"] += 1
+                plan.note("exhaust", round=self._round_no, pages=grab,
+                          until=self._release_at)
+
+        # -- admission: place queue entries (preempt/degrade/shed) --------
+        admitted, self.caches = self._admission(
+            self._round_no, self.caches, counters)
+        progress += admitted
+
+        # -- one prefill chunk per admitting slot, same-offset slots
+        #    batched into one call (the t=0 admission wave especially)
+        prefilling = [b for b in range(self.slots)
+                      if self._req[b] is not None and self.done[b]]
+        waves: Dict[int, List[int]] = {}
+        for b in prefilling:
+            waves.setdefault(int(self._prog[b]), []).append(b)
+        for off, rows in sorted(waves.items()):
+            m = len(rows)
+            buf = np.zeros((m, self.chunk), np.int32)
+            meta = np.zeros((3, m), np.int32)   # rows/chunk lens/levels
+            meta[0] = rows
+            for i, b in enumerate(rows):
+                piece = self._ingest[b][off:off + self.chunk]
+                buf[i, :len(piece)] = piece
+                meta[1, i] = len(piece)
+                meta[2, i] = self.kv_levels[b]
+            if self.temperature > 0.0:
+                key, sk = jax.random.split(key)
+                self._key = key
+            else:
+                sk = key
+            cnts = (jnp.asarray(self._cnt[rows]) if self._use_pen
+                    else None)
+            tok0, badp, self.caches, flp = self._chunk_fn(off, m)(
+                self.params, self.caches, self._table_device(),
+                jnp.asarray(buf), jnp.asarray(meta), cnts, sk)
+            tok0, badp = np.asarray(tok0), np.asarray(badp)
+            if self.escalate is not None:
+                # prefill write flags feed the same per-slot pressure
+                self.flag_pressure[rows] += np.asarray(flp, np.int64)
+            progress += 1
+            for i, b in enumerate(rows):
+                req = self._req[b]
+                self._prog[b] += int(meta[1, i])
+                if int(self._prog[b]) != len(self._ingest[b]):
+                    continue
+                if badp[i]:
                     if plan is not None and plan.mask_poison:
-                        counters["poisoned_rounds"] += int(bad.max())
-                        plan.note("poison", round=round_no,
-                                  rows=np.nonzero(bad)[0].tolist())
+                        counters["nonfinite_prefill"] += 1
                     else:
                         raise PoisonedLogitsError(
-                            f"non-finite decode logits at round {round_no} "
-                            f"(rows {np.nonzero(bad)[0].tolist()}); no "
-                            f"masking fault harness is active")
-                self.tok = new_state[0][:, None].copy()
-                self.pos = new_state[1]
-                if self.temperature > 0.0:
-                    key = key2
-                total_ran = 0
-                for b in active:
-                    # rounds this row actually ran = its live-length growth
-                    ran = int(new_state[2][b]) - int(self.lens[b])
-                    emitted = [int(t) for t in outs[b, :ran]]
-                    self._emitted[b].extend(emitted)
-                    if self._use_pen and emitted:
-                        v = self._cnt.shape[1]
-                        np.add.at(self._cnt[b],
-                                  np.asarray(emitted, np.int64) % v, 1)
-                    occ_accum += ran
-                    total_ran += ran
-                if n > 0 and total_ran == 0:
-                    raise EngineStuckError(
-                        f"decode burst executed {n} rounds without "
-                        f"advancing any of {len(active)} live rows", diag())
-                if self.escalate is not None:
-                    self.flag_pressure += np.asarray(fl_d, np.int64)
-                    if plan is not None and 0 <= ovf_rel < n:
-                        counters["faults_overflow"] = counters.get(
-                            "faults_overflow", 0) + 1
-                        plan.note("overflow", round=round_no + ovf_rel,
-                                  scale=plan.overflow_scale)
-                self.lens = new_state[2]
-                self.done = new_state[3].astype(bool)
-                round_no += n
-                decode_rounds += n
-                bursts += 1
-                progress += n
-                for b in active:
-                    if self.done[b]:
-                        self._finish(b, round_no, results)
-                        progress += 1
-                if self.escalate is not None:
-                    caches = self._maybe_escalate(active, round_no, caches,
-                                                  counters)
-            elif still_prefilling:
-                round_no += 1       # prefill-only round (no decoders yet)
-            elif self._pending:
-                # idle: jump to the next event — an arrival, a backoff
-                # window expiring, or an injected exhaustion releasing
-                nxt = [e.not_before for e in self._pending]
-                if self._held:
-                    nxt.append(self._release_at)
-                round_no = max(round_no + 1, min(nxt))
-            watchdog.tick(progress > 0, diag)
+                            f"non-finite prefill logits for request "
+                            f"{req.rid} (slot {b}, round "
+                            f"{self._round_no})")
+                if self._resume_tok[b] is not None:
+                    # reingest resume: the re-fed tokens only rebuild
+                    # K/V; generation continues from the last emitted
+                    # token exactly where the un-preempted run was
+                    self.tok[b, 0] = self._resume_tok[b]
+                    self._resume_tok[b] = None
+                    self.pos[b] = self.lens[b] = len(self._ingest[b])
+                    self.limit[b] = req.prompt_len + req.max_new - 1
+                    self.done[b] = False
+                    continue
+                t0 = int(tok0[i])
+                self._emitted[b] = [t0]
+                if self.journal is not None:
+                    self.journal.append("tokens", rid=req.rid,
+                                        replica=self.replica_id,
+                                        toks=[t0])
+                if self._use_pen:
+                    self._cnt[b, t0 % self._cnt.shape[1]] += 1
+                hit_stop = (self.stop_token is not None
+                            and t0 == self.stop_token)
+                if hit_stop or req.max_new == 1:
+                    self._finish(b, self._round_no, self._results)
+                    progress += 1
+                else:
+                    self.tok[b, 0] = t0
+                    self.pos[b] = self.lens[b] = req.prompt_len
+                    self.limit[b] = req.prompt_len + req.max_new - 1
+                    self.done[b] = False
 
+        # -- decode burst over every slot ---------------------------------
+        active = [b for b in range(self.slots) if not self.done[b]]
+        still_prefilling = any(
+            self._req[b] is not None and self.done[b]
+            for b in range(self.slots))
+        n_max = 0
+        if active:
+            # admission wave: with a deep queue, let up to `admit_wave`
+            # finishes accumulate before handing control back — halves
+            # scheduler round-trips vs reacting to every single finish.
+            # n_max is then capped near the wave-th soonest budget
+            # finish so a lone early finisher never waits long.
+            wave = (min(self.admit_wave, len(self._pending))
+                    if self._pending else 0)
+            if still_prefilling:
+                # interleave: chunk, a few decode rounds, chunk, ... —
+                # ongoing streams advance while a long prompt prefills
+                n_max = self.prefill_rounds
+            else:
+                n_max = self.burst_cap
+                if self._pending:
+                    till = (min(e.not_before for e in self._pending)
+                            - self._round_no)
+                    if till > 0:
+                        n_max = max(1, min(n_max, till))
+                    rem = sorted(int(self.limit[b]) - int(self.pos[b])
+                                 + 1 for b in active)
+                    k = min(wave, len(rem)) - 1
+                    n_max = max(1, min(n_max, rem[k] + 1))
+            # page pressure: a failed lazy alloc preempts a weaker
+            # resident; if none exists the row itself yields its slot
+            look = self.spec_k
+            for b in list(active):
+                if b not in active:
+                    continue
+                # each speculative round advances up to spec_k+1
+                # tokens and its verify chunk writes spec_k slots
+                # past the accepted frontier (dead until accepted)
+                tgt = min(int(self.pos[b]) + n_max * (look + 1) - 1
+                          + look,
+                          int(self.limit[b]) - 1 + look)
+                while not self._ensure_pages(b, tgt):
+                    vs = self._victims_for(
+                        self._eff_resident(b, self._round_no),
+                        self._round_no, exclude=(b,))
+                    if not vs:
+                        self.caches = self._preempt(
+                            b, self._round_no, self.caches,
+                            counters, reason="pages")
+                        active.remove(b)
+                        break
+                    self.caches = self._preempt(
+                        vs[0], self._round_no, self.caches,
+                        counters, reason="pages")
+                    if vs[0] in active:
+                        active.remove(vs[0])
+        if active:
+            # the simulated device loss fires exactly here — after host
+            # scheduling, at the burst dispatch, the boundary where a
+            # real accelerator fault would surface
+            if (self.replica_fault is not None
+                    and self.replica_fault.take_kill(self.replica_id,
+                                                     self._bursts)):
+                raise ReplicaLostError(
+                    f"replica {self.replica_id} lost at burst "
+                    f"{self._bursts} (round {self._round_no}): "
+                    f"simulated device failure",
+                    replica=self.replica_id, burst=self._bursts)
+            poison_rel = ovf_rel = -1
+            if plan is not None:
+                p = plan.next_poison(self._round_no,
+                                     self._round_no + int(n_max))
+                if p is not None:
+                    poison_rel = p - self._round_no
+                o = plan.next_overflow(self._round_no,
+                                       self._round_no + int(n_max))
+                if o is not None:
+                    ovf_rel = o - self._round_no
+            t_start = time.perf_counter()
+            if plan is not None:
+                stall = plan.take_slow(self._round_no)
+                if stall > 0.0:
+                    counters["faults_slow"] += 1
+                    plan.note("slow", round=self._round_no,
+                              seconds=stall)
+                    time.sleep(stall)
+            state = np.zeros((11 if self.spec_k else 10, self.slots),
+                             np.int32)
+            state[0, :] = self.tok[:, 0]
+            state[1], state[2], state[3] = self.pos, self.lens, self.limit
+            state[4] = self.done
+            state[5, 0], state[6, 0] = n_max, wave
+            state[7, 0] = poison_rel
+            state[8] = self.kv_levels
+            state[9, 0] = ovf_rel
+            if self.spec_k:
+                state[10] = self._spec_rows
+            cnts = jnp.asarray(self._cnt) if self._use_pen else None
+            res = self._burst(self.params, self.caches,
+                              self._table_device(),
+                              jnp.asarray(state), cnts, key)
+            out, n, state_d, self.caches, key2, bad_d, fl_d = res[:7]
+            n = int(n)                    # blocks on the burst
+            new_state = np.array(state_d)
+            if self.spec_k:
+                # packed layout: row b's accepted tokens fill
+                # out[b, :lens-growth]; download up to the widest row
+                sp = np.asarray(res[7])
+                counters["spec_rounds"] += int(sp[0])
+                counters["spec_emitted"] += int(sp[1])
+                w = int(max(1, (new_state[2] - self.lens).max()))
+                outs = np.asarray(out[:, :w])
+            else:
+                outs = np.asarray(out[:, :n])  # only executed cols
+            bad = np.asarray(bad_d)
+            dt = time.perf_counter() - t_start
+            if monitor.record(self._bursts, dt):
+                counters["stragglers"] += 1
+            if bad.sum():
+                if plan is not None and plan.mask_poison:
+                    counters["poisoned_rounds"] += int(bad.max())
+                    plan.note("poison", round=self._round_no,
+                              rows=np.nonzero(bad)[0].tolist())
+                else:
+                    raise PoisonedLogitsError(
+                        f"non-finite decode logits at round "
+                        f"{self._round_no} (rows "
+                        f"{np.nonzero(bad)[0].tolist()}); no "
+                        f"masking fault harness is active")
+            self.tok = new_state[0][:, None].copy()
+            self.pos = new_state[1]
+            if self.temperature > 0.0:
+                key = key2
+                self._key = key
+            total_ran = 0
+            for b in active:
+                # rounds this row actually ran = its live-length growth
+                ran = int(new_state[2][b]) - int(self.lens[b])
+                emitted = [int(t) for t in outs[b, :ran]]
+                self._emitted[b].extend(emitted)
+                if self.journal is not None and emitted:
+                    # the per-burst delta is the crash-consistency
+                    # quantum: at most one burst of tokens is ever lost,
+                    # and greedy determinism regenerates it bit-exactly
+                    self.journal.append("tokens", rid=self._req[b].rid,
+                                        replica=self.replica_id,
+                                        toks=emitted)
+                if self._use_pen and emitted:
+                    v = self._cnt.shape[1]
+                    np.add.at(self._cnt[b],
+                              np.asarray(emitted, np.int64) % v, 1)
+                self._occ_accum += ran
+                total_ran += ran
+            if n > 0 and total_ran == 0:
+                raise EngineStuckError(
+                    f"decode burst executed {n} rounds without "
+                    f"advancing any of {len(active)} live rows",
+                    self._diag())
+            if self.escalate is not None:
+                self.flag_pressure += np.asarray(fl_d, np.int64)
+                if plan is not None and 0 <= ovf_rel < n:
+                    counters["faults_overflow"] = counters.get(
+                        "faults_overflow", 0) + 1
+                    plan.note("overflow",
+                              round=self._round_no + ovf_rel,
+                              scale=plan.overflow_scale)
+            self.lens = new_state[2]
+            self.done = new_state[3].astype(bool)
+            self._round_no += n
+            self._decode_rounds += n
+            self._bursts += 1
+            progress += n
+            for b in active:
+                if self.done[b]:
+                    self._finish(b, self._round_no, self._results)
+                    progress += 1
+            if self.escalate is not None:
+                self.caches = self._maybe_escalate(
+                    active, self._round_no, self.caches, counters)
+        elif still_prefilling:
+            self._round_no += 1    # prefill-only round (no decoders yet)
+        elif self._pending:
+            # idle: jump to the next event — an arrival, a backoff
+            # window expiring, or an injected exhaustion releasing
+            nxt = [e.not_before for e in self._pending]
+            if self._held:
+                nxt.append(self._release_at)
+            self._round_no = max(self._round_no + 1, min(nxt))
+        watchdog.tick(progress > 0, self._diag)
+        return self.has_work()
+
+    def finalize(self):
+        """Close out a drained (or abandoned) run: release fault-plan
+        holds and assemble the stats dict (``self.caches`` is already
+        current — it IS the donated burst carry, kept live step to step
+        so a crashed run's restart never touches a donated buffer).
+        Returns ``(results_by_rid, stats)`` — ``run`` orders the results
+        itself; the fleet host merges the dicts across replicas instead
+        (a victim's pre-death completions still count)."""
         if self._held:              # plan outlived the queue: tidy up
             self.alloc.free(self._held)
             self._held, self._release_at = [], None
-        self.caches = caches
-        dl = [f for f in results.values() if f.deadline is not None]
+        counters = self._counters
+        dl = [f for f in self._results.values() if f.deadline is not None]
         misses = sum(1 for f in dl if f.deadline_miss)
         stats = {
-            "rounds": round_no,
-            "decode_rounds": decode_rounds,
-            "bursts": bursts,
-            "occupancy": (occ_accum / (self.slots * decode_rounds)
-                          if decode_rounds else 0.0),
+            "rounds": self._round_no,
+            "decode_rounds": self._decode_rounds,
+            "bursts": self._bursts,
+            "occupancy": (self._occ_accum
+                          / (self.slots * self._decode_rounds)
+                          if self._decode_rounds else 0.0),
             # request-KV pages only: the engine's always-live scratch page
             # (dead-write sink) is bookkeeping, not cache content
             "peak_live_pages": self.alloc.peak_live - 1,
@@ -1316,7 +1603,7 @@ class ContinuousEngine:
             "deadline_total": len(dl),
             "deadline_misses": misses,
             "deadline_miss_rate": (misses / len(dl)) if dl else 0.0,
-            "straggler_ewma_s": monitor.ewma,
+            "straggler_ewma_s": self.monitor.ewma,
             **counters,
         }
         if self.spec_k:
@@ -1328,11 +1615,24 @@ class ContinuousEngine:
             stats["spec_accept_rate"] = (
                 counters["spec_emitted"] / (lr * (self.spec_k + 1))
                 if lr else 0.0)
-        return [results[r.rid] for r in requests], stats
+        return dict(self._results), stats
+
+    def run(self, requests: Sequence[Request]):
+        """Serve ``requests`` to completion.  Returns ``(finished, stats)``
+        with ``finished`` in input order and ``stats`` covering rounds,
+        mean batch occupancy, the page-pool high-water mark, and the
+        robustness counters (preempt/shed/degrade/deadline/fault)."""
+        self.start(requests)
+        while self.step():
+            pass
+        res, stats = self.finalize()
+        return [res[r.rid] for r in requests], stats
 
 
 class ReplicatedEngine:
-    """Data-parallel engine replicas over a ``(data, model)`` serving mesh.
+    """Data-parallel engine replicas over a ``(data, model)`` serving mesh
+    — or, with ``mesh=None, replicas=N``, a meshless fleet of ``N``
+    unsharded replicas (the HA test topology).
 
     Each ``data`` row of the mesh becomes ONE ``ContinuousEngine`` running
     tensor-parallel attention over its own ``("model",)`` sub-mesh
@@ -1348,21 +1648,72 @@ class ReplicatedEngine:
     and the pool story is ``models.paged.aggregate_stats`` over the
     per-replica allocators (disjoint pools: totals are plain sums).
 
-    The host loop drives replicas sequentially — each replica owns its
-    devices outright, so on real hardware the per-replica ``run`` loops
-    are embarrassingly parallel; serializing them here changes wall-clock
-    on a simulated mesh, never tokens or accounting."""
+    The host loop INTERLEAVES replicas one scheduler step at a time
+    (each replica owns its devices outright, so on real hardware the
+    per-replica loops are embarrassingly parallel; time-slicing them
+    here changes wall-clock on a simulated mesh, never tokens or
+    accounting) — and that is what makes replica loss survivable
+    mid-run:
 
-    def __init__(self, model, params, *, mesh, **kw):
+      * every completed step is a HEARTBEAT; a ``ReplicaFaultPlan`` hang
+        makes the victim stop stepping, and after ``hang_patience``
+        consecutive missed beats the host declares it dead with device
+        memory still readable — its residents evacuate as tagged swap
+        blobs (``migrate="swap"``) or emitted-token reingest state;
+      * a kill raises ``ReplicaLostError`` through the victim's burst
+        dispatch — device memory is GONE, so evacuation always falls
+        back to free-and-reingest (host-side emitted tokens survive);
+      * evacuated entries are ``adopt``ed round-robin by the surviving
+        replicas and finish there with token bits identical to the
+        unfailed run; if NO replica survives, the loss re-raises for
+        ``train.fault.run_with_restarts`` + the request journal.
+    """
+
+    def __init__(self, model, params, *, mesh=None, replicas=None,
+                 migrate: str = "swap", hang_patience: int = 3, **kw):
         from .mesh import replica_meshes
-        subs = replica_meshes(mesh)
+        if migrate not in ("swap", "reingest"):
+            raise ValueError(f"migrate must be swap|reingest, "
+                             f"got {migrate!r}")
+        subs = replica_meshes(mesh, replicas)
         self.mesh = mesh
-        self.engines = [ContinuousEngine(model, params, mesh=m, **kw)
-                        for m in subs]
+        self.migrate = migrate
+        self.hang_patience = max(1, hang_patience)
+        self.replica_fault = kw.pop("replica_fault", None)
+        self.journal = kw.pop("journal", None)
+        self.engines = [ContinuousEngine(model, params, mesh=m,
+                                         replica_id=i,
+                                         replica_fault=self.replica_fault,
+                                         journal=self.journal, **kw)
+                        for i, m in enumerate(subs)]
+        self._bound: Optional[List[Request]] = None
+        self.heartbeats = [{"beats": 0, "missed": 0, "status": "live"}
+                           for _ in self.engines]
+        self._ha = {k: 0 for k in (
+            "ha_kills", "ha_hangs", "ha_migrations",
+            "ha_migrated_swap", "ha_migrated_reingest")}
 
     @property
     def allocators(self):
         return [e.alloc for e in self.engines]
+
+    def reset_monitors(self) -> None:
+        """The ``run_with_restarts`` contract, fanned out: every
+        replica's watchdog + straggler monitor is rebuilt, and the
+        fleet's heartbeat view starts fresh (a restarted fleet has no
+        dead replicas — the fault plan decides whether one re-dies)."""
+        for e in self.engines:
+            e.reset_monitors()
+        self.heartbeats = [{"beats": 0, "missed": 0, "status": "live"}
+                           for _ in self.engines]
+        self._ha = {k: 0 for k in self._ha}
+
+    def bind(self, requests: Sequence[Request]) -> "ReplicatedEngine":
+        """Stash a queue so ``run()`` needs no arguments — the shape
+        ``run_with_restarts`` drives (its runner contract is a no-arg
+        ``run``).  Returns self for factory one-liners."""
+        self._bound = list(requests)
+        return self
 
     def partition(self, requests: Sequence[Request]) -> List[List[Request]]:
         """Round-robin split in ``(arrival, rid)`` order — deterministic,
@@ -1374,19 +1725,102 @@ class ReplicatedEngine:
             parts[i % len(parts)].append(r)
         return parts
 
-    def run(self, requests: Sequence[Request]):
-        """Serve ``requests`` across all replicas.  Returns
+    # -- failure handling -------------------------------------------------
+    def _survivors(self) -> List[int]:
+        return [i for i, h in enumerate(self.heartbeats)
+                if h["status"] == "live"]
+
+    def _lose_replica(self, i: int, *, readable: bool, burst: int,
+                      why: str) -> None:
+        """Declare replica ``i`` dead and migrate its in-flight work.
+        ``readable`` says whether the victim's device memory can still be
+        swapped out (hang) or is gone (kill — evacuation re-ingests).
+        Without survivors the loss re-raises for the restart supervisor;
+        the journal then carries every already-emitted token."""
+        self.heartbeats[i]["status"] = "dead"
+        eng = self.engines[i]
+        entries = eng.evacuate(readable=readable, mode=self.migrate)
+        if self.journal is not None:
+            self.journal.append("replica_lost", replica=i, why=why,
+                               burst=burst, evacuated=len(entries))
+        alive = self._survivors()
+        if not alive:
+            raise ReplicaLostError(
+                f"replica {i} {why} at burst {burst} and no replica "
+                f"survives to adopt its {len(entries)} requests — "
+                f"restart and replay the journal",
+                replica=i, burst=burst)
+        for j, e in enumerate(entries):
+            swap = e.resume is not None and e.resume.blobs is not None
+            self.engines[alive[j % len(alive)]].adopt([e])
+            self._ha["ha_migrations"] += 1
+            self._ha["ha_migrated_swap" if swap
+                     else "ha_migrated_reingest"] += 1
+
+    # -- the fleet loop ---------------------------------------------------
+    def run(self, requests: Optional[Sequence[Request]] = None):
+        """Serve ``requests`` (or the ``bind``-ed queue) across all
+        replicas, interleaved one step at a time.  Returns
         ``(finished, stats)`` with ``finished`` in input order;
-        ``stats["replicas"]`` keeps each replica's own record and
-        ``stats["pool"]`` the aggregated allocator view."""
+        ``stats["replicas"]`` keeps each replica's own record,
+        ``stats["pool"]`` the aggregated allocator view, and the
+        ``ha_*`` fields + ``stats["heartbeats"]`` the fleet's
+        fault-tolerance story."""
         from ..models.paged import aggregate_stats
+        if requests is None:
+            if self._bound is None:
+                raise ValueError("run() needs requests (or bind() first)")
+            requests = self._bound
+        self.heartbeats = [{"beats": 0, "missed": 0, "status": "live"}
+                           for _ in self.engines]
+        self._ha = {k: 0 for k in self._ha}
+        plan = self.replica_fault
         parts = self.partition(requests)
+        for eng, part in zip(self.engines, parts):
+            eng.start(part)
+        while True:
+            stepped = False
+            for i, eng in enumerate(self.engines):
+                hb = self.heartbeats[i]
+                if hb["status"] == "dead" or not eng.has_work():
+                    continue
+                if plan is not None and plan.hang_due(i, eng._bursts):
+                    # the victim stops responding: a missed beat per
+                    # fleet sweep, then declared dead — device memory
+                    # is still readable, so pages can migrate as blobs
+                    hb["missed"] += 1
+                    if hb["missed"] == 1:
+                        self._ha["ha_hangs"] += 1
+                    if hb["missed"] >= self.hang_patience:
+                        self._lose_replica(i, readable=True,
+                                           burst=eng._bursts, why="hung")
+                    stepped = True      # the fleet is still making calls
+                    continue
+                try:
+                    eng.step()
+                    hb["beats"] += 1
+                    stepped = True
+                except ReplicaLostError as err:
+                    self._ha["ha_kills"] += 1
+                    self._lose_replica(i, readable=False,
+                                       burst=err.burst, why="killed")
+                    stepped = True
+            work = [i for i in self._survivors()
+                    if self.engines[i].has_work()]
+            if not work:
+                break
+            if not stepped:     # defensive: nothing can advance
+                raise EngineStuckError(
+                    "replicated loop made no progress",
+                    {"heartbeats": self.heartbeats,
+                     "pending": [len(self.engines[i]._pending)
+                                 for i in work]})
         results: Dict[int, Finished] = {}
         per = []
-        for eng, part in zip(self.engines, parts):
-            fin, st = eng.run(part)
-            for f in fin:
-                results[f.rid] = f
+        for i, eng in enumerate(self.engines):
+            res, st = eng.finalize()
+            results.update(res)
+            st["replica_status"] = self.heartbeats[i]["status"]
             per.append(st)
         dr = sum(s["decode_rounds"] for s in per)
         stats = {
@@ -1403,6 +1837,8 @@ class ReplicatedEngine:
             "deadline_misses": sum(s["deadline_misses"] for s in per),
             "pool": aggregate_stats(self.allocators),
             "replicas": per,
+            "heartbeats": [dict(h) for h in self.heartbeats],
+            **self._ha,
         }
         dl = stats["deadline_total"]
         stats["deadline_miss_rate"] = (stats["deadline_misses"] / dl

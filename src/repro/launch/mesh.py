@@ -57,19 +57,34 @@ def make_serving_mesh(dp: int, tp: int):
     return _mk_mesh((dp, tp), ("data", "model"))
 
 
-def replica_meshes(mesh) -> list:
+def replica_meshes(mesh, n: int = None) -> list:
     """One single-axis ``("model",)`` sub-mesh per ``data`` row of a
     serving mesh — each data-parallel engine replica runs its
     tensor-parallel attention over its OWN row of devices, so replicas
-    never share a collective."""
+    never share a collective.
+
+    ``mesh=None`` with ``n`` set is the MESHLESS fleet: ``n`` unsharded
+    engine replicas time-slicing the default device (disjoint page pools,
+    no collectives — exactly the replica topology, minus the placement).
+    That is how the HA suite exercises replica loss and live-request
+    migration on a single-device CPU host."""
+    if mesh is None:
+        if n is None or n < 1:
+            raise ValueError("replica_meshes: mesh=None needs an explicit "
+                             f"replica count n >= 1, got {n!r}")
+        return [None] * n
     devs = np.asarray(mesh.devices)
     if mesh.axis_names == ("model",):
         return [mesh]
     if mesh.axis_names != ("data", "model"):
         raise ValueError(f"expected a (data, model) serving mesh, got "
                          f"axes {mesh.axis_names}")
-    return [jax.sharding.Mesh(devs[i], ("model",))
+    subs = [jax.sharding.Mesh(devs[i], ("model",))
             for i in range(devs.shape[0])]
+    if n is not None and n != len(subs):
+        raise ValueError(f"mesh data axis has {len(subs)} replicas but "
+                         f"replicas={n} was requested")
+    return subs
 
 
 def dp_axes_of(mesh) -> tuple:

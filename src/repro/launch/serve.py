@@ -77,6 +77,20 @@ detect each corruption and recover via re-ingest.  ``--burst-cap``
 bounds decode-burst length (escalation decisions happen between
 bursts, so shorter bursts react faster).
 
+Replica-level fault tolerance: ``--replicas N`` runs a meshless fleet
+of N engine replicas over disjoint page pools (``--mesh DP,TP`` is the
+placed equivalent), ``--fault-replica R:BURST[:MODE]`` kills (default)
+or hangs replica R at its BURST-th compiled burst, ``--migrate
+swap|reingest`` picks how a dead replica's in-flight requests move to a
+survivor (CRC-verified swap-blob continuations need ``--preempt swap``
+and a hang — a kill's device memory is gone, so migration always falls
+back to free-and-reingest from host-side emitted tokens), and
+``--journal PATH`` appends a crash-consistent JSON-line request journal
+that a full restart replays so every unfinished request resumes from
+its last journaled token with bit-identical results.  The replica HA
+counters (kills/hangs/migrations + per-replica heartbeats) print after
+the run.
+
 ``python -m repro.launch.serve --arch gemma2-9b --batch 4 --gen 32``
 ``python -m repro.launch.serve --arch gemma2-9b --ragged --stop-token 13``
 ``python -m repro.launch.serve --arch gemma2-9b --paged --page-size 16``
@@ -244,6 +258,31 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=N to "
                          "XLA_FLAGS before jax initializes — CPU bring-up "
                          "for --mesh; no effect on real accelerators)")
+    ap.add_argument("--replicas", type=int, default=None, metavar="N",
+                    help="meshless HA fleet: N unsharded engine replicas "
+                         "time-slicing the default device (disjoint page "
+                         "pools; the replica topology without --mesh "
+                         "placement — requires --continuous)")
+    ap.add_argument("--fault-replica", default=None, metavar="R:BURST[:MODE]",
+                    help="replica-level fault injection: replica R dies at "
+                         "its BURST-th compiled burst; MODE is kill "
+                         "(device memory gone, raised through dispatch — "
+                         "default) or hang (stops stepping, declared dead "
+                         "after missed heartbeats, memory still readable)")
+    ap.add_argument("--migrate", choices=("swap", "reingest"),
+                    default="swap",
+                    help="live-request migration mode when a replica is "
+                         "lost: adopt CRC-verified swap-blob continuations "
+                         "on a survivor (needs --preempt swap and readable "
+                         "victim memory) or free-and-reingest from emitted "
+                         "tokens (always available)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="append-only crash-consistent request journal "
+                         "(JSON lines): admissions, per-burst token "
+                         "deltas, preemptions, migrations, finishes — "
+                         "replayed on engine start so a full restart "
+                         "resumes every unfinished request from its last "
+                         "journaled token with bit-identical results")
     args = ap.parse_args(argv)
     if ((args.ragged or args.paged or args.stop_token is not None
          or args.continuous) and args.loop != "scan"):
@@ -280,6 +319,32 @@ def main(argv=None):
         if args.mesh is not None and args.loop != "scan":
             ap.error("--mesh requires --loop scan")
         mesh_dims = (dp, tp)
+    if args.replicas is not None:
+        if args.replicas < 1:
+            ap.error(f"--replicas must be >= 1, got {args.replicas}")
+        if not args.continuous:
+            ap.error("--replicas requires --continuous (replicas are "
+                     "engine instances over the request queue)")
+    fault_replica = None
+    if args.fault_replica is not None:
+        parts = args.fault_replica.split(":")
+        if len(parts) not in (2, 3):
+            ap.error("--fault-replica expects R:BURST[:MODE] "
+                     "(e.g. 0:3 or 1:5:hang)")
+        try:
+            fr, fb = int(parts[0]), int(parts[1])
+        except ValueError:
+            ap.error("--fault-replica R and BURST must be integers")
+        fmode = parts[2] if len(parts) == 3 else "kill"
+        if fmode not in ("kill", "hang"):
+            ap.error(f"--fault-replica MODE must be kill|hang, "
+                     f"got {fmode!r}")
+        if args.replicas is None and (mesh_dims is None
+                                      or mesh_dims[0] < 2):
+            ap.error("--fault-replica needs a replicated engine "
+                     "(--replicas N or --mesh with dp > 1) — a lone "
+                     "replica's loss has no survivor to migrate to")
+        fault_replica = (fr, fb, fmode)
     if args.devices is not None:
         # must land in the environment BEFORE jax initializes its backend
         import os
@@ -314,9 +379,10 @@ def main(argv=None):
     if args.continuous:
         import dataclasses as _dc
 
-        from ..train.fault import ServeFaultPlan
+        from ..train.fault import ReplicaFaultPlan, ServeFaultPlan
         from .engine import (ContinuousEngine, ReplicatedEngine, Request,
                              synthetic_trace)
+        from .journal import RequestJournal
         dl_rounds = (None if args.deadline_ms is None
                      else max(1, int(args.deadline_ms / args.round_ms)))
         if args.arrival_trace:
@@ -378,13 +444,33 @@ def main(argv=None):
                       presence_penalty=args.presence_penalty,
                       preempt=args.preempt, degrade_fmt=args.degrade_fmt,
                       shed=args.shed, fault_plan=plan, escalate=esc)
-        if dp > 1:
-            eng = ReplicatedEngine(model, params, mesh=mesh, **eng_kw)
+        rplan = None
+        if fault_replica is not None:
+            rplan = ReplicaFaultPlan(replica=fault_replica[0],
+                                     at_burst=fault_replica[1],
+                                     mode=fault_replica[2])
+        journal = (RequestJournal(args.journal)
+                   if args.journal is not None else None)
+        replicated = dp > 1 or (args.replicas or 0) > 1
+        if replicated:
+            eng = ReplicatedEngine(model, params, mesh=mesh,
+                                   replicas=args.replicas,
+                                   migrate=args.migrate,
+                                   replica_fault=rplan, journal=journal,
+                                   **eng_kw)
         else:
-            eng = ContinuousEngine(model, params, mesh=rmesh, **eng_kw)
-        fin, stats = eng.run(reqs)      # compile + warm
-        t0 = time.time()
-        fin, stats = eng.run(reqs)
+            eng = ContinuousEngine(model, params, mesh=rmesh,
+                                   journal=journal, **eng_kw)
+        if rplan is not None or journal is not None:
+            # single shot: the fault plan fires once per process and the
+            # journal must stay one run's crash-consistent story — no
+            # warm-up pass (compile time lands in the reported wall time)
+            t0 = time.time()
+            fin, stats = eng.run(reqs)
+        else:
+            fin, stats = eng.run(reqs)      # compile + warm
+            t0 = time.time()
+            fin, stats = eng.run(reqs)
         dt = time.time() - t0
         print(f"continuous engine: {args.slots} slots, page="
               f"{args.page_size}, chunk={args.chunk}, "
@@ -399,7 +485,9 @@ def main(argv=None):
                     if args.draft_fmt else "")
                  if args.speculate else "")
               + (f", mesh {mesh_dims[0]}x{mesh_dims[1]}"
-                 if mesh_dims else ""))
+                 if mesh_dims else "")
+              + (f", replicas={len(eng.engines)} migrate={args.migrate}"
+                 if replicated else ""))
         for f in fin:
             trail = ""
             if f.preemptions:
@@ -444,6 +532,18 @@ def main(argv=None):
                   f"{stats.get('sdc_injected', 0)} SDC injected / "
                   f"{stats.get('sdc_detected', 0)} detected / "
                   f"{stats.get('sdc_reingest', 0)} recovered by reingest")
+        if replicated:
+            print(f"replica HA: {stats['ha_kills']} kills, "
+                  f"{stats['ha_hangs']} hangs, {stats['ha_migrations']} "
+                  f"migrations ({stats['ha_migrated_swap']} swap-blob / "
+                  f"{stats['ha_migrated_reingest']} reingest); heartbeats "
+                  + ", ".join(f"r{i}:{h['beats']}b/{h['missed']}m "
+                              f"{h['status']}"
+                              for i, h in enumerate(stats["heartbeats"])))
+        if journal is not None:
+            journal.close()
+            print(f"journal {args.journal}: " + ", ".join(
+                f"{v}x {k}" for k, v in sorted(journal.counts().items())))
         if plan is not None and plan.events:
             kinds = {}
             for k, _ in plan.events:

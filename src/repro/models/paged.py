@@ -212,6 +212,42 @@ class PageAllocator:
         return released
 
 
+class SwapBlobTag(NamedTuple):
+    """Provenance tag on a swapped-out page payload: which replica's pool
+    it came from, the pool's container dtype, and the page size.  A blob
+    is plain host numpy — nothing in its bytes says what pool layout
+    produced it — so migration between replicas re-derives compatibility
+    from the tag instead of silently reinterpreting bytes: same dtype +
+    page size means the receiving pool can install the pages verbatim
+    (disjoint pools of one fleet always match); anything else is a
+    foreign blob and swap-in must refuse it."""
+    replica: int
+    dtype: str
+    page: int
+
+
+def check_blob_tag(tag: Optional[SwapBlobTag], *, dtype, page: int) -> None:
+    """Reject a swap-in whose payload tag mismatches the receiving pool.
+
+    ``tag=None`` (a pre-tagging payload, or an intra-engine resume that
+    never left its pool) is accepted — the tag exists to guard CROSS-pool
+    installs.  A replica-id mismatch alone is fine: migrating a payload
+    to a survivor replica is the point.  Dtype or page-size mismatch
+    raises ``ValueError`` — widening fp8 pages into an fp16 pool or
+    re-chunking 8-token pages as 16-token pages would silently corrupt
+    every migrated token."""
+    if tag is None:
+        return
+    want_dt, want_pg = str(np.dtype(dtype)), int(page)
+    got_dt, got_pg = str(np.dtype(tag.dtype)), int(tag.page)
+    if got_dt != want_dt or got_pg != want_pg:
+        raise ValueError(
+            f"foreign swap blob refused: payload from replica "
+            f"{tag.replica} is ({got_dt}, page={got_pg}) but the receiving "
+            f"pool is ({want_dt}, page={want_pg}) — migrating it would "
+            f"reinterpret page bytes; re-ingest the request instead")
+
+
 def aggregate_stats(allocators: Sequence[PageAllocator]) -> dict:
     """Fleet-level pool stats across per-replica allocators (data-parallel
     serving: each engine replica owns a DISJOINT pool, so the totals are
